@@ -1,0 +1,90 @@
+"""Shared benchmark substrate: corpus, encodings, indexes, timed search runs.
+
+CPU wall-times here are RELATIVE (this container is not the target hardware);
+the absolute performance story lives in the dry-run roofline
+(benchmarks/roofline.py + EXPERIMENTS.md). What IS faithful on CPU are the
+*work* metrics the paper's mechanisms act through: postings processed, blocks
+survived/skipped, effectiveness, index sizes, and latency *distributions*
+shapes (budget-bounded SAAT vs data-dependent DAAT).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_impact_index, exact_rho, pad_queries
+from repro.core.impact_index import ImpactIndex
+from repro.data.synthetic import CorpusConfig, generate_corpus
+from repro.metrics.ir_metrics import mrr_at_k
+from repro.models.treatments import MODEL_NAMES, apply_treatment
+
+BENCH_CORPUS = CorpusConfig(n_docs=6000, n_queries=160, n_concepts=400, seed=11)
+
+
+@functools.lru_cache(maxsize=1)
+def corpus():
+    return generate_corpus(BENCH_CORPUS)
+
+
+@functools.lru_cache(maxsize=None)
+def encoded(model: str):
+    return apply_treatment(corpus(), model)
+
+
+@functools.lru_cache(maxsize=None)
+def index_for(model: str) -> ImpactIndex:
+    enc = encoded(model)
+    return build_impact_index(enc.doc_idx, enc.term_idx, enc.weights, corpus().n_docs, enc.n_terms)
+
+
+@functools.lru_cache(maxsize=None)
+def queries_for(model: str):
+    enc = encoded(model)
+    max_q = max(len(t) for t in enc.query_terms)
+    qt, qw = pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)
+    return jnp.asarray(qt), jnp.asarray(qw)
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """(result, best_seconds) with jit warmup excluded."""
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def per_query_timings(fn, qt, qw, n: int = 40):
+    """Per-query latency samples (batch=1 serving, tail-latency benches)."""
+    fn(qt[:1], qw[:1])  # compile
+    times = []
+    for i in range(min(n, qt.shape[0])):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(qt[i : i + 1], qw[i : i + 1]))
+        times.append((time.perf_counter() - t0) * 1e3)
+    return np.asarray(times)
+
+
+def mrr(ids, k: int = 10) -> float:
+    return mrr_at_k(np.asarray(ids), corpus().qrels, k)
+
+
+def print_csv(title: str, rows: list[dict]):
+    print(f"# {title}")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))
+    print()

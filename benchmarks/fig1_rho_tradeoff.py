@@ -1,0 +1,54 @@
+"""Figure 1 analogue: per-model SAAT rho sweep (effectiveness vs speedup).
+
+Effectiveness is % of the rank-safe (exhaustive) RR@10; the work axis is both
+relative time and postings processed (hardware-independent).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import exact_rho, exhaustive_search, saat_search
+from repro.core.saat import max_segments_per_term
+from repro.models.treatments import MODEL_NAMES
+
+K = 100
+BATCH = 16
+RHO_FRACS = (0.01, 0.05, 0.1, 0.25, 0.5, 1.0)
+
+
+def run() -> list[dict]:
+    rows = []
+    for model in MODEL_NAMES:
+        idx = C.index_for(model)
+        qt, qw = C.queries_for(model)
+        ms = max_segments_per_term(idx)
+        ref = exhaustive_search(idx, qt, qw, k=K)
+        ref_mrr = C.mrr(ref.doc_ids)
+        _, ref_secs = C.timed(lambda q, w: exhaustive_search(idx, q, w, k=K), qt[:BATCH], qw[:BATCH])
+        for frac in RHO_FRACS:
+            rho = max(int(exact_rho(idx) * frac), 500)
+            fn = lambda q, w: saat_search(idx, q, w, k=K, rho=rho, max_segs_per_term=ms, scatter_impl="sort")
+            res, secs = C.timed(fn, qt[:BATCH], qw[:BATCH])
+            full = fn(qt, qw)
+            m = C.mrr(full.doc_ids)
+            rows.append(
+                {
+                    "model": model,
+                    "rho_frac": frac,
+                    "rho": rho,
+                    "rr@10": round(m, 4),
+                    "rr@10_pct_of_exact": round(100 * m / max(ref_mrr, 1e-9), 1),
+                    "speedup_vs_exhaustive": round(ref_secs / max(secs, 1e-9), 2),
+                    "postings_processed": int(np.asarray(full.postings_processed).mean()),
+                }
+            )
+    return rows
+
+
+def main():
+    C.print_csv("Fig 1: SAAT rho tradeoff per model", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Figure 3 analogue: global Pareto frontier over (model x system x rho)."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import exact_rho, exhaustive_search, saat_search
+from repro.core.pareto import OperatingPoint, frontier_table
+from repro.core.saat import max_segments_per_term
+from repro.models.treatments import MODEL_NAMES
+
+K = 100
+BATCH = 16
+RHO_FRACS = (0.05, 0.25, 1.0)
+
+
+def run() -> list[dict]:
+    points = []
+    for model in MODEL_NAMES:
+        idx = C.index_for(model)
+        qt, qw = C.queries_for(model)
+        ms = max_segments_per_term(idx)
+        _, ex_secs = C.timed(lambda q, w: exhaustive_search(idx, q, w, k=K), qt[:BATCH], qw[:BATCH])
+        ex_full = exhaustive_search(idx, qt, qw, k=K)
+        points.append(
+            OperatingPoint(
+                name=f"{model}/exhaustive", model=model, system="exhaustive",
+                effectiveness=C.mrr(ex_full.doc_ids), latency_ms=ex_secs / BATCH * 1e3,
+            )
+        )
+        for frac in RHO_FRACS:
+            rho = max(int(exact_rho(idx) * frac), 500)
+            fn = lambda q, w: saat_search(idx, q, w, k=K, rho=rho, max_segs_per_term=ms, scatter_impl="sort")
+            _, secs = C.timed(fn, qt[:BATCH], qw[:BATCH])
+            full = fn(qt, qw)
+            points.append(
+                OperatingPoint(
+                    name=f"{model}/saat-{frac}", model=model, system=f"saat-rho{frac}",
+                    effectiveness=C.mrr(full.doc_ids), latency_ms=secs / BATCH * 1e3,
+                )
+            )
+    return frontier_table(points)
+
+
+def main():
+    C.print_csv("Fig 3: Pareto frontier over model x system", run())
+
+
+if __name__ == "__main__":
+    main()

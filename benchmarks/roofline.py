@@ -1,0 +1,66 @@
+"""§Roofline table: aggregates results/dryrun/*.json into the per-cell report.
+
+Reads the dry-run artifacts (memory fit, analytic FLOPs/bytes, loop-aware
+collective census) and emits, per (arch x shape x mesh): the three roofline
+terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs utilization, and the
+projected step time.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def run(mesh: str = "single") -> list[dict]:
+    rows = []
+    for rec in load_cells(mesh):
+        base = {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"]}
+        if rec["status"] == "skipped":
+            rows.append({**base, "status": "skipped", "note": rec["skip_reason"][:60]})
+            continue
+        if rec["status"] != "ok":
+            rows.append({**base, "status": "ERROR", "note": rec.get("error", "")[:60]})
+            continue
+        r = rec["roofline"]
+        rows.append(
+            {
+                **base,
+                "status": "ok",
+                "mem_gib_per_chip": round(rec["memory"]["total_bytes"] / 2**30, 2),
+                "compute_s": f"{r['compute_s']:.3e}",
+                "memory_s": f"{r['memory_s']:.3e}",
+                "collective_s": f"{r['collective_s']:.3e}",
+                "bottleneck": r["bottleneck"].replace("_s", ""),
+                "step_lower_bound_s": f"{r['step_time_lower_bound_s']:.3e}",
+                "roofline_fraction": round(r["roofline_fraction"], 3),
+                "useful_flops_ratio": round(rec.get("useful_flops_ratio") or 0, 3),
+            }
+        )
+    return rows
+
+
+def main():
+    from benchmarks.common import print_csv
+
+    for mesh in ("single", "multi"):
+        rows = run(mesh)
+        if rows:
+            print_csv(f"Roofline table ({mesh}-pod)", rows)
+
+
+if __name__ == "__main__":
+    main()

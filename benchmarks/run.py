@@ -1,0 +1,47 @@
+"""Run every paper-table/figure benchmark + the roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_rho_tradeoff,
+        fig2_tail_latency,
+        fig3_pareto,
+        roofline,
+        side_blockmax_vs_exhaustive,
+        table1_models_systems,
+        table2_term_stats,
+    )
+
+    benches = [
+        ("table2_term_stats", table2_term_stats.main),
+        ("table1_models_systems", table1_models_systems.main),
+        ("fig1_rho_tradeoff", fig1_rho_tradeoff.main),
+        ("fig2_tail_latency", fig2_tail_latency.main),
+        ("fig3_pareto", fig3_pareto.main),
+        ("side_blockmax_vs_exhaustive", side_blockmax_vs_exhaustive.main),
+        ("roofline", roofline.main),
+    ]
+    t_all = time.time()
+    failures = 0
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"!! {name} FAILED: {type(e).__name__}: {e}\n", flush=True)
+        print(f"-- {name} took {time.time() - t0:.1f}s\n", flush=True)
+    print(f"== all benchmarks done in {time.time() - t_all:.1f}s, failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

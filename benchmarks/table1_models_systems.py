@@ -1,0 +1,74 @@
+"""Table 1 analogue: retrieval model x evaluation system -> quality/time/space.
+
+Systems (TPU-native translations, DESIGN.md §2):
+  exhaustive   rank-safe dense disjunction (the PISA-MaxScore role at k=1000
+               on wacky weights — the paper found pruning loses there)
+  daat-bmw     vectorized Block-Max pruning (the WAND/BMW role)
+  saat-exact   impact-ordered SAAT, rho = all postings (JASS exact)
+  saat-approx  anytime SAAT, rho = 10% of postings (JASS rho=1m role)
+Work metrics (postings, blocks scored) are hardware-independent; times are
+relative CPU µs/query at batch 16.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import blockmax_search, exact_rho, exhaustive_search, saat_search
+from repro.core.daat import max_blocks_per_term
+from repro.core.saat import max_segments_per_term
+from repro.models.treatments import MODEL_NAMES
+
+K = 100
+BATCH = 16
+
+
+def run() -> list[dict]:
+    rows = []
+    for model in MODEL_NAMES:
+        idx = C.index_for(model)
+        qt, qw = C.queries_for(model)
+        qt_b, qw_b = qt[:BATCH], qw[:BATCH]
+        ms = max_segments_per_term(idx)
+        mb = max_blocks_per_term(idx)
+        rho_exact = exact_rho(idx)
+        rho_approx = max(rho_exact // 10, 1000)
+
+        systems = {
+            "exhaustive": lambda q, w: exhaustive_search(idx, q, w, k=K),
+            "daat-bmw": lambda q, w: blockmax_search(
+                idx, q, w, k=K, est_blocks=8, block_budget=16, max_bm_per_term=mb, exact=True
+            ),
+            "saat-exact": lambda q, w: saat_search(
+                idx, q, w, k=K, rho=rho_exact, max_segs_per_term=ms, scatter_impl="sort"
+            ),
+            "saat-approx": lambda q, w: saat_search(
+                idx, q, w, k=K, rho=rho_approx, max_segs_per_term=ms, scatter_impl="sort"
+            ),
+        }
+        for sys_name, fn in systems.items():
+            res, secs = C.timed(fn, qt_b, qw_b)
+            full = fn(qt, qw)
+            row = {
+                "model": model,
+                "system": sys_name,
+                "rr@10": round(C.mrr(full.doc_ids), 4),
+                "us_per_query": round(secs / BATCH * 1e6, 1),
+                "index_mb": round(idx.posting_store_nbytes() / 1e6, 1),
+                "postings_total": idx.n_postings,
+            }
+            if sys_name.startswith("saat"):
+                row["postings_processed_mean"] = int(np.asarray(full.postings_processed).mean())
+            if sys_name == "daat-bmw":
+                row["blocks_scored_mean"] = int(np.asarray(full.blocks_scored).mean())
+                row["blocks_total"] = idx.n_blocks
+            rows.append(row)
+    return rows
+
+
+def main():
+    C.print_csv("Table 1: model x system -> quality/time/space", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Table 2 analogue: term statistics per retrieval-model treatment."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.wacky import term_statistics, weight_distribution_stats
+from repro.models.treatments import MODEL_NAMES, PROFILES
+
+
+def run() -> list[dict]:
+    rows = []
+    for model in MODEL_NAMES:
+        enc = C.encoded(model)
+        ts = term_statistics(
+            enc.doc_idx, enc.term_idx, enc.weights, C.corpus().n_docs,
+            enc.query_terms, enc.query_weights,
+        )
+        dist = weight_distribution_stats(enc.weights)
+        targets = PROFILES[model].table2_targets
+        rows.append(
+            {
+                "model": model,
+                "vocab": ts.vocab_size,
+                "doc_total_terms": round(ts.doc_total_terms, 1),
+                "doc_unique_terms": round(ts.doc_unique_terms, 1),
+                "q_total_terms": round(ts.query_total_terms, 1),
+                "q_unique_terms": round(ts.query_unique_terms, 1),
+                "weight_cv": round(dist["cv"], 3),
+                "weight_gini": round(dist["gini"], 3),
+                "paper_doc_unique": targets.get("doc_unique"),
+                "paper_q_unique": targets.get("q_unique"),
+            }
+        )
+    return rows
+
+
+def main():
+    C.print_csv("Table 2: term statistics per treatment", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: corpus -> treatment -> impact index -> SAAT/DAAT/exhaustive.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    blockmax_search,
+    build_impact_index,
+    exact_rho,
+    exhaustive_search,
+    pad_queries,
+    saat_search,
+)
+from repro.core.daat import max_blocks_per_term
+from repro.core.saat import max_segments_per_term
+from repro.data.synthetic import CorpusConfig, generate_corpus
+from repro.metrics.ir_metrics import mrr_at_k
+from repro.models.treatments import apply_treatment
+
+
+def main():
+    print("1. generating a vocabulary-mismatch corpus (2k docs) ...")
+    corpus = generate_corpus(CorpusConfig(n_docs=2000, n_queries=100))
+
+    print("2. encoding under two treatments: bm25 (skewed) vs spladev2 (wacky) ...")
+    for model in ("bm25", "spladev2"):
+        enc = apply_treatment(corpus, model)
+        index = build_impact_index(
+            enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs, enc.n_terms
+        )
+        max_q = max(len(t) for t in enc.query_terms)
+        qt, qw = pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)
+        qt, qw = jnp.asarray(qt), jnp.asarray(qw)
+
+        ex = exhaustive_search(index, qt, qw, k=10)
+        sa = saat_search(
+            index, qt, qw, k=10, rho=max(exact_rho(index) // 10, 500),
+            max_segs_per_term=max_segments_per_term(index),
+        )
+        da = blockmax_search(
+            index, qt, qw, k=10, est_blocks=4, block_budget=8,
+            max_bm_per_term=max_blocks_per_term(index),
+        )
+        print(
+            f"   {model:>9}: postings={index.n_postings:>8} "
+            f"RR@10 exhaustive={mrr_at_k(np.asarray(ex.doc_ids), corpus.qrels):.3f} "
+            f"saat(rho=10%)={mrr_at_k(np.asarray(sa.doc_ids), corpus.qrels):.3f} "
+            f"daat={mrr_at_k(np.asarray(da.doc_ids), corpus.qrels):.3f} "
+            f"daat-blocks-scored={int(np.asarray(da.blocks_scored).mean())}/{index.n_blocks}"
+        )
+    print("done. note how spladev2 scores more blocks (skipping collapses) "
+          "while saat keeps a fixed budget.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""repro: learned-sparse retrieval framework (Wacky Weights / SAAT-vs-DAAT).
+
+A production-oriented JAX reimplementation + TPU adaptation of
+
+    Mackenzie, Trotman, Lin. "Wacky Weights in Learned Sparse Representations
+    and the Revenge of Score-at-a-Time Query Evaluation" (2021).
+
+Layers:
+    repro.core         impact-quantized indexes, SAAT/DAAT/exhaustive top-k
+    repro.kernels      Pallas TPU kernels for the scoring hot loops
+    repro.models       BM25 / expansion / learned sparse encoders
+    repro.archs        assigned architectures (LM / GNN / RecSys)
+    repro.data         synthetic vocabulary-mismatch corpus + pipelines
+    repro.train        optimizers, losses, trainer
+    repro.distributed  sharding rules, collectives, elastic utilities
+    repro.checkpoint   sharded fault-tolerant checkpointing
+    repro.serving      batched anytime serving with deadline -> rho control
+    repro.launch       production mesh, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

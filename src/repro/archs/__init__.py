@@ -1,0 +1,6 @@
+"""Assigned architectures: LM transformers (dense/MoE/GQA/local-global),
+GraphCast-style GNN, and four recsys models — all as selectable configs.
+
+The arch registry lives in ``repro.configs`` (one file per assigned arch);
+this package holds the model code itself.
+"""

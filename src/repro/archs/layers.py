@@ -1,0 +1,358 @@
+"""Shared neural building blocks (pure functions over param pytrees).
+
+No flax/haiku on purpose: params are nested dicts of jnp arrays, every layer
+is a pure function, and sharding is applied by the caller via GSPMD
+annotations (repro.distributed.sharding). Initializers take explicit PRNG
+keys so model construction is deterministic and mesh-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_params(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_params(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [..., seq, n_heads, d_head]; positions: broadcastable to [..., seq]."""
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)  # [d/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, d/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., seq, 1, d/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA / MQA / sliding-window, prefill & decode)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def attn_params(key, d_model: int, dims: AttnDims, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, dims.n_heads * dims.d_head, dtype),
+        "wk": dense_init(kk, d_model, dims.n_kv_heads * dims.d_head, dtype),
+        "wv": dense_init(kv, d_model, dims.n_kv_heads * dims.d_head, dtype),
+        "wo": dense_init(ko, dims.n_heads * dims.d_head, d_model, dtype),
+    }
+
+
+def _causal_window_mask(
+    q_pos: jax.Array, k_pos: jax.Array, window: jax.Array | int
+) -> jax.Array:
+    """bool[..., q, k]: causality/window mask.
+
+    ``window`` semantics: 0 = global causal; W>0 = causal sliding window W;
+    -1 = **bidirectional** (encoder stacks, e.g. the SPLADE/uniCOIL sparse
+    encoders). May be a traced scalar (per-layer selection inside a scanned
+    stack). Key positions < 0 denote empty ring-buffer cache slots and are
+    always masked.
+    """
+    nonneg = k_pos[None, :] >= 0
+    causal = k_pos[None, :] <= q_pos[:, None]
+    w = jnp.asarray(window, jnp.int32)
+    in_window = (q_pos[:, None] - k_pos[None, :]) < jnp.where(w > 0, w, jnp.int32(2**30))
+    return nonneg & jnp.where(w < 0, nonneg, causal & in_window)
+
+
+def multihead_attention(
+    params,
+    x: jax.Array,  # [B, S, D]
+    dims: AttnDims,
+    *,
+    positions: jax.Array,  # [B, S] or [S]
+    window: jax.Array | int = 0,
+    rope_theta: float = 10000.0,
+    kv_override: Optional[tuple[jax.Array, jax.Array, jax.Array]] = None,
+    chunk_size: int = 0,
+) -> jax.Array:
+    """GQA attention. ``kv_override=(k, v, k_positions)`` enables decode
+    against a cache; ``chunk_size>0`` switches to the blockwise (flash-style)
+    online-softmax path for long sequences."""
+    B, S, D = x.shape
+    q = (x @ params["wq"]).reshape(B, S, dims.n_heads, dims.d_head)
+    k = (x @ params["wk"]).reshape(B, S, dims.n_kv_heads, dims.d_head)
+    v = (x @ params["wv"]).reshape(B, S, dims.n_kv_heads, dims.d_head)
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (B, S))
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    k_pos = positions
+    if kv_override is not None:
+        k, v, k_pos = kv_override  # already rope'd cache + positions
+    if chunk_size and k.shape[1] > chunk_size:
+        out = _attention_chunked(q, k, v, positions, k_pos, dims, window, chunk_size)
+    else:
+        out = _attention_dense(q, k, v, positions, k_pos, dims, window)
+    return out.reshape(B, S, dims.n_heads * dims.d_head) @ params["wo"]
+
+
+def _attention_dense(q, k, v, q_pos, k_pos, dims: AttnDims, window) -> jax.Array:
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    g = dims.group
+    qg = q.reshape(B, S, dims.n_kv_heads, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    mask = jax.vmap(lambda qp, kp: _causal_window_mask(qp, kp, window))(q_pos, k_pos)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no visible keys (ring-buffer cache padding) produce NaN; zero them
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _attention_chunked(q, k, v, q_pos, k_pos, dims: AttnDims, window, chunk: int) -> jax.Array:
+    """Blockwise online-softmax attention (flash-style), O(S*chunk) memory.
+
+    KV is scanned in chunks with running (max, denominator, numerator) — the
+    standard memory-safe formulation for 32k+ contexts on TPU where the full
+    [S, T] score matrix cannot live in HBM.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    assert T % chunk == 0, (T, chunk)
+    g = dims.group
+    qg = q.reshape(B, S, dims.n_kv_heads, g, hd)
+    n_chunks = T // chunk
+
+    def body(carry, inputs):
+        m, denom, num = carry
+        kc, vc, kpc = inputs  # [B, chunk, K, hd], [B, chunk]
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, kc).astype(jnp.float32) / jnp.sqrt(
+            jnp.float32(hd)
+        )
+        mask = jax.vmap(lambda qp, kp: _causal_window_mask(qp, kp, window))(q_pos, kpc)
+        s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        denom = denom * alpha + p.sum(axis=-1)
+        num = num * alpha[..., None] + jnp.einsum("bkgst,btkh->bkgsh", p.astype(vc.dtype), vc)
+        return (m_new, denom, num), None
+
+    m0 = jnp.full((B, dims.n_kv_heads, g, S), -jnp.inf, jnp.float32)
+    d0 = jnp.zeros((B, dims.n_kv_heads, g, S), jnp.float32)
+    n0 = jnp.zeros((B, dims.n_kv_heads, g, S, hd), jnp.float32)
+    ks = k.reshape(B, n_chunks, chunk, dims.n_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, chunk, dims.n_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    kps = k_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    # checkpoint the chunk body: otherwise scan saves every chunk's [S, chunk]
+    # probs + mask for backward — the flash-attention memory win would be lost
+    (m, denom, num), _ = jax.lax.scan(jax.checkpoint(body), (m0, d0, n0), (ks, vs, kps))
+    out = num / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN: SwiGLU + GShard-style top-k MoE (sort/scatter dispatch, EP-shardable)
+# --------------------------------------------------------------------------
+
+
+def mlp_params(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    n_shared: int = 0  # shared (always-on) experts, DeepSeek style
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    # dispatch groups (GShard): tokens are split into G groups, each group
+    # sorts/scatters LOCALLY (group axis shards over the mesh, so no global
+    # token-permutation collective ever exists). 0 = one group per chip
+    # (inferred from the ambient mesh; 1 group without a mesh).
+    n_groups: int = 0
+
+
+def moe_params(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_expert_ff
+    p = {
+        "router": dense_init(kr, d_model, E, jnp.float32),
+        "w_gate": (jax.random.normal(k1, (E, d_model, F), jnp.float32) / jnp.sqrt(d_model)).astype(dtype),
+        "w_up": (jax.random.normal(k2, (E, d_model, F), jnp.float32) / jnp.sqrt(d_model)).astype(dtype),
+        "w_down": (jax.random.normal(k3, (E, F, d_model), jnp.float32) / jnp.sqrt(F)).astype(dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = mlp_params(ks, d_model, cfg.d_expert_ff * cfg.n_shared, dtype)
+    return p
+
+
+def _round_up(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def _dispatch_one_group(xg, logits_g, cfg: MoEConfig, C: int, dtype):
+    """Local (per-group) top-k sort/scatter dispatch. xg: [Tg, D]."""
+    Tg, D = xg.shape
+    E, K = cfg.n_experts, cfg.top_k
+    probs = jax.nn.softmax(logits_g, axis=-1)
+    gate, choice = jax.lax.top_k(probs, K)  # [Tg, K]
+    gate = (gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)).astype(dtype)
+    flat_e = choice.reshape(Tg * K)
+    order = jnp.argsort(flat_e, stable=True)
+    ranks = jnp.empty_like(order).at[order].set(jnp.arange(Tg * K, dtype=order.dtype))
+    counts = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    expert_base = jnp.cumsum(counts) - counts
+    pos_in_expert = ranks.astype(jnp.int32) - expert_base[flat_e]
+    keep = pos_in_expert < C
+    tok = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), K)
+    updates = xg[tok] * keep[:, None].astype(dtype)
+    slot = jnp.where(keep, flat_e * C + pos_in_expert, 0)
+    buf = jnp.zeros((E * C, D), dtype).at[slot].add(updates)
+    return buf.reshape(E, C, D), (gate, keep, slot, tok, flat_e)
+
+
+def _combine_one_group(out_e, route, Tg: int, D: int, dtype):
+    gate, keep, slot, tok, _ = route
+    y = out_e.reshape(-1, D)[slot]  # slot 0 aliases drops; keep-mask zeroes them
+    y = y * (gate.reshape(-1, 1) * keep[:, None].astype(dtype))
+    return jnp.zeros((Tg, D), dtype).at[tok].add(y)
+
+
+def moe(
+    params, x: jax.Array, cfg: MoEConfig, token_axis: str = "all"
+) -> tuple[jax.Array, jax.Array]:
+    """Grouped top-k MoE (GShard dispatch), EP-shardable.
+
+    Tokens are split into ``G`` groups (one per chip by default); each group
+    runs a LOCAL sort/scatter into its ``[E, C_g, D]`` capacity slice, so the
+    only cross-chip movement is the ``[G, E, C_g, D]`` buffer itself —
+    G-sharded over the token axes and, when ``E`` divides the model axis,
+    E-sharded over ``model`` (the canonical all-to-all EP exchange). Global-
+    permutation dispatch (argsort over all T*K assignments) was measured at
+    +300 s/step of collectives on granite's 40-expert config (§Perf).
+    Tokens beyond an expert's per-group capacity are dropped (GShard
+    semantics, capacity_factor-controlled).
+
+    Returns (output, aux_loss).
+    """
+    from repro.distributed.sharding import act, ambient_axis_size
+
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32)) @ params["router"]  # [T, E]
+
+    G = cfg.n_groups or max(ambient_axis_size(token_axis), 1)
+    if T % G != 0:
+        G = 1
+    Tg = T // G
+    C = _round_up(max(int(Tg * K / E * cfg.capacity_factor), 1), 8)
+
+    xg = xt.reshape(G, Tg, D)
+    lg = logits.reshape(G, Tg, E)
+    # EP on the expert axis only when the model axis isn't already carrying
+    # the token groups (dp_layout) and E divides it
+    expert_tok = (
+        "model"
+        if token_axis != "all" and E % max(ambient_axis_size("model"), 1) == 0
+        else None
+    )
+    buf, route = jax.vmap(
+        lambda xgi, lgi: _dispatch_one_group(xgi, lgi, cfg, C, x.dtype)
+    )(xg, lg)
+    buf = act(buf, token_axis, expert_tok, None, None)  # [G, E, C, D]
+    a = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+    a = a * jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    out_e = jnp.einsum("gecf,efd->gecd", a, params["w_down"])
+    out_e = act(out_e, token_axis, expert_tok, None, None)
+    y = jax.vmap(lambda oe, r: _combine_one_group(oe, r, Tg, D, x.dtype))(out_e, route)
+    y = act(y.reshape(T, D), token_axis, None)
+
+    if cfg.n_shared:
+        y = y + mlp(params["shared"], xt)
+
+    # load-balance aux loss (Switch) + router z-loss, computed globally
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=0)  # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[route[4].reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce) + cfg.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1))
+    )
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,318 @@
+"""The four assigned recsys architectures: DCN-v2, DIN, SASRec, Wide&Deep.
+
+Each model is (huge row-sharded embedding table) -> (feature interaction) ->
+(small MLP), per the recsys kernel regime. The embedding lookup is the hot
+path and runs on the from-scratch EmbeddingBag substrate
+(``repro.archs.embedding``). All four share:
+
+  * ``init_params(key, cfg)`` / ``abstract_params(cfg)``
+  * ``forward(params, batch, cfg) -> logits [B]``
+  * ``loss(params, batch, cfg) -> (bce, metrics)``
+  * ``score_candidates(params, batch, cfg) -> scores [n_cand]`` — the
+    ``retrieval_cand`` path: ONE query scored against 10^6 candidates as a
+    single batched contraction (never a loop), feeding the shared
+    ``tiled_topk`` / ``block_topk`` kernel. For the additive sparse-linear
+    models (Wide&Deep's wide part) this is exactly Eq. (1) of the paper, and
+    the budgeted SAAT evaluator applies (DESIGN.md §4).
+
+Batch layouts (all dense/static; see ``repro.configs``):
+  dcn-v2     dense [B,13] f32, sparse [B,26] i32, label [B]
+  din        hist [B,100] i32, hist_mask [B,100] bool, target [B] i32, label
+  sasrec     seq [B,50] i32, pos [B,50] i32, neg [B,50] i32, mask [B,50]
+  wide-deep  sparse [B,40] i32, label [B]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import layers
+from repro.archs.embedding import TableSpec, embedding_lookup, fold_ids, init_table
+
+
+# --------------------------------------------------------------------------
+# configs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str  # dcn-v2 | din | sasrec | wide-deep
+    table: TableSpec
+    n_dense: int = 0
+    mlp_dims: tuple[int, ...] = ()
+    # dcn-v2
+    n_cross_layers: int = 0
+    # din
+    attn_mlp_dims: tuple[int, ...] = ()
+    seq_len: int = 0
+    # sasrec
+    n_blocks: int = 0
+    n_heads: int = 1
+    dtype: object = jnp.float32
+
+    @property
+    def embed_dim(self) -> int:
+        return self.table.dim
+
+    def n_params(self) -> int:
+        import numpy as np
+
+        p = abstract_params(self)
+        return int(sum(np.prod(l.shape) for l in jax.tree.leaves(p)))
+
+
+def _mlp_params(key, dims: Sequence[int], dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": layers.dense_init(ks[i], dims[i], dims[i + 1], dtype), "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(len(dims) - 1)
+    ]
+
+
+def _mlp_apply(ps, x, final_act: bool = False):
+    for i, p in enumerate(ps):
+        x = x @ p["w"] + p["b"]
+        if i < len(ps) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# --------------------------------------------------------------------------
+# init / forward per kind
+# --------------------------------------------------------------------------
+
+
+def init_params(key, cfg: RecsysConfig):
+    kt, km, kx, ka, kw = jax.random.split(key, 5)
+    p = {"table": init_table(kt, cfg.table, cfg.dtype)}
+    d_embed_all = cfg.table.n_slots * cfg.embed_dim
+
+    if cfg.kind == "dcn-v2":
+        d0 = cfg.n_dense + d_embed_all
+        cross_keys = jax.random.split(kx, cfg.n_cross_layers)
+        p["cross"] = [
+            {"w": layers.dense_init(cross_keys[i], d0, d0, cfg.dtype, scale=0.01), "b": jnp.zeros((d0,), cfg.dtype)}
+            for i in range(cfg.n_cross_layers)
+        ]
+        p["deep"] = _mlp_params(km, (d0,) + cfg.mlp_dims, cfg.dtype)
+        p["out"] = _mlp_params(kw, (d0 + cfg.mlp_dims[-1], 1), cfg.dtype)
+    elif cfg.kind == "din":
+        d = cfg.embed_dim
+        p["attn"] = _mlp_params(ka, (4 * d,) + cfg.attn_mlp_dims + (1,), cfg.dtype)
+        p["mlp"] = _mlp_params(km, (3 * d,) + cfg.mlp_dims + (1,), cfg.dtype)
+    elif cfg.kind == "sasrec":
+        d = cfg.embed_dim
+        p["pos_embed"] = layers.embed_init(kx, cfg.seq_len, d, cfg.dtype)
+        blk_keys = jax.random.split(km, cfg.n_blocks)
+        dims = layers.AttnDims(cfg.n_heads, cfg.n_heads, d // cfg.n_heads)
+        p["blocks"] = [
+            {
+                "ln1": layers.layernorm_params(d, cfg.dtype),
+                "attn": layers.attn_params(blk_keys[i], d, dims, cfg.dtype),
+                "ln2": layers.layernorm_params(d, cfg.dtype),
+                "ffn": _mlp_params(jax.random.fold_in(blk_keys[i], 7), (d, d, d), cfg.dtype),
+            }
+            for i in range(cfg.n_blocks)
+        ]
+        p["ln_out"] = layers.layernorm_params(d, cfg.dtype)
+    elif cfg.kind == "wide-deep":
+        p["wide"] = (jax.random.normal(kw, (cfg.table.total_rows,), jnp.float32) * 1e-3).astype(cfg.dtype)
+        p["deep"] = _mlp_params(km, (d_embed_all,) + cfg.mlp_dims + (1,), cfg.dtype)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def abstract_params(cfg: RecsysConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---- dcn-v2 ----------------------------------------------------------------
+
+
+def _dcn_forward(p, dense, sparse, cfg: RecsysConfig):
+    emb = embedding_lookup(p["table"], sparse, cfg.table)  # [B, S, D]
+    x0 = jnp.concatenate([dense.astype(cfg.dtype), emb.reshape(emb.shape[0], -1)], axis=-1)
+    x = x0
+    for cp in p["cross"]:  # DCN-v2 full-matrix cross: x_{l+1} = x0 * (W x_l + b) + x_l
+        x = x0 * (x @ cp["w"] + cp["b"]) + x
+    deep = _mlp_apply(p["deep"], x0, final_act=True)
+    return _mlp_apply(p["out"], jnp.concatenate([x, deep], axis=-1))[:, 0]
+
+
+# ---- din -------------------------------------------------------------------
+
+
+def _din_attention(p, hist_e, target_e, mask, cfg: RecsysConfig):
+    """Target attention: score each history item against the target."""
+    B, L, D = hist_e.shape
+    t = jnp.broadcast_to(target_e[:, None, :], (B, L, D))
+    feats = jnp.concatenate([hist_e, t, hist_e - t, hist_e * t], axis=-1)
+    logits = _mlp_apply(p["attn"], feats)[..., 0]  # [B, L]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # all-masked rows
+    return jnp.einsum("bl,bld->bd", w.astype(hist_e.dtype), hist_e)
+
+
+def _din_forward(p, hist, hist_mask, target, cfg: RecsysConfig):
+    hist_rows = fold_ids(hist[..., None], cfg.table)[..., 0]
+    tgt_rows = fold_ids(target[..., None], cfg.table)[..., 0]
+    hist_e = jnp.take(p["table"], hist_rows, axis=0)  # [B, L, D]
+    tgt_e = jnp.take(p["table"], tgt_rows, axis=0)  # [B, D]
+    user = _din_attention(p, hist_e, tgt_e, hist_mask, cfg)
+    x = jnp.concatenate([user, tgt_e, user * tgt_e], axis=-1)
+    return _mlp_apply(p["mlp"], x)[:, 0]
+
+
+# ---- sasrec ----------------------------------------------------------------
+
+
+def _sasrec_hidden(p, seq, mask, cfg: RecsysConfig):
+    B, L = seq.shape
+    rows = fold_ids(seq[..., None], cfg.table)[..., 0]
+    x = jnp.take(p["table"], rows, axis=0) + p["pos_embed"][None, :L, :]
+    x = jnp.where(mask[..., None], x, 0.0)
+    positions = jnp.arange(L, dtype=jnp.int32)
+    dims = layers.AttnDims(cfg.n_heads, cfg.n_heads, cfg.embed_dim // cfg.n_heads)
+    for blk in p["blocks"]:
+        h = layers.layernorm(blk["ln1"], x)
+        # SASRec uses causal self-attention without RoPE (learned positions)
+        q = (h @ blk["attn"]["wq"]).reshape(B, L, dims.n_heads, dims.d_head)
+        k = (h @ blk["attn"]["wk"]).reshape(B, L, dims.n_kv_heads, dims.d_head)
+        v = (h @ blk["attn"]["wv"]).reshape(B, L, dims.n_kv_heads, dims.d_head)
+        pos_b = jnp.broadcast_to(positions[None, :], (B, L))
+        out = layers._attention_dense(q, k, v, pos_b, pos_b, dims, 0)
+        x = x + out.reshape(B, L, -1) @ blk["attn"]["wo"]
+        h = layers.layernorm(blk["ln2"], x)
+        x = x + _mlp_apply(blk["ffn"], h, final_act=False)
+        x = jnp.where(mask[..., None], x, 0.0)
+    return layers.layernorm(p["ln_out"], x)  # [B, L, D]
+
+
+def _sasrec_pair_logits(p, seq, mask, pos, neg, cfg: RecsysConfig):
+    h = _sasrec_hidden(p, seq, mask, cfg)
+    pe = jnp.take(p["table"], fold_ids(pos[..., None], cfg.table)[..., 0], axis=0)
+    ne = jnp.take(p["table"], fold_ids(neg[..., None], cfg.table)[..., 0], axis=0)
+    return jnp.sum(h * pe, -1), jnp.sum(h * ne, -1)  # [B, L] each
+
+
+# ---- wide & deep -----------------------------------------------------------
+
+
+def _wide_deep_forward(p, sparse, cfg: RecsysConfig):
+    rows = fold_ids(sparse, cfg.table)  # [B, S]
+    wide = jnp.take(p["wide"], rows, axis=0).sum(axis=-1)  # additive sparse linear
+    emb = jnp.take(p["table"], rows, axis=0)  # [B, S, D]
+    deep = _mlp_apply(p["deep"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return wide.astype(jnp.float32) + deep.astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+
+def forward(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """Per-example logits [B] (sasrec: [B, L] positive logits)."""
+    if cfg.kind == "dcn-v2":
+        return _dcn_forward(params, batch["dense"], batch["sparse"], cfg)
+    if cfg.kind == "din":
+        return _din_forward(params, batch["hist"], batch["hist_mask"], batch["target"], cfg)
+    if cfg.kind == "sasrec":
+        pos_l, _ = _sasrec_pair_logits(
+            params, batch["seq"], batch["mask"], batch["pos"], batch["neg"], cfg
+        )
+        return pos_l
+    if cfg.kind == "wide-deep":
+        return _wide_deep_forward(params, batch["sparse"], cfg)
+    raise ValueError(cfg.kind)
+
+
+def loss(params, batch, cfg: RecsysConfig):
+    """BCE training loss (sasrec: pairwise BCE over pos/neg next items)."""
+    if cfg.kind == "sasrec":
+        pos_l, neg_l = _sasrec_pair_logits(
+            params, batch["seq"], batch["mask"], batch["pos"], batch["neg"], cfg
+        )
+        m = batch["mask"].astype(jnp.float32)
+        l = -jax.nn.log_sigmoid(pos_l) - jax.nn.log_sigmoid(-neg_l)
+        total = (l * m).sum() / jnp.maximum(m.sum(), 1.0)
+        return total, {"bce": total}
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    l = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    total = l.mean()
+    return total, {"bce": total, "mean_logit": logits.mean()}
+
+
+def score_candidates(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """``retrieval_cand``: one query vs ``n_cand`` candidates, f32[n_cand].
+
+    Candidates enter as raw slot-0/item ids; user-side features broadcast.
+    Every model reduces to one batched contraction over the candidate axis.
+    """
+    cand = batch["candidates"]  # i32[n_cand]
+    n = cand.shape[0]
+    if cfg.kind == "sasrec":
+        h = _sasrec_hidden(params, batch["seq"], batch["mask"], cfg)[:, -1, :]  # [1, D]
+        ce = jnp.take(params["table"], fold_ids(cand[:, None], cfg.table)[..., 0], axis=0)
+        return (ce @ h[0]).astype(jnp.float32)  # matvec over 1M candidates
+    if cfg.kind == "din":
+        from repro.distributed.sharding import act
+
+        # score all candidates against one history: vectorize target axis;
+        # every [n_cand, ...] broadcast must be constrained over the whole
+        # mesh or SPMD replicates the [1M, 100, 4D] attention features
+        hist_rows = fold_ids(batch["hist"][..., None], cfg.table)[..., 0]
+        hist_e = jnp.take(params["table"], hist_rows, axis=0)  # [1, L, D]
+        tgt_e = act(
+            jnp.take(params["table"], fold_ids(cand[:, None], cfg.table)[..., 0], axis=0),
+            "all", None,
+        )
+        hist_b = act(jnp.broadcast_to(hist_e, (n,) + hist_e.shape[1:]), "all", None, None)
+        mask_b = jnp.broadcast_to(batch["hist_mask"], (n,) + batch["hist_mask"].shape[1:])
+        user = _din_attention(params, hist_b, tgt_e, mask_b, cfg)
+        x = act(jnp.concatenate([user, tgt_e, user * tgt_e], axis=-1), "all", None)
+        return _mlp_apply(params["mlp"], x)[:, 0].astype(jnp.float32)
+    if cfg.kind == "dcn-v2":
+        dense = jnp.broadcast_to(batch["dense"], (n, batch["dense"].shape[-1]))
+        sparse = jnp.broadcast_to(batch["sparse"], (n, batch["sparse"].shape[-1]))
+        sparse = sparse.at[:, 0].set(cand)  # slot 0 = item id
+        return _dcn_forward(params, dense, sparse, cfg).astype(jnp.float32)
+    if cfg.kind == "wide-deep":
+        sparse = jnp.broadcast_to(batch["sparse"], (n, batch["sparse"].shape[-1]))
+        sparse = sparse.at[:, 0].set(cand)
+        return _wide_deep_forward(params, sparse, cfg).astype(jnp.float32)
+    raise ValueError(cfg.kind)
+
+
+def retrieve_topk(params, batch, cfg: RecsysConfig, k: int = 100, num_tiles: int = 64):
+    """score_candidates + the shared two-stage top-k (paper's top-k problem)."""
+    from repro.core.topk import tiled_topk
+
+    scores = score_candidates(params, batch, cfg)
+    return tiled_topk(scores, k, num_tiles)
+
+
+def train_step_model_flops(cfg: RecsysConfig, batch: int) -> float:
+    """6 * active-params-excluding-table + lookup bytes don't count as FLOPs."""
+    import numpy as np
+
+    p = abstract_params(cfg)
+    dense_params = sum(
+        int(np.prod(l.shape))
+        for path, l in jax.tree_util.tree_leaves_with_path(p)
+        if "table" not in jax.tree_util.keystr(path) and "wide" not in jax.tree_util.keystr(path)
+    )
+    seq_mult = cfg.seq_len if cfg.kind in ("din", "sasrec") and cfg.seq_len else 1
+    # MLP/cross work is per-example; DIN attention MLP runs per history item
+    per_ex = dense_params * (seq_mult if cfg.kind == "din" else 1)
+    if cfg.kind == "sasrec":
+        per_ex = dense_params * cfg.seq_len
+    return 6.0 * per_ex * batch

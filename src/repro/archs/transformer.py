@@ -1,0 +1,554 @@
+"""Decoder-only transformer LM: the five assigned LM-family architectures.
+
+Design targets (DESIGN.md §3, §5):
+  * **scan-over-layers** with stacked parameter pytrees — keeps the lowered
+    HLO size O(1) in depth so the 512-device dry-run of a 60-layer model
+    compiles in tractable time, and gives remat a single natural boundary.
+  * **heterogeneous attention** (gemma3's 5 local : 1 global interleave) via a
+    *period/repeat* layout: layers are grouped into ``R`` repeats of a
+    ``period``-long block; each position-in-period ``j`` has its own stacked
+    params ``[R, ...]`` and its own KV-cache length (sliding-window layers
+    keep a ring buffer of ``window`` slots, global layers keep the full
+    sequence) — this is the sub-quadratic structure that makes ``long_500k``
+    decode feasible.
+  * **GQA/MQA** (all five archs), RoPE, SwiGLU dense FFN or top-k MoE FFN
+    (granite 40e top-8, moonshot 64e top-6) with EP-shardable expert dispatch.
+  * **chunked-vocab cross entropy**: the loss scans over token chunks so the
+    [tokens, vocab] logit matrix is never materialized — required for
+    minitron's 256k vocab at 1M tokens/step, and a §Perf lever everywhere.
+
+Params are nested dicts of jnp arrays (no flax); sharding is annotated by the
+caller through ``repro.distributed.sharding`` PartitionSpec trees that mirror
+the param pytree structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs import layers
+from repro.archs.layers import AttnDims, MoEConfig
+
+
+# --------------------------------------------------------------------------
+# config
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    # attention pattern: ``window_pattern`` is cycled over layers; entry 0
+    # means global (full causal) attention, entry W>0 means sliding window W.
+    window_pattern: tuple[int, ...] = (0,)
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    # remat policy for the scanned layer body: none | full | dots
+    remat: str = "full"
+    # attention KV-chunk size for the online-softmax path (0 = dense scores)
+    attn_chunk: int = 0
+    # vocab chunk for the scanned cross-entropy (0 = materialize logits)
+    vocab_chunk: int = 0
+    # sequence (context) parallelism: shard S over the model axis instead of
+    # heads (long-context prefill where B is small and H*hd < n_model_chips)
+    seq_shard: bool = False
+    # data-parallel-dominant layout: batch shards over EVERY mesh axis and
+    # activations stay unsharded in the feature dims. The right layout for
+    # small models (<~8B): TP=16 activation all-reduces on a 1B model cost
+    # ~30x its compute (measured on gemma3, EXPERIMENTS.md §Perf). Param/
+    # optimizer-state leaves stay model-sharded (ZeRO) via the rule table.
+    dp_layout: bool = False
+
+    @property
+    def dims(self) -> AttnDims:
+        return AttnDims(self.n_heads, self.n_kv_heads, self.d_head)
+
+    @property
+    def period(self) -> int:
+        return len(self.window_pattern)
+
+    @property
+    def repeats(self) -> int:
+        return self.n_layers // self.period
+
+    @property
+    def remainder(self) -> int:
+        return self.n_layers % self.period
+
+    def layer_window(self, layer: int) -> int:
+        return self.window_pattern[layer % self.period]
+
+    def cache_len(self, j: int, seq_len: int) -> int:
+        """KV-cache length for position-in-period j at a given context size."""
+        w = self.window_pattern[j]
+        return min(w, seq_len) if w > 0 else seq_len
+
+    def n_params(self) -> int:
+        """Total parameter count (exact, from the init shapes)."""
+        d, hd = self.d_model, self.d_head
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.moe is not None:
+            m = self.moe
+            ffn = d * m.n_experts * (2 * m.d_expert_ff) + m.n_experts * m.d_expert_ff * d
+            ffn += d * m.n_experts  # router
+            if m.n_shared:
+                ffn += 3 * d * m.d_expert_ff * m.n_shared
+        else:
+            ffn = 3 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d  # 2 rmsnorm scales
+        embed = self.vocab * d
+        head = 0 if self.tie_embeddings else self.vocab * d
+        return self.n_layers * per_layer + embed + head + d  # final norm
+
+    def n_active_params(self) -> int:
+        """Active-per-token params (MoE: only routed top_k + shared experts)."""
+        if self.moe is None:
+            return self.n_params()
+        d = self.d_model
+        m = self.moe
+        hd = self.d_head
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        ffn = 3 * d * m.d_expert_ff * (m.top_k + m.n_shared) + d * m.n_experts
+        per_layer = attn + ffn + 2 * d
+        embed = self.vocab * d
+        head = 0 if self.tie_embeddings else self.vocab * d
+        return self.n_layers * per_layer + embed + head + d
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _layer_params(key, cfg: LMConfig):
+    """One transformer block's params."""
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln_attn": layers.rmsnorm_params(cfg.d_model, cfg.dtype),
+        "ln_ffn": layers.rmsnorm_params(cfg.d_model, cfg.dtype),
+        "attn": layers.attn_params(ka, cfg.d_model, cfg.dims, cfg.dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = layers.moe_params(kf, cfg.d_model, cfg.moe, cfg.dtype)
+    else:
+        p["mlp"] = layers.mlp_params(kf, cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def init_lm_params(key, cfg: LMConfig):
+    """Stacked param pytree.
+
+    ``params["blocks"]`` is a list of ``period`` pytrees whose leaves carry a
+    leading ``[repeats]`` axis (scanned); ``params["tail"]`` is a list of
+    ``remainder`` plain layer pytrees (unrolled).
+    """
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    blocks = []
+    for j in range(cfg.period):
+        keys_j = layer_keys[j :: cfg.period][: cfg.repeats]
+        stacked = jax.vmap(lambda k: _layer_params(k, cfg))(jnp.stack(keys_j)) if cfg.repeats else None
+        blocks.append(stacked)
+    tail = [
+        _layer_params(layer_keys[cfg.repeats * cfg.period + t], cfg)
+        for t in range(cfg.remainder)
+    ]
+    params = {
+        "embed": layers.embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.dtype),
+        "blocks": blocks,
+        "tail": tail,
+        "ln_out": layers.rmsnorm_params(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.dense_init(k_head, cfg.d_model, cfg.vocab, cfg.dtype)
+    return params
+
+
+def abstract_lm_params(cfg: LMConfig):
+    """ShapeDtypeStruct pytree of the params (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_lm_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _block_body(p, x, cfg: LMConfig, window, positions, kv_override=None):
+    """One transformer block. Returns (y, aux_loss, (k, v))."""
+    h = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    attn_out, kv = _attn_with_kv(p["attn"], h, cfg, positions, window, kv_override)
+    x = x + attn_out
+    h = layers.rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        ffn_out, aux = layers.moe(
+            p["moe"], h, cfg.moe, token_axis="all" if cfg.dp_layout else "data"
+        )
+    else:
+        ffn_out, aux = layers.mlp(p["mlp"], h), jnp.float32(0.0)
+    return x + ffn_out, aux, kv
+
+
+def _attn_with_kv(p, x, cfg: LMConfig, positions, window, kv_override):
+    """Like layers.multihead_attention but also returns this step's (k, v)."""
+    from repro.distributed.sharding import act
+
+    dims = cfg.dims
+    B, S, D = x.shape
+    batch_tok = "all" if cfg.dp_layout else "data"
+    seq_tok = "model" if cfg.seq_shard else None
+    head_tok = None if (cfg.seq_shard or cfg.dp_layout) else "model"
+    # constrain the MERGED projection dim (H*hd), not the 4D head axis: head
+    # counts like 56 or 24 don't divide a 16-way model axis, but H*hd does —
+    # uneven 4D constraints trigger SPMD involuntary-full-remat
+    q = act(x @ p["wq"], batch_tok, seq_tok, head_tok).reshape(B, S, dims.n_heads, dims.d_head)
+    k = act(x @ p["wk"], batch_tok, seq_tok, head_tok).reshape(B, S, dims.n_kv_heads, dims.d_head)
+    v = act(x @ p["wv"], batch_tok, seq_tok, head_tok).reshape(B, S, dims.n_kv_heads, dims.d_head)
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions[None, :], (B, S))
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    k_att, v_att, kp_att = (k, v, positions) if kv_override is None else kv_override
+    if cfg.attn_chunk and k_att.shape[1] > cfg.attn_chunk:
+        out = layers._attention_chunked(
+            q, k_att, v_att, positions, kp_att, dims, window, cfg.attn_chunk
+        )
+    else:
+        out = layers._attention_dense(q, k_att, v_att, positions, kp_att, dims, window)
+    return out.reshape(B, S, dims.n_heads * dims.d_head) @ p["wo"], (k, v)
+
+
+def _remat_wrap(fn, cfg: LMConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # full
+
+
+def lm_hidden_states(params, tokens: jax.Array, cfg: LMConfig) -> tuple[jax.Array, jax.Array]:
+    """Token ids [B, S] -> final hidden states [B, S, D] (+ MoE aux loss).
+
+    Full-sequence causal forward (training / prefill). Layers run as
+    ``repeats`` scan steps of a ``period``-long unrolled block, then the
+    remainder layers unrolled.
+    """
+    from repro.distributed.sharding import act
+
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = act(x, "all" if cfg.dp_layout else "data", "model" if cfg.seq_shard else None, None)
+
+    def scan_step(carry, block_p):
+        # remat at LAYER granularity: checkpointing the whole period block
+        # keeps every layer's attention internals alive simultaneously during
+        # the block backward (measured 80 GiB/chip on gemma3; §Perf)
+        x, aux = carry
+        for j in range(cfg.period):
+            pj = jax.tree.map(lambda l: l[j], block_p) if cfg.period > 1 else block_p
+            layer = lambda x, p, _j=j: _block_body(
+                p, x, cfg, cfg.window_pattern[_j], positions
+            )[:2]
+            x, a = _remat_wrap(layer, cfg)(x, pj)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.repeats:
+        if cfg.period > 1:
+            # re-stack: list of per-j [R, ...] pytrees -> one pytree [R, period, ...]
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls, axis=1), *params["blocks"])
+        else:
+            stacked = params["blocks"][0]
+        (x, aux), _ = jax.lax.scan(scan_step, (x, jnp.float32(0.0)), stacked)
+    else:
+        aux = jnp.float32(0.0)
+    for t, p in enumerate(params["tail"]):
+        j = t  # tail layers continue the pattern from position 0
+        x, a = _remat_wrap(
+            lambda x, p, _j=j: _block_body(p, x, cfg, cfg.window_pattern[_j], positions)[:2],
+            cfg,
+        )(x, p)
+        aux = aux + a
+    return layers.rmsnorm(params["ln_out"], x, cfg.norm_eps), aux
+
+
+def _unembed(params, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T  # [D, V]
+    return params["unembed"]
+
+
+def lm_logits(params, tokens: jax.Array, cfg: LMConfig) -> jax.Array:
+    h, _ = lm_hidden_states(params, tokens, cfg)
+    return (h @ _unembed(params, cfg)).astype(jnp.float32)
+
+
+def lm_loss(params, tokens: jax.Array, labels: jax.Array, cfg: LMConfig):
+    """Mean next-token cross entropy (+ MoE aux). Labels < 0 are masked.
+
+    With ``cfg.vocab_chunk > 0`` the unembed projection + log-softmax run in a
+    ``lax.scan`` over **sequence** chunks, so peak memory is
+    ``B * chunk * vocab`` instead of ``B * S * vocab`` — the enabling trick
+    for 256k-vocab training. Chunking the sequence axis (not flat tokens)
+    keeps the batch axis dp-sharded through the scan: slicing a sharded axis
+    would force SPMD to all-gather the whole [tokens, d] hidden tensor every
+    step (measured 2 x 4.8 GB/step on gemma3 before this layout).
+    """
+    h, aux = lm_hidden_states(params, tokens, cfg)
+    B, S, D = h.shape
+    w = _unembed(params, cfg)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+
+    def chunk_loss(hc, lc, vc):
+        logits = (hc @ w).astype(jnp.float32)  # [B, chunk, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via one-hot mask-sum, NOT take_along_axis: indexing a
+        # vocab-sharded logits tensor makes SPMD all-gather the full [B,
+        # chunk, V] f32 block per loss chunk (2.7 GB/chunk on moonshot);
+        # the mask-sum reduces over the sharded axis locally + tiny psum
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(jnp.where(vocab_iota == lc[..., None], logits, 0.0), axis=-1)
+        return jnp.where(vc, logz - gold, 0.0)
+
+    chunk = min(cfg.vocab_chunk, S) if cfg.vocab_chunk else 0
+    if chunk and S > chunk and S % chunk == 0:
+        n_chunks = S // chunk
+
+        def to_chunks(x):  # [B, S, ...] -> [n_chunks, B, chunk, ...]
+            xs = x.reshape((B, n_chunks, chunk) + x.shape[2:])
+            return jnp.moveaxis(xs, 1, 0)
+
+        def body(tot, xs):
+            hc, lc, vc = xs
+            return tot + chunk_loss(hc, lc, vc).sum(), None
+
+        total, _ = jax.lax.scan(
+            body, jnp.float32(0.0), (to_chunks(h), to_chunks(safe), to_chunks(valid))
+        )
+    else:
+        total = chunk_loss(h, safe, valid).sum()
+    n = jnp.maximum(valid.sum(), 1)
+    return total / n + 0.01 * aux, {"xent": total / n, "aux": aux, "tokens": n}
+
+
+# --------------------------------------------------------------------------
+# KV cache: prefill & decode
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static description of the KV cache for (cfg, max context)."""
+
+    cfg: LMConfig
+    batch: int
+    seq_len: int  # max context the cache covers
+
+    def lengths(self) -> list[int]:
+        return [self.cfg.cache_len(j, self.seq_len) for j in range(self.cfg.period)]
+
+
+def init_cache(spec: CacheSpec, dtype=None):
+    """Zero cache pytree.
+
+    Layout mirrors the param blocks: ``cache["blocks"][j]`` holds
+    ``k/v: [R, B, Tj, K, hd]`` and ``pos: [R, B, Tj]`` (key positions; -1 =
+    empty slot, masked out by causality). ``cache["tail"][t]`` the same
+    without the leading R. Sliding-window layers get ``Tj = window`` ring
+    buffers — the sub-quadratic memory structure for ``long_500k``.
+    """
+    cfg = spec.cfg
+    dtype = dtype or cfg.dtype
+    K, hd = cfg.n_kv_heads, cfg.d_head
+
+    def one(r_axis: tuple, T: int):
+        return {
+            "k": jnp.zeros(r_axis + (spec.batch, T, K, hd), dtype),
+            "v": jnp.zeros(r_axis + (spec.batch, T, K, hd), dtype),
+            "pos": jnp.full(r_axis + (spec.batch, T), -1, jnp.int32),
+        }
+
+    blocks = [one((cfg.repeats,), spec.lengths()[j]) for j in range(cfg.period)]
+    tail = [one((), spec.lengths()[t % cfg.period]) for t in range(cfg.remainder)]
+    return {"blocks": blocks, "tail": tail}
+
+
+def abstract_cache(spec: CacheSpec, dtype=None):
+    return jax.eval_shape(lambda: init_cache(spec, dtype))
+
+
+def _cache_update(entry, k_new, v_new, positions):
+    """Write [B, S_new] keys/values into a ring-buffer cache entry.
+
+    The refreshed entries are sharding-constrained (batch over data, cache
+    positions over model) — without this the prefill scan materializes its
+    per-layer cache outputs REPLICATED (measured 260 GiB/chip on yi-34b's
+    60-layer 32k prefill; §Perf).
+    """
+    from repro.distributed.sharding import act
+
+    T = entry["k"].shape[-3]
+    slots = positions % T  # [B, S_new]
+    b_idx = jnp.arange(k_new.shape[0], dtype=jnp.int32)[:, None]
+    k = entry["k"].at[b_idx, slots].set(k_new.astype(entry["k"].dtype))
+    v = entry["v"].at[b_idx, slots].set(v_new.astype(entry["v"].dtype))
+    pos = entry["pos"].at[b_idx, slots].set(positions)
+    return {
+        "k": act(k, "data", "model", None, None),
+        "v": act(v, "data", "model", None, None),
+        "pos": act(pos, "data", "model"),
+    }
+
+
+def lm_decode_step(params, cache, tokens: jax.Array, pos: jax.Array, cfg: LMConfig):
+    """One decode step: ``tokens [B, 1]`` at position ``pos [B]``.
+
+    Returns (logits [B, vocab], new_cache). Attention reads the per-layer
+    ring/full cache (ragged lengths across the period pattern); every layer
+    writes its new KV in place. This is the ``decode_32k`` / ``long_500k``
+    ``serve_step``.
+    """
+    B = tokens.shape[0]
+    positions = pos[:, None].astype(jnp.int32)  # [B, 1]
+    x = params["embed"][tokens].astype(cfg.dtype)
+
+    def layer_with_cache(p, x, entry, j):
+        h = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+        dims = cfg.dims
+        q = (h @ p["attn"]["wq"]).reshape(B, 1, dims.n_heads, dims.d_head)
+        k = (h @ p["attn"]["wk"]).reshape(B, 1, dims.n_kv_heads, dims.d_head)
+        v = (h @ p["attn"]["wv"]).reshape(B, 1, dims.n_kv_heads, dims.d_head)
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        new_entry = _cache_update(entry, k, v, positions)
+        window = cfg.window_pattern[j]
+        out = layers._attention_dense(
+            q, new_entry["k"], new_entry["v"], positions, new_entry["pos"], dims, window
+        )
+        x = x + out.reshape(B, 1, dims.n_heads * dims.d_head) @ p["attn"]["wo"]
+        h = layers.rmsnorm(p["ln_ffn"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            ffn_out, _ = layers.moe(p["moe"], h, cfg.moe)
+        else:
+            ffn_out = layers.mlp(p["mlp"], h)
+        return x + ffn_out, new_entry
+
+    new_blocks = []
+    if cfg.repeats:
+        # scan over repeats; unrolled over the period inside
+        def step(x, xs):
+            block_p, entries = xs
+            new_entries = []
+            for j in range(cfg.period):
+                pj = jax.tree.map(lambda l: l[j], block_p) if cfg.period > 1 else block_p
+                x, ne = layer_with_cache(pj, x, entries[j], j)
+                new_entries.append(ne)
+            return x, new_entries
+
+        if cfg.period > 1:
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls, axis=1), *params["blocks"])
+        else:
+            stacked = params["blocks"][0]
+        x, new_blocks = jax.lax.scan(step, x, (stacked, cache["blocks"]))
+    new_tail = []
+    for t, p in enumerate(params["tail"]):
+        x, ne = layer_with_cache(p, x, cache["tail"][t], t % cfg.period)
+        new_tail.append(ne)
+    h = layers.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+    logits = (h[:, 0, :] @ _unembed(params, cfg)).astype(jnp.float32)
+    return logits, {"blocks": new_blocks, "tail": new_tail}
+
+
+def lm_prefill(params, tokens: jax.Array, cfg: LMConfig, cache_seq_len: int | None = None):
+    """Full-sequence prefill producing (last-token logits, populated cache).
+
+    The forward is the standard scanned causal pass; each layer's fresh KV is
+    written into a cache sized for ``cache_seq_len`` (default: the prompt
+    length) so decode can continue from it.
+    """
+    B, S = tokens.shape
+    cache_seq_len = cache_seq_len or S
+    spec = CacheSpec(cfg, B, cache_seq_len)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    pos_b = jnp.broadcast_to(positions[None, :], (B, S))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    cache = init_cache(spec)
+
+    def scan_step(x, xs):
+        block_p, entries = xs
+        new_entries = []
+
+        def inner(x, block_p, entries):
+            out_entries = []
+            for j in range(cfg.period):
+                pj = jax.tree.map(lambda l: l[j], block_p) if cfg.period > 1 else block_p
+                xj, _, (k, v) = _block_body(pj, x, cfg, cfg.window_pattern[j], positions)
+                out_entries.append(_cache_update(entries[j], k, v, pos_b))
+                x = xj
+            return x, out_entries
+
+        x, new_entries = _remat_wrap(inner, cfg)(x, block_p, entries)
+        return x, new_entries
+
+    if cfg.repeats:
+        if cfg.period > 1:
+            stacked = jax.tree.map(lambda *ls: jnp.stack(ls, axis=1), *params["blocks"])
+        else:
+            stacked = params["blocks"][0]
+        x, new_blocks = jax.lax.scan(scan_step, x, (stacked, cache["blocks"]))
+    else:
+        new_blocks = []
+    new_tail = []
+    for t, p in enumerate(params["tail"]):
+        x, _, (k, v) = _block_body(p, x, cfg, cfg.window_pattern[t % cfg.period], positions)
+        new_tail.append(_cache_update(cache["tail"][t], k, v, pos_b))
+    h = layers.rmsnorm(params["ln_out"], x, cfg.norm_eps)
+    logits = (h[:, -1, :] @ _unembed(params, cfg)).astype(jnp.float32)
+    return logits, {"blocks": new_blocks, "tail": new_tail}
+
+
+# --------------------------------------------------------------------------
+# FLOPs accounting (roofline MODEL_FLOPS)
+# --------------------------------------------------------------------------
+
+
+def train_step_model_flops(cfg: LMConfig, batch: int, seq: int) -> float:
+    """6 * N_active * D + attention quadratic term, for one train step."""
+    n = cfg.n_active_params()
+    d_tokens = batch * seq
+    base = 6.0 * n * d_tokens
+    # attention scores+AV: 2 * 2 * B * S * S_eff * H * hd * 3 (fwd+bwd)
+    attn = 0.0
+    for l in range(cfg.n_layers):
+        w = cfg.layer_window(l)
+        s_eff = min(w, seq) if w > 0 else seq
+        attn += 2.0 * 2.0 * batch * seq * (s_eff / (1 if w else 2)) * cfg.n_heads * cfg.d_head
+    return base + 3.0 * attn  # fwd + 2x bwd
+
+
+def decode_step_model_flops(cfg: LMConfig, batch: int, context: int) -> float:
+    """One-token decode: 2 * N_active + attention over the cache."""
+    base = 2.0 * cfg.n_active_params() * batch
+    attn = 0.0
+    for l in range(cfg.n_layers):
+        w = cfg.layer_window(l)
+        s_eff = min(w, context) if w > 0 else context
+        attn += 2.0 * 2.0 * batch * s_eff * cfg.n_heads * cfg.d_head
+    return base + attn

@@ -1,0 +1,2 @@
+"""Fault-tolerant sharded checkpointing."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,33 @@
+"""Arch registry: 10 assigned architectures + the paper's retrieval models.
+
+``--arch <id>`` anywhere in the launchers resolves through ``ARCHS``.
+"""
+from repro.configs.base import (  # noqa: F401
+    ArchSpec,
+    Cell,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    batch_specs,
+)
+from repro.configs import gnn_archs, lm_archs, recsys_archs
+
+ARCHS: dict = {}
+ARCHS.update(lm_archs.SPECS)
+ARCHS.update(gnn_archs.SPECS)
+ARCHS.update(recsys_archs.SPECS)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells():
+    """Every (arch, shape) pair, including documented skips."""
+    out = []
+    for aid, spec in ARCHS.items():
+        for cell in spec.cells.values():
+            out.append((aid, cell))
+    return out

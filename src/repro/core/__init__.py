@@ -1,0 +1,42 @@
+"""The paper's primary contribution: impact-quantized learned-sparse retrieval
+with anytime SAAT and block-max DAAT query evaluation, TPU-native.
+
+Public API:
+    QuantConfig, quantize, dequantize     impact quantization
+    ImpactIndex, build_impact_index       JASS-style impact-ordered index
+    saat_search, exact_rho                anytime SAAT (rho posting budget)
+    blockmax_search                       vectorized Block-Max DAAT
+    exhaustive_search                     rank-safe exhaustive disjunction
+    wacky.*                               weight-wackiness analyzers
+    pareto.*                              effectiveness/efficiency frontier
+"""
+from repro.core.daat import (  # noqa: F401
+    DaatResult,
+    blockmax_search,
+    block_upper_bounds,
+    max_blocks_per_term,
+    score_blocks,
+)
+from repro.core.exhaustive import ExhaustiveResult, exhaustive_search, score_all_docs  # noqa: F401
+from repro.core.impact_index import (  # noqa: F401
+    ImpactIndex,
+    build_impact_index,
+    pad_queries,
+    query_vector,
+)
+from repro.core.pareto import OperatingPoint, frontier_table, pareto_frontier  # noqa: F401
+from repro.core.quantization import (  # noqa: F401
+    QuantConfig,
+    accumulator_analysis,
+    dequantize,
+    quantization_error,
+    quantize,
+)
+from repro.core.saat import (  # noqa: F401
+    SaatResult,
+    exact_rho,
+    max_segments_per_term,
+    saat_plan,
+    saat_search,
+)
+from repro.core.topk import merge_topk, sharded_topk_merge, tiled_topk, topk  # noqa: F401

@@ -1,0 +1,160 @@
+"""Vectorized Block-Max document-at-a-time (DAAT) evaluation.
+
+CPU MaxScore / WAND / BMW walk doc-ordered postings and use per-term (and
+per-block) score upper bounds to *skip* documents that cannot enter the top-k.
+Per-document pivoting is meaningless on a 128-lane vector unit, so the TPU
+adaptation works at document-*block* granularity — which is also exactly where
+Block-Max WAND gets its skipping power:
+
+  phase 0   upper bound for every block in one scatter-add over the per-term
+            block-max lists (``ub[b] = sum_t qw_t * blockmax[t, b]``)
+  phase 1   score the ``est_blocks`` highest-ub blocks exactly -> threshold
+            theta = k-th best score
+  phase 2   *skip* every block with ``ub <= theta``; score survivors in
+            chunks of ``block_budget`` inside a ``lax.while_loop`` until
+            rank-safe (``exact=True``) or for one chunk (approximate).
+
+The while_loop trip count is data-dependent: with BM25-like skewed weights few
+blocks survive and the loop exits immediately; with "wacky" learned weights
+the bounds are loose, almost nothing is skippable, and the loop degenerates
+toward exhaustive scoring — reproducing both the paper's DAAT slowdown *and*
+its unpredictable tail latency, structurally, on TPU. ``WorkStats`` exposes
+the survivor counts that quantify the collapse (benchmarks Table 1 / §4.2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.impact_index import ImpactIndex, query_vector
+from repro.core.topk import merge_topk, topk
+
+
+class DaatResult(NamedTuple):
+    scores: jax.Array  # f32[..., k]
+    doc_ids: jax.Array  # i32[..., k]
+    n_survivors: jax.Array  # i32[...] blocks with ub > theta after phase 1
+    blocks_scored: jax.Array  # i32[...] total blocks actually scored
+    chunks: jax.Array  # i32[...] while_loop trip count (tail-latency proxy)
+    rank_safe: jax.Array  # bool[...] all survivors were scored
+
+
+def max_blocks_per_term(index: ImpactIndex) -> int:
+    """Static bound on per-term block-max list length (safety: must not clip)."""
+    return int(jax.device_get(index.term_bm_count.max()))
+
+
+def block_upper_bounds(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    max_bm_per_term: int,
+) -> jax.Array:
+    """BMW-style additive upper bound for every document block. f32[n_blocks]."""
+    n_terms = index.n_terms
+    t = jnp.where(q_weights > 0, q_terms, n_terms)
+    base = index.term_bm_start[t]
+    cnt = jnp.minimum(index.term_bm_count[t], max_bm_per_term)
+    offs = jnp.arange(max_bm_per_term, dtype=jnp.int32)
+    idx = base[:, None] + offs[None, :]
+    valid = offs[None, :] < cnt[:, None]
+    idx = jnp.where(valid, idx, 0)
+    blocks = jnp.where(valid, index.bm_block[idx], 0)
+    w = jnp.where(valid, index.bm_weight[idx] * q_weights[:, None].astype(jnp.float32), 0.0)
+    ub = jnp.zeros((index.n_blocks,), jnp.float32)
+    return ub.at[blocks.reshape(-1)].add(w.reshape(-1))
+
+
+def score_blocks(
+    index: ImpactIndex, qvec: jax.Array, block_ids: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact scores for whole blocks of documents via the doc-major store.
+
+    Returns ``(scores[nb, block_size], doc_ids[nb, block_size])`` with padded
+    documents masked to -inf. The inner op is a gather of query weights by
+    term id + a weighted row reduction — the ``block_score`` Pallas kernel
+    implements the same contraction with VMEM-tiled blocks.
+    """
+    bs = index.block_size
+    docs = block_ids[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
+    terms = index.doc_terms[docs]  # [nb, bs, Tmax]
+    w = index.doc_weights[docs]
+    scores = jnp.sum(qvec[terms] * w, axis=-1)
+    scores = jnp.where(docs < index.n_docs, scores, -jnp.inf)
+    return scores, docs
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks"),
+)
+def blockmax_search(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    k: int,
+    est_blocks: int,
+    block_budget: int,
+    max_bm_per_term: int,
+    exact: bool = True,
+    max_chunks: int | None = None,
+) -> DaatResult:
+    """Batched block-max DAAT top-k. ``q_terms/q_weights: [B, Lq]``."""
+    n_blocks = index.n_blocks
+    est_blocks = min(est_blocks, n_blocks)
+    block_budget = min(block_budget, n_blocks)
+    if max_chunks is None:
+        max_chunks = -(-n_blocks // block_budget)  # ceil: worst case scores all
+
+    def one(qt, qw):
+        qvec = query_vector(index, qt, qw)
+        ub = block_upper_bounds(index, qt, qw, max_bm_per_term)
+
+        # ---- phase 1: seed the top-k pool from the most promising blocks ----
+        _, b1 = topk(ub, est_blocks)
+        s1, d1 = score_blocks(index, qvec, b1)
+        pool_s, pool_i = topk(s1.reshape(-1), k)
+        pool_i = d1.reshape(-1)[pool_i].astype(jnp.int32)
+        theta = pool_s[k - 1]
+        processed = jnp.zeros((n_blocks,), jnp.bool_).at[b1].set(True)
+        survivors0 = jnp.sum((ub > theta) & ~processed).astype(jnp.int32)
+
+        # ---- phase 2: chunked scoring of surviving blocks ----
+        def remaining_ub(processed, theta):
+            return jnp.where(processed, -jnp.inf, ub)
+
+        def cond(state):
+            pool_s, pool_i, processed, theta, chunks = state
+            more = jnp.max(remaining_ub(processed, theta)) > theta
+            return more & (chunks < max_chunks)
+
+        def body(state):
+            pool_s, pool_i, processed, theta, chunks = state
+            rub = remaining_ub(processed, theta)
+            ub_c, b_c = topk(rub, block_budget)
+            live = ub_c > theta  # only these can change the top-k
+            s_c, d_c = score_blocks(index, qvec, b_c)
+            s_c = jnp.where(live[:, None], s_c, -jnp.inf)
+            pool_s, pool_i = merge_topk(
+                pool_s, pool_i, s_c.reshape(-1), d_c.reshape(-1).astype(jnp.int32), k
+            )
+            theta = pool_s[k - 1]
+            processed = processed.at[b_c].set(processed[b_c] | live)
+            return pool_s, pool_i, processed, theta, chunks + 1
+
+        state = (pool_s, pool_i, processed, theta, jnp.int32(0))
+        if exact:
+            pool_s, pool_i, processed, theta, chunks = jax.lax.while_loop(cond, body, state)
+        else:
+            pool_s, pool_i, processed, theta, chunks = jax.lax.cond(
+                cond(state), body, lambda s: s, state
+            )
+        blocks_scored = jnp.sum(processed).astype(jnp.int32)
+        rank_safe = jnp.max(remaining_ub(processed, theta)) <= theta
+        return DaatResult(pool_s, pool_i, survivors0, blocks_scored, chunks, rank_safe)
+
+    return jax.vmap(one)(q_terms, q_weights)

@@ -1,0 +1,51 @@
+"""Exhaustive ranked disjunction — score every document, then top-k.
+
+The paper's side experiment found that for SPLADEv2, WAND and BMW were
+*slower* than exhaustive disjunction (619/681 vs 553 ms): when upper bounds
+cannot prune, pruning machinery is pure overhead. On TPU the exhaustive path
+is a regular, fully-dense contraction (the MXU's home game), so it doubles as
+both the rank-safe oracle for tests and the performance baseline the pruned
+DAAT path must beat — exactly the comparison the paper runs.
+
+Implementation: the doc-major store gives ``score_d = sum_j qvec[term_dj] *
+w_dj`` — one gather + one weighted row-sum over all documents, tiled by block.
+With documents sharded over the ``model`` mesh axis this becomes an
+embarrassingly parallel scan + a k-sized all-gather merge (see
+``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.impact_index import ImpactIndex, query_vector
+from repro.core.topk import topk
+
+
+class ExhaustiveResult(NamedTuple):
+    scores: jax.Array  # f32[..., k]
+    doc_ids: jax.Array  # i32[..., k]
+
+
+def score_all_docs(index: ImpactIndex, qvec: jax.Array) -> jax.Array:
+    """Scores for every (padded) document; pad docs = -inf. f32[n_docs_pad]."""
+    scores = jnp.sum(qvec[index.doc_terms] * index.doc_weights, axis=-1)
+    live = jnp.arange(scores.shape[0], dtype=jnp.int32) < index.n_docs
+    return jnp.where(live, scores, -jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def exhaustive_search(
+    index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array, *, k: int
+) -> ExhaustiveResult:
+    """Batched rank-safe top-k by scoring the full corpus. ``[B, Lq]`` inputs."""
+
+    def one(qt, qw):
+        qvec = query_vector(index, qt, qw)
+        scores, ids = topk(score_all_docs(index, qvec), k)
+        return ExhaustiveResult(scores, ids.astype(jnp.int32))
+
+    return jax.vmap(one)(q_terms, q_weights)

@@ -1,0 +1,154 @@
+"""Anytime score-at-a-time (SAAT) query evaluation — the JASS analogue.
+
+JASS processes impact-ordered posting segments in decreasing order of score
+*contribution* (segment impact x query weight) and stops after ``rho``
+postings, yielding an approximate top-k whose cost — and therefore latency —
+is bounded by construction.
+
+TPU adaptation (DESIGN.md §2): ``rho`` becomes a *static tensor shape*. The
+plan step orders candidate segments by contribution; the execute step maps the
+first ``rho`` posting slots onto (segment, offset) pairs with a vectorized
+``searchsorted`` over the segment-length prefix sum, gathers doc ids, and
+scatter-adds contributions into a dense accumulator. Every query therefore
+executes the *identical* instruction stream — the strongest possible form of
+the paper's "SAAT has predictable latency" claim, and simultaneously the
+straggler-mitigation primitive for multi-pod serving.
+
+The scatter is the hot loop; ``scatter_impl='pallas'`` routes it to the
+one-hot-matmul Pallas kernel (``repro.kernels.impact_scatter``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.impact_index import ImpactIndex
+from repro.core.topk import topk
+
+
+class SaatPlan(NamedTuple):
+    """Per-query segment schedule, ordered by decreasing contribution."""
+
+    starts: jax.Array  # i32[n_cand] posting-store offsets
+    contribs: jax.Array  # f32[n_cand] per-posting score contribution
+    cum_len: jax.Array  # i32[n_cand] inclusive prefix sum of segment lengths
+    total_postings: jax.Array  # i32[] total candidate postings
+
+
+class SaatResult(NamedTuple):
+    scores: jax.Array  # f32[..., k]
+    doc_ids: jax.Array  # i32[..., k]
+    postings_processed: jax.Array  # i32[...]
+    total_postings: jax.Array  # i32[...]
+
+
+def max_segments_per_term(index: ImpactIndex) -> int:
+    """Static bound for plan shapes (index-build-time constant)."""
+    return int(jax.device_get(index.term_seg_count.max()))
+
+
+def saat_plan(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    max_segs_per_term: int,
+) -> SaatPlan:
+    """Build the contribution-ordered segment schedule for one query."""
+    n_terms = index.n_terms
+    t = jnp.where(q_weights > 0, q_terms, n_terms)  # pad slot has no segments
+    base = index.term_seg_start[t]  # [Lq]
+    cnt = jnp.minimum(index.term_seg_count[t], max_segs_per_term)  # [Lq]
+    offs = jnp.arange(max_segs_per_term, dtype=jnp.int32)
+    j = base[:, None] + offs[None, :]  # [Lq, M]
+    valid = offs[None, :] < cnt[:, None]
+    j = jnp.where(valid, j, 0)
+    contrib = index.seg_weight[j] * q_weights[:, None].astype(jnp.float32)
+    contrib = jnp.where(valid, contrib, -jnp.inf)
+    lens = jnp.where(valid, index.seg_len[j], 0)
+    starts = jnp.where(valid, index.seg_start[j], 0)
+
+    flat_c = contrib.reshape(-1)
+    order = jnp.argsort(-flat_c)  # decreasing contribution (JASS order)
+    starts = starts.reshape(-1)[order]
+    lens = lens.reshape(-1)[order]
+    contribs = jnp.where(jnp.isfinite(flat_c[order]), flat_c[order], 0.0)
+    cum = jnp.cumsum(lens, dtype=jnp.int32)
+    return SaatPlan(starts=starts, contribs=contribs, cum_len=cum, total_postings=cum[-1])
+
+
+def _gather_postings(
+    index: ImpactIndex, plan: SaatPlan, rho: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Map posting slots [0, rho) -> (doc_id, contribution, n_processed)."""
+    p = jnp.arange(rho, dtype=jnp.int32)
+    j = jnp.searchsorted(plan.cum_len, p, side="right").astype(jnp.int32)
+    j = jnp.minimum(j, plan.cum_len.shape[0] - 1)
+    prev = jnp.where(j > 0, plan.cum_len[jnp.maximum(j - 1, 0)], 0)
+    offset = p - prev
+    pidx = plan.starts[j] + offset
+    valid = p < plan.total_postings
+    docs = index.doc_ids[jnp.where(valid, pidx, 0)]
+    contribs = jnp.where(valid, plan.contribs[j], 0.0)
+    docs = jnp.where(valid, docs, 0)
+    n_processed = jnp.minimum(plan.total_postings, rho).astype(jnp.int32)
+    return docs, contribs, n_processed
+
+
+def _accumulate(index: ImpactIndex, docs, contribs, scatter_impl: str) -> jax.Array:
+    n_docs_pad = index.doc_terms.shape[0]
+    if scatter_impl == "jnp":
+        acc = jnp.zeros((n_docs_pad,), jnp.float32).at[docs].add(contribs)
+    elif scatter_impl == "sort":
+        # Sort-by-doc then segment-sum: the layout the Pallas kernel assumes.
+        order = jnp.argsort(docs)
+        sd, sc = docs[order], contribs[order]
+        acc = jax.ops.segment_sum(sc, sd, num_segments=n_docs_pad)
+    elif scatter_impl == "pallas":
+        from repro.kernels.impact_scatter import ops as scatter_ops
+
+        acc = scatter_ops.impact_scatter(docs, contribs, n_docs_pad)
+    else:
+        raise ValueError(f"unknown scatter_impl {scatter_impl!r}")
+    return acc
+
+
+def _mask_pad_docs(index: ImpactIndex, acc: jax.Array) -> jax.Array:
+    n_docs_pad = acc.shape[0]
+    live = jnp.arange(n_docs_pad, dtype=jnp.int32) < index.n_docs
+    return jnp.where(live, acc, -jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("k", "rho", "max_segs_per_term", "scatter_impl"))
+def saat_search(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    k: int,
+    rho: int,
+    max_segs_per_term: int,
+    scatter_impl: str = "jnp",
+) -> SaatResult:
+    """Batched anytime SAAT top-k. ``q_terms/q_weights: [B, Lq]``.
+
+    ``rho`` is the JASS posting budget. Exact (rank-safe) evaluation = any
+    ``rho >= index.n_postings`` (the executor stops at the query's own total).
+    """
+
+    def one(qt, qw):
+        plan = saat_plan(index, qt, qw, max_segs_per_term)
+        docs, contribs, n_proc = _gather_postings(index, plan, rho)
+        acc = _accumulate(index, docs, contribs, scatter_impl)
+        scores, ids = topk(_mask_pad_docs(index, acc), k)
+        return SaatResult(scores, ids.astype(jnp.int32), n_proc, plan.total_postings)
+
+    return jax.vmap(one)(q_terms, q_weights)
+
+
+def exact_rho(index: ImpactIndex) -> int:
+    """A rho that guarantees rank-safe evaluation for any query."""
+    return index.n_postings

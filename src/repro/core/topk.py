@@ -1,0 +1,74 @@
+"""Top-k utilities shared by SAAT / DAAT / exhaustive evaluation and recsys.
+
+On TPU there is no min-heap: full ``jax.lax.top_k`` over the accumulator (or a
+tiled two-stage variant for very large candidate sets — see
+``repro.kernels.block_topk`` for the Pallas version) replaces the heap +
+accumulator-page machinery of JASS.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-jnp.inf)
+
+
+def topk(scores: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-k scores and indices (descending). Static k."""
+    k = min(k, scores.shape[-1])
+    return jax.lax.top_k(scores, k)
+
+
+def tiled_topk(scores: jax.Array, k: int, num_tiles: int) -> Tuple[jax.Array, jax.Array]:
+    """Two-stage top-k: per-tile top-k then merge.
+
+    For ``n`` candidates this reduces the sort working set from ``n`` to
+    ``num_tiles * k`` — the pattern used for the recsys ``retrieval_cand``
+    shape (1M candidates) and for sharded document scoring.
+    """
+    n = scores.shape[-1]
+    if n % num_tiles != 0:
+        raise ValueError(f"{n=} not divisible by {num_tiles=}")
+    tile = n // num_tiles
+    if k > tile:
+        raise ValueError(f"{k=} must be <= tile size {tile}")
+    tiles = scores.reshape(scores.shape[:-1] + (num_tiles, tile))
+    s, i = jax.lax.top_k(tiles, k)  # [..., num_tiles, k]
+    base = (jnp.arange(num_tiles, dtype=jnp.int32) * tile)[:, None]
+    gids = i.astype(jnp.int32) + base
+    flat_s = s.reshape(scores.shape[:-1] + (num_tiles * k,))
+    flat_i = gids.reshape(scores.shape[:-1] + (num_tiles * k,))
+    ms, mi = jax.lax.top_k(flat_s, k)
+    return ms, jnp.take_along_axis(flat_i, mi, axis=-1)
+
+
+def merge_topk(
+    scores_a: jax.Array,
+    ids_a: jax.Array,
+    scores_b: jax.Array,
+    ids_b: jax.Array,
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge two top-k pools (e.g. incremental DAAT chunks) into one."""
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1)
+    ms, mi = jax.lax.top_k(s, k)
+    return ms, jnp.take_along_axis(i, mi, axis=-1)
+
+
+def sharded_topk_merge(
+    local_scores: jax.Array, local_ids: jax.Array, k: int, axis_name: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Distributed top-k: all-gather per-shard top-k pools and re-select.
+
+    Used inside ``shard_map`` when documents are sharded across the ``model``
+    mesh axis: each chip computes top-k over its local shard (with globalized
+    doc ids), then the k-sized pools — not the accumulators — cross the ICI.
+    Communication = ``shards * k * 8`` bytes instead of ``n_docs * 4``.
+    """
+    gs = jax.lax.all_gather(local_scores, axis_name, axis=-1, tiled=True)
+    gi = jax.lax.all_gather(local_ids, axis_name, axis=-1, tiled=True)
+    ms, mi = jax.lax.top_k(gs, k)
+    return ms, jnp.take_along_axis(gi, mi, axis=-1)

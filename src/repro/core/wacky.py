@@ -1,0 +1,200 @@
+"""Wacky-weights characterization (paper §4.2, Table 2).
+
+Quantifies *why* learned sparse models break DAAT skipping:
+
+  * Table-2 term statistics (vocab size, total/unique terms per doc/query) —
+    "total" counts the pseudo-document trick's repeats, i.e. the sum of
+    quantized weights.
+  * weight-distribution shape (CV, skewness, entropy, Gini) — learned models
+    produce flatter, heavier-mass distributions than BM25.
+  * block-max tightness: mean over postings of blockmax(t, b) / max(t).
+    Tight-to-1 means a block's bound is no better than the term's global
+    bound, so Block-Max structures cannot skip.
+  * skip opportunity: with the true top-k threshold theta in hand, the
+    fraction of (nonempty) blocks whose upper bound falls below theta — the
+    headroom any DAAT algorithm has. This is the paper's central mechanism,
+    measured directly.
+  * accumulator overflow (16-bit JASS accumulators vs learned weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization
+from repro.core.daat import block_upper_bounds
+from repro.core.exhaustive import exhaustive_search
+from repro.core.impact_index import ImpactIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class TermStats:
+    """One row of the Table 2 analogue."""
+
+    vocab_size: int
+    doc_total_terms: float  # mean sum of (quantized) weights per doc
+    doc_unique_terms: float  # mean nnz per doc
+    query_total_terms: float
+    query_unique_terms: float
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def term_statistics(
+    doc_idx: np.ndarray,
+    term_idx: np.ndarray,
+    weights: np.ndarray,
+    n_docs: int,
+    query_terms: Sequence[np.ndarray],
+    query_weights: Sequence[np.ndarray],
+    quant_bits: int = 8,
+) -> TermStats:
+    """Compute the Table 2 statistics from COO postings + ragged queries."""
+    q, _ = quantization.quantize(weights, quantization.QuantConfig(bits=quant_bits))
+    uniq = np.zeros(n_docs, dtype=np.int64)
+    np.add.at(uniq, doc_idx, 1)
+    total = np.zeros(n_docs, dtype=np.float64)
+    np.add.at(total, doc_idx, q.astype(np.float64))
+    vocab = int(np.unique(term_idx).size)
+    qu = np.array([len(np.asarray(t)) for t in query_terms], dtype=np.float64)
+    qt = []
+    for w in query_weights:
+        w = np.asarray(w, dtype=np.float64)
+        qq, _ = quantization.quantize(w, quantization.QuantConfig(bits=quant_bits))
+        qt.append(float(qq.sum()))
+    return TermStats(
+        vocab_size=vocab,
+        doc_total_terms=float(total.mean()),
+        doc_unique_terms=float(uniq.mean()),
+        query_total_terms=float(np.mean(qt)) if qt else 0.0,
+        query_unique_terms=float(qu.mean()) if qu.size else 0.0,
+    )
+
+
+def weight_distribution_stats(weights: np.ndarray) -> dict:
+    """Shape statistics of a weight population (per retrieval model)."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = w[w > 0]
+    if w.size == 0:
+        return {k: 0.0 for k in ("mean", "std", "cv", "skewness", "kurtosis", "entropy", "gini")}
+    mean, std = float(w.mean()), float(w.std())
+    z = (w - mean) / (std + 1e-12)
+    hist, _ = np.histogram(w, bins=64, density=False)
+    p = hist / max(hist.sum(), 1)
+    p = p[p > 0]
+    ws = np.sort(w)
+    n = ws.size
+    gini = float((2 * np.arange(1, n + 1) - n - 1).dot(ws) / (n * ws.sum() + 1e-12))
+    return {
+        "mean": mean,
+        "std": std,
+        "cv": std / (mean + 1e-12),
+        "skewness": float((z**3).mean()),
+        "kurtosis": float((z**4).mean()) - 3.0,
+        "entropy": float(-(p * np.log2(p)).sum()),
+        "gini": gini,
+    }
+
+
+def blockmax_tightness(index: ImpactIndex) -> dict:
+    """How informative block maxima are. ~1.0 tightness => skipping is dead.
+
+    ``tightness`` averages blockmax/termmax over (term, block) cells weighted
+    uniformly; ``posting_weighted`` weights terms by posting count (what a
+    query actually touches).
+    """
+    bm_w = np.asarray(jax.device_get(index.bm_weight), dtype=np.float64)
+    bm_start = np.asarray(jax.device_get(index.term_bm_start), dtype=np.int64)
+    bm_count = np.asarray(jax.device_get(index.term_bm_count), dtype=np.int64)
+    tmax = np.asarray(jax.device_get(index.term_max_weight), dtype=np.float64)
+    post = np.asarray(jax.device_get(index.term_post_count), dtype=np.float64)
+    V = index.n_terms
+    ratios, weights_uniform, weights_post = [], [], []
+    term_of_cell = np.repeat(np.arange(V + 1), bm_count)
+    tm = tmax[term_of_cell]
+    ok = tm > 0
+    r = bm_w / np.maximum(tm, 1e-12)
+    ratios = r[ok]
+    per_term_cells = bm_count[term_of_cell]
+    weights_post = (post[term_of_cell] / np.maximum(per_term_cells, 1))[ok]
+    return {
+        "tightness": float(ratios.mean()) if ratios.size else 0.0,
+        "posting_weighted": float((ratios * weights_post).sum() / max(weights_post.sum(), 1e-12)),
+        "cells": int(ratios.size),
+        "cells_per_term_mean": float(bm_count[:V][post[:V] > 0].mean()) if V else 0.0,
+    }
+
+
+def skip_opportunity(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    k: int,
+    max_bm_per_term: int,
+) -> dict:
+    """Fraction of candidate blocks a rank-safe DAAT could skip (per query).
+
+    theta is the *true* k-th score (from the exhaustive oracle), i.e. the best
+    threshold any DAAT run could ever reach; the skippable fraction is
+    therefore an upper bound on real skipping. The paper's claim: this
+    collapses for learned-sparse ("wacky") weight distributions.
+    """
+    res = exhaustive_search(index, q_terms, q_weights, k=k)
+    theta = res.scores[:, k - 1]  # [B]
+
+    def one(qt, qw, th):
+        ub = block_upper_bounds(index, qt, qw, max_bm_per_term)
+        nonempty = ub > 0
+        skippable = nonempty & (ub <= th)
+        return (
+            jnp.sum(skippable).astype(jnp.float32) / jnp.maximum(jnp.sum(nonempty), 1),
+            jnp.sum(nonempty).astype(jnp.int32),
+        )
+
+    frac, nonempty = jax.vmap(one)(q_terms, q_weights, theta)
+    frac = np.asarray(jax.device_get(frac), dtype=np.float64)
+    return {
+        "skippable_fraction_mean": float(frac.mean()),
+        "skippable_fraction_p10": float(np.percentile(frac, 10)),
+        "skippable_fraction_p90": float(np.percentile(frac, 90)),
+        "candidate_blocks_mean": float(np.asarray(jax.device_get(nonempty)).mean()),
+    }
+
+
+def accumulator_overflow(index: ImpactIndex, query_weight_max: float = 1.0) -> dict:
+    """The 16-vs-32-bit JASS accumulator observation (paper §3.2)."""
+    sums = np.asarray(jax.device_get(index.doc_weight_sum), dtype=np.float64)
+    sums = sums[: index.n_docs]
+    return quantization.accumulator_analysis(sums, query_weight_max=query_weight_max, bits=16)
+
+
+def full_report(
+    name: str,
+    index: ImpactIndex,
+    doc_weights_raw: np.ndarray,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    k: int = 10,
+    max_bm_per_term: int | None = None,
+) -> dict:
+    """One consolidated wackiness report per retrieval model."""
+    from repro.core.daat import max_blocks_per_term
+
+    if max_bm_per_term is None:
+        max_bm_per_term = max_blocks_per_term(index)
+    return {
+        "model": name,
+        "weights": weight_distribution_stats(doc_weights_raw),
+        "blockmax": blockmax_tightness(index),
+        "skip": skip_opportunity(
+            index, q_terms, q_weights, k=k, max_bm_per_term=max_bm_per_term
+        ),
+        "accumulator": accumulator_overflow(index),
+    }

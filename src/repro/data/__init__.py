@@ -1,0 +1,2 @@
+"""Data substrate: synthetic vocabulary-mismatch corpus + batch pipelines."""
+from repro.data.synthetic import Corpus, CorpusConfig, generate_corpus  # noqa: F401

@@ -1,0 +1,154 @@
+"""Sharded batch pipeline for training (LM / sparse encoder / recsys / GNN).
+
+Host-side numpy generators -> device_put with the mesh's batch shardings.
+Synthetic but *mechanistic* data (see repro.data.synthetic): the sparse
+encoder's triples come from the concept-latent corpus so ranking quality is
+learned, not scripted. All batch shapes are static; iterators are infinite.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import Corpus
+
+
+def lm_token_batches(
+    vocab: int, batch: int, seq: int, seed: int = 0
+) -> Iterator[dict]:
+    """Zipf-distributed synthetic token stream with next-token labels."""
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, vocab + 1, dtype=np.float64) ** 1.1
+    p /= p.sum()
+    while True:
+        toks = rng.choice(vocab, size=(batch, seq + 1), p=p).astype(np.int32)
+        yield {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}
+
+
+@dataclasses.dataclass
+class TripleSampler:
+    """(query, positive doc, negative doc) triples from the synthetic corpus.
+
+    Tokens are surface term ids (the corpus vocabulary IS the token space —
+    no subword stage for the trainable-encoder path). Padded/masked to
+    static lengths.
+    """
+
+    corpus: Corpus
+    q_len: int = 16
+    d_len: int = 64
+    seed: int = 0
+
+    def _pad(self, terms: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
+        out = np.zeros(n, dtype=np.int32)
+        mask = np.zeros(n, dtype=bool)
+        t = terms[:n]
+        out[: t.size] = t
+        mask[: t.size] = True
+        return out, mask
+
+    def batches(self, batch: int) -> Iterator[dict]:
+        rng = np.random.default_rng(self.seed)
+        nq = self.corpus.n_queries
+        while True:
+            rows = {k: [] for k in ("query", "query_mask", "pos", "pos_mask", "neg", "neg_mask")}
+            for _ in range(batch):
+                qi = int(rng.integers(0, nq))
+                d_pos = int(self.corpus.qrels[qi])
+                d_neg = int(rng.integers(0, self.corpus.n_docs))
+                while d_neg == d_pos:
+                    d_neg = int(rng.integers(0, self.corpus.n_docs))
+                q, qm = self._pad(self.corpus.query_terms[qi], self.q_len)
+                dp, dpm = self._pad(self.corpus.doc(d_pos)[0], self.d_len)
+                dn, dnm = self._pad(self.corpus.doc(d_neg)[0], self.d_len)
+                for k, v in zip(rows, (q, qm, dp, dpm, dn, dnm)):
+                    rows[k].append(v)
+            yield {k: jnp.asarray(np.stack(v)) for k, v in rows.items()}
+
+    def doc_token_batches(self, batch: int) -> Iterator[tuple]:
+        """All corpus docs in order (for corpus encoding), padded batches."""
+        n = self.corpus.n_docs
+        for lo in range(0, n, batch):
+            hi = min(lo + batch, n)
+            toks = np.zeros((batch, self.d_len), dtype=np.int32)
+            mask = np.zeros((batch, self.d_len), dtype=bool)
+            for i, d in enumerate(range(lo, hi)):
+                t, m = self._pad(self.corpus.doc(d)[0], self.d_len)
+                toks[i], mask[i] = t, m
+            yield jnp.asarray(toks), jnp.asarray(mask), hi - lo
+
+
+def recsys_batches(cfg, batch: int, seed: int = 0) -> Iterator[dict]:
+    """Synthetic recsys batches with a learnable preference signal."""
+    rng = np.random.default_rng(seed)
+    total = cfg.table.total_rows
+    while True:
+        if cfg.kind == "dcn-v2":
+            dense = rng.normal(size=(batch, cfg.n_dense)).astype(np.float32)
+            sparse = rng.integers(0, 1 << 30, (batch, cfg.table.n_slots)).astype(np.int32)
+            y = (dense[:, 0] + (sparse[:, 0] % 7 == 0) > 0.5).astype(np.float32)
+            b = {"dense": dense, "sparse": sparse, "label": y}
+        elif cfg.kind == "din":
+            hist = rng.integers(0, 1 << 30, (batch, cfg.seq_len)).astype(np.int32)
+            mask = rng.random((batch, cfg.seq_len)) > 0.2
+            tgt = np.where(
+                rng.random(batch) < 0.5, hist[:, 0], rng.integers(0, 1 << 30, batch)
+            ).astype(np.int32)
+            y = (tgt == hist[:, 0]).astype(np.float32)
+            b = {"hist": hist, "hist_mask": mask, "target": tgt, "label": y}
+        elif cfg.kind == "sasrec":
+            seq = rng.integers(0, 1 << 30, (batch, cfg.seq_len)).astype(np.int32)
+            pos = np.roll(seq, -1, axis=1)
+            neg = rng.integers(0, 1 << 30, (batch, cfg.seq_len)).astype(np.int32)
+            b = {
+                "seq": seq,
+                "pos": pos,
+                "neg": neg,
+                "mask": np.ones((batch, cfg.seq_len), dtype=bool),
+            }
+        elif cfg.kind == "wide-deep":
+            sparse = rng.integers(0, 1 << 30, (batch, cfg.table.n_slots)).astype(np.int32)
+            y = ((sparse[:, 0] % 5 == 0) | (sparse[:, 1] % 3 == 0)).astype(np.float32)
+            b = {"sparse": sparse, "label": y}
+        else:
+            raise ValueError(cfg.kind)
+        yield {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def gnn_batches(cfg, n_nodes: int, n_edges: int, seed: int = 0, graph_readout_graphs: int = 0):
+    """Synthetic graph batches (fixed topology, fresh features per step)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    w_true = rng.normal(size=(cfg.d_feat, cfg.n_vars)).astype(np.float32) * 0.3
+    while True:
+        feats = rng.normal(size=(n_nodes, cfg.d_feat)).astype(np.float32)
+        node_targets = feats @ w_true + 0.05 * rng.normal(size=(n_nodes, cfg.n_vars)).astype(np.float32)
+        b = {
+            "node_feats": jnp.asarray(feats),
+            "edge_src": jnp.asarray(src),
+            "edge_dst": jnp.asarray(dst),
+            "edge_feats": jnp.asarray(rng.normal(size=(n_edges, cfg.d_edge_feat)).astype(np.float32)),
+        }
+        if graph_readout_graphs:
+            gid = np.sort(rng.integers(0, graph_readout_graphs, n_nodes)).astype(np.int32)
+            b["graph_ids"] = jnp.asarray(gid)
+            b["targets"] = jnp.asarray(
+                rng.normal(size=(graph_readout_graphs, cfg.n_vars)).astype(np.float32)
+            )
+        else:
+            b["targets"] = jnp.asarray(node_targets)
+        yield b
+
+
+def shard_batch(batch, mesh, shardings=None):
+    """device_put a host batch with the mesh's batch shardings."""
+    if shardings is None:
+        from repro.distributed.sharding import batch_shardings
+
+        shardings = batch_shardings(batch, mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), batch, shardings)

@@ -1,0 +1,27 @@
+"""Distribution layer: sharding rules, collectives, elastic/fault tolerance."""
+from repro.distributed.collectives import (  # noqa: F401
+    CompressionConfig,
+    compress_decompress,
+    compressed_psum,
+    dequantize_int8,
+    make_error_feedback_transform,
+    quantize_int8,
+    reduce_scatter_grads,
+)
+from repro.distributed.elastic import (  # noqa: F401
+    MeshTopology,
+    best_effort_mesh,
+    data_parallel_liveness,
+    reshard_state,
+)
+from repro.distributed.sharding import (  # noqa: F401
+    batch_dim_sharding,
+    batch_shardings,
+    cache_shardings,
+    constraint,
+    fully_sharded_dim,
+    mesh_axes,
+    param_shardings,
+    param_specs,
+    train_state_shardings,
+)

@@ -1,0 +1,78 @@
+"""Elastic scaling + straggler/failure handling (1000+-node posture).
+
+The recovery model:
+  * **Training**: state lives in sharded checkpoints (repro.checkpoint). On
+    node failure the job restarts on whatever slice survives;
+    ``reshard_state`` device_puts the restored pytree onto the *new* mesh's
+    shardings — shard counts need not match (the checkpoint stores full
+    logical arrays per leaf, host-side; resharding is a placement decision).
+  * **Serving**: stateless — each chip owns a doc shard of the impact index;
+    losing a pod shrinks the corpus until re-shard, never corrupts results.
+    The SAAT rho budget doubles as straggler mitigation: work per chip is
+    fixed by construction (repro.serving).
+  * **Liveness**: `data_parallel_liveness` is the psum-of-ones barrier used
+    to detect and exclude failed data-parallel ranks between steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed import sharding as shlib
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """Declarative mesh request; ``build`` degrades to the devices present."""
+
+    pods: int
+    data: int
+    model: int
+
+    def shape(self, multi_pod: bool) -> tuple:
+        return (self.pods, self.data, self.model) if multi_pod else (self.data, self.model)
+
+    def axis_names(self, multi_pod: bool) -> tuple:
+        return ("pod", "data", "model") if multi_pod else ("data", "model")
+
+
+def best_effort_mesh(topo: MeshTopology, *, multi_pod: bool = False) -> Mesh:
+    """Build the requested mesh, shrinking the data axis if devices are lost.
+
+    Elastic policy: the model axis is load-bearing (params are TP-sharded at
+    a fixed degree) so it is preserved; lost capacity comes out of the
+    data-parallel axes (smaller global batch, same model math).
+    """
+    n = len(jax.devices())
+    want = topo.shape(multi_pod)
+    need = 1
+    for s in want:
+        need *= s
+    if n >= need:
+        return jax.make_mesh(want, topo.axis_names(multi_pod))
+    # shrink data axis to the largest degree that fits
+    model = topo.model
+    pods = topo.pods if multi_pod else 1
+    data = max(1, n // (model * pods))
+    shape = (pods, data, model) if multi_pod else (data, model)
+    return jax.make_mesh(shape, topo.axis_names(multi_pod))
+
+
+def reshard_state(state: Any, family: str, new_mesh: Mesh):
+    """Place a (restored, host-resident) TrainState onto a new mesh."""
+    from repro.distributed.sharding import train_state_shardings
+
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+    sh = train_state_shardings(abstract, family, new_mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
+
+
+def data_parallel_liveness(axis_name: str = "data") -> jax.Array:
+    """Inside shard_map: count live data-parallel ranks (barrier + census)."""
+    return jax.lax.psum(jnp.ones((), jnp.int32), axis_name)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  impact_scatter  SAAT accumulation: one-hot-matmul scatter-add (MXU)
+  sparse_score    DAAT/exhaustive: match-and-accumulate block scoring
+  block_prune     DAAT: fused block upper-bound matmul + theta threshold
+  block_topk      tiled two-stage top-k over huge accumulator/candidate sets
+
+Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
+``ops.py`` (jit'd wrapper, padding, interpret-mode selection) and ``ref.py``
+(pure-jnp oracle used by the allclose sweep tests).
+"""
+from repro.kernels.block_prune import block_prune  # noqa: F401
+from repro.kernels.block_topk import block_topk  # noqa: F401
+from repro.kernels.impact_scatter import impact_scatter  # noqa: F401
+from repro.kernels.sparse_score import sparse_score  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.block_prune.ops import block_prune  # noqa: F401

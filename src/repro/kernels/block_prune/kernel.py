@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: fused Block-Max upper bound + threshold prune.
+
+The whole WAND/BMW "pivot" machinery collapses, on TPU, into one fused pass
+per query: a [1, Lq] x [Lq, NB] matmul producing every block's additive score
+upper bound, immediately compared against the running top-k threshold theta.
+The survive mask drives which blocks the ``sparse_score`` kernel actually
+scores — so the *measured* number of surviving blocks is precisely the
+paper's "how much can DAAT skip" quantity.
+
+Grid tiles the block axis; the query column (Lq) stays resident in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prune_kernel(bm_ref, qw_ref, theta_ref, ub_ref, mask_ref):
+    bm = bm_ref[...].astype(jnp.float32)  # [Lq, NBt]
+    qw = qw_ref[...].astype(jnp.float32)  # [1, Lq]
+    theta = theta_ref[0, 0]
+    ub = jnp.dot(qw, bm, preferred_element_type=jnp.float32)  # [1, NBt]
+    ub_ref[...] = ub
+    mask_ref[...] = ((ub > theta) & (ub > 0)).astype(jnp.int32)
+
+
+def block_prune_kernel(
+    blockmax: jax.Array,  # f32[Lq, NB]
+    q_weights: jax.Array,  # f32[Lq]
+    theta: jax.Array,  # f32[]
+    *,
+    block_nb: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    lq, nb = blockmax.shape
+    assert nb % block_nb == 0, (nb, block_nb)
+    grid = (nb // block_nb,)
+    ub, mask = pl.pallas_call(
+        _prune_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((lq, block_nb), lambda i: (0, i)),
+            pl.BlockSpec((1, lq), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_nb), lambda i: (0, i)),
+            pl.BlockSpec((1, block_nb), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, nb), jnp.float32),
+            jax.ShapeDtypeStruct((1, nb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blockmax, q_weights.reshape(1, lq), theta.reshape(1, 1))
+    return ub[0], mask[0]

@@ -1,0 +1,35 @@
+"""jit'd wrapper around the fused block-prune kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_prune.kernel import block_prune_kernel
+from repro.kernels.common import interpret_default, pad_axis
+
+
+@partial(jax.jit, static_argnames=("block_nb", "interpret"))
+def block_prune(
+    blockmax: jax.Array,
+    q_weights: jax.Array,
+    theta: jax.Array,
+    *,
+    block_nb: int = 2048,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """(ub, survive_mask) over doc blocks; see kernel module docstring."""
+    if interpret is None:
+        interpret = interpret_default()
+    lq, nb = blockmax.shape
+    block_nb = min(block_nb, max(128, nb))
+    bm = pad_axis(blockmax.astype(jnp.float32), 1, block_nb, fill=0.0)
+    ub, mask = block_prune_kernel(
+        bm,
+        q_weights.astype(jnp.float32),
+        jnp.asarray(theta, jnp.float32),
+        block_nb=block_nb,
+        interpret=interpret,
+    )
+    return ub[:nb], mask[:nb].astype(jnp.bool_)

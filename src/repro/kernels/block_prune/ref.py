@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused block upper-bound + prune pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_prune_ref(
+    blockmax: jax.Array,  # f32[Lq, n_blocks] per-query-term block maxima
+    q_weights: jax.Array,  # f32[Lq]
+    theta: jax.Array,  # f32[] current top-k threshold
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (ub[n_blocks], survive_mask[n_blocks]).
+
+    ub[b] = sum_i qw_i * blockmax[i, b]; survive = ub > theta. Blocks with
+    ub == 0 (no query term present) never survive.
+    """
+    ub = jnp.einsum("i,ib->b", q_weights.astype(jnp.float32), blockmax.astype(jnp.float32))
+    survive = (ub > theta) & (ub > 0)
+    return ub, survive

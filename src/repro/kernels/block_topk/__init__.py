@@ -1,0 +1,1 @@
+from repro.kernels.block_topk.ops import block_topk  # noqa: F401

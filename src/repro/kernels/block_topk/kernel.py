@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: tiled top-k over a large score vector.
+
+The JASS min-heap has no TPU analogue; the idiomatic replacement for top-k
+over millions of accumulators (8.8M docs, 1M recsys candidates) is a
+two-stage select: per-tile top-k entirely in VMEM, then a small host-side
+(or XLA) merge over ``num_tiles * k`` finalists. This kernel is stage 1; the
+``ops`` wrapper fuses stage 2 with ``lax.top_k`` over the finalists.
+
+Per-tile selection uses ``jax.lax.top_k`` *inside* the kernel over the VMEM
+tile — lowered by Mosaic to an on-chip sort network — so each grid step reads
+its tile from HBM exactly once: the pass is strictly memory-bound at
+``4 bytes/score``, the roofline floor for any selection algorithm.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(scores_ref, out_s_ref, out_i_ref, *, k: int):
+    i = pl.program_id(0)
+    tile = scores_ref[0, :]  # f32[T]
+    t = tile.shape[0]
+    s, idx = jax.lax.top_k(tile, k)
+    out_s_ref[0, :] = s
+    out_i_ref[0, :] = idx.astype(jnp.int32) + i * t
+
+
+def block_topk_kernel(
+    scores: jax.Array,  # f32[n], n % tile == 0
+    *,
+    k: int,
+    tile: int = 8192,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    n = scores.shape[0]
+    assert n % tile == 0 and k <= tile, (n, tile, k)
+    n_tiles = n // tile
+    s, i = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores.reshape(n_tiles, tile))
+    return s, i

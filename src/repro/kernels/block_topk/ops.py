@@ -1,0 +1,35 @@
+"""jit'd wrapper: two-stage top-k (Pallas per-tile select + finalist merge)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_topk.kernel import block_topk_kernel
+from repro.kernels.common import interpret_default, pad_axis
+
+
+@partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def block_topk(
+    scores: jax.Array,
+    k: int,
+    *,
+    tile: int = 8192,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k over a 1-D score vector of any length. (scores, ids)."""
+    if interpret is None:
+        interpret = interpret_default()
+    n = scores.shape[0]
+    tile = min(tile, max(128, n))
+    k_eff = min(k, n)
+    s = pad_axis(scores.astype(jnp.float32), 0, tile, fill=-jnp.inf)
+    k_tile = min(max(k_eff, 1), tile)
+    ts, ti = block_topk_kernel(s, k=k_tile, tile=tile, interpret=interpret)
+    fs, fi = jax.lax.top_k(ts.reshape(-1), k_eff)
+    ids = ti.reshape(-1)[fi]
+    if k_eff < k:  # pad to requested k for shape stability
+        fs = jnp.concatenate([fs, jnp.full((k - k_eff,), -jnp.inf, fs.dtype)])
+        ids = jnp.concatenate([ids, jnp.zeros((k - k_eff,), ids.dtype)])
+    return fs, ids

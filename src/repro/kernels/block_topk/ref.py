@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the tiled top-k selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_topk_ref(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k (descending scores, int32 indices)."""
+    s, i = jax.lax.top_k(scores, k)
+    return s, i.astype(jnp.int32)

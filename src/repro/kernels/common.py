@@ -1,0 +1,30 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU in interpret mode — ``interpret_default()`` picks the right
+mode so tests/benchmarks run anywhere while the lowered TPU path stays intact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interpret_default() -> bool:
+    """Interpret kernels when not running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def pad_axis(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
+    """Pad one axis up to a multiple (TPU tile alignment)."""
+    n = x.shape[axis]
+    target = round_up(n, multiple)
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads, constant_values=fill)

@@ -1,0 +1,1 @@
+from repro.kernels.impact_scatter.ops import impact_scatter  # noqa: F401

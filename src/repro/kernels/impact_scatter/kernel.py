@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: SAAT accumulator scatter-add as one-hot matmul.
+
+TPUs have no fast random scatter; the idiomatic translation is a *one-hot
+matmul*: for a VMEM tile of postings ``(doc_ids[TP], contribs[TP])`` and an
+accumulator block of ``BD`` documents, the partial update is
+
+    acc[BD] += onehot(doc_ids - block_start)[BD, TP] @ contribs[TP, 1]
+
+which runs on the MXU. The grid is (doc_blocks x posting_tiles); the
+accumulator block stays resident in VMEM across the inner posting-tile loop
+(output revisiting), so HBM traffic is one read of the postings plus one
+write of the accumulator.
+
+Skip optimization (the SAAT analogue of postings being doc-sorted inside a
+segment): when the caller pre-sorts postings by doc id it also passes per-tile
+[min_doc, max_doc+1) ranges; tiles that do not overlap the current accumulator
+block skip the matmul entirely via ``pl.when``. For contribution-ordered
+(unsorted) postings the ranges degenerate to [0, n_docs) and every (block,
+tile) cell does work — correct, just slower, mirroring CPU JASS where the
+accumulator table absorbs the random access.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scatter_kernel(ranges_ref, docs_ref, contribs_ref, acc_ref, *, block_d: int):
+    d = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    block_start = d * block_d
+    tile_lo = ranges_ref[0, 0]
+    tile_hi = ranges_ref[0, 1]
+    overlaps = (tile_lo < block_start + block_d) & (tile_hi > block_start)
+
+    @pl.when(overlaps)
+    def _accumulate():
+        docs = docs_ref[0, :]  # i32[TP]
+        c = contribs_ref[0, :]  # f32[TP]
+        local = docs - block_start
+        bd = acc_ref.shape[1]
+        tp = docs.shape[0]
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, (bd, tp), 0)
+        onehot = (row_ids == local[None, :]).astype(jnp.float32)
+        partial = jnp.dot(onehot, c[:, None], preferred_element_type=jnp.float32)  # [BD, 1]
+        acc_ref[0, :] += partial[:, 0]
+
+
+def impact_scatter_kernel(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    tile_ranges: jax.Array,
+    *,
+    n_docs: int,
+    block_d: int = 512,
+    tile_p: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter-add ``contribs`` into a dense accumulator. See module docstring.
+
+    Args:
+      doc_ids: i32[P], P % tile_p == 0, values in [0, n_docs).
+      contribs: f32[P].
+      tile_ranges: i32[P // tile_p, 2] per-tile [min_doc, max_doc+1) bounds.
+      n_docs: accumulator length; must be % block_d == 0.
+    """
+    P = doc_ids.shape[0]
+    assert P % tile_p == 0, (P, tile_p)
+    assert n_docs % block_d == 0, (n_docs, block_d)
+    n_tiles = P // tile_p
+    n_blocks = n_docs // block_d
+
+    grid = (n_blocks, n_tiles)
+    docs2d = doc_ids.reshape(n_tiles, tile_p)
+    c2d = contribs.astype(jnp.float32).reshape(n_tiles, tile_p)
+
+    out = pl.pallas_call(
+        functools.partial(_scatter_kernel, block_d=block_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda d, t: (t, 0)),
+            pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
+            pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda d, t: (d, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, block_d), jnp.float32),
+        interpret=interpret,
+    )(tile_ranges, docs2d, c2d)
+    return out.reshape(n_docs)

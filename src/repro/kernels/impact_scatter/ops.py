@@ -1,0 +1,67 @@
+"""jit'd wrapper around the impact-scatter Pallas kernel.
+
+Handles padding, the optional doc-sort (which enables the kernel's
+(block x tile) skip ranges), and interpret-mode selection so the same call
+site works on CPU tests and TPU deployments.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, pad_axis, round_up
+from repro.kernels.impact_scatter.kernel import impact_scatter_kernel
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_docs", "block_d", "tile_p", "sort_by_doc", "interpret"),
+)
+def impact_scatter(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    *,
+    block_d: int = 512,
+    tile_p: int = 512,
+    sort_by_doc: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """acc[d] = sum of contribs with doc_id == d, via the Pallas kernel.
+
+    ``sort_by_doc=True`` sorts postings by doc id first so each posting tile
+    covers a narrow doc range and the kernel skips non-overlapping accumulator
+    blocks — turning the O(blocks x tiles) grid into an effectively linear
+    pass. The sort itself is a standard XLA sort (fused, HBM-bandwidth bound).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_docs_pad = round_up(max(n_docs, block_d), block_d)
+    docs = doc_ids.astype(jnp.int32)
+    c = contribs.astype(jnp.float32)
+    if sort_by_doc:
+        order = jnp.argsort(docs)
+        docs, c = docs[order], c[order]
+    docs = pad_axis(docs, 0, tile_p, fill=0)
+    c = pad_axis(c, 0, tile_p, fill=0.0)
+    n_tiles = docs.shape[0] // tile_p
+    tiles = docs.reshape(n_tiles, tile_p)
+    if sort_by_doc:
+        ranges = jnp.stack([tiles.min(axis=1), tiles.max(axis=1) + 1], axis=1)
+    else:
+        ranges = jnp.stack(
+            [jnp.zeros((n_tiles,), jnp.int32), jnp.full((n_tiles,), n_docs_pad, jnp.int32)],
+            axis=1,
+        )
+    acc = impact_scatter_kernel(
+        docs,
+        c,
+        ranges.astype(jnp.int32),
+        n_docs=n_docs_pad,
+        block_d=block_d,
+        tile_p=tile_p,
+        interpret=interpret,
+    )
+    return acc[:n_docs]

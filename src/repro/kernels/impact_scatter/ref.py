@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the SAAT impact-scatter accumulation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def impact_scatter_ref(doc_ids: jax.Array, contribs: jax.Array, n_docs: int) -> jax.Array:
+    """acc[d] = sum of contribs whose doc_id == d. f32[n_docs].
+
+    ``doc_ids`` entries must lie in [0, n_docs); masked-out postings are
+    expected to carry contribution 0 (they may alias doc 0 harmlessly).
+    """
+    acc = jnp.zeros((n_docs,), jnp.float32)
+    return acc.at[doc_ids].add(contribs.astype(jnp.float32))

@@ -1,0 +1,1 @@
+from repro.kernels.sparse_score.ops import sparse_score  # noqa: F401

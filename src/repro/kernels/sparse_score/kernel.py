@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: match-and-accumulate sparse document scoring.
+
+The DAAT phase-2 / exhaustive hot loop is, per document d:
+
+    score_d = sum_j w_dj * qweight(term_dj)
+
+On CPU this is a gather through a query hash table. The TPU-native version
+avoids the vocab-sized gather entirely: the (tiny) query lives in VMEM as
+``(q_terms[Lq], q_weights[Lq])`` and term matching becomes an equality
+compare + contraction over Lq:
+
+    qv[BD, Tmax]   = (doc_terms[BD, Tmax, 1] == q_terms[Lq]) @ q_weights
+    score[BD]      = sum_j qv * w
+
+Both contractions are MXU/VPU friendly; the working set per grid step is the
+``(BD, Tmax)`` doc tile + the ``(BD*Tmax, Lq)`` one-hot — BlockSpec sizes are
+chosen so this fits VMEM (default 128x64x32 fp32 = 1 MiB). Vocabulary size
+never appears in the kernel: the same code serves the 27k-term SPLADE index
+and the 3.9M-term BM25-T5 index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(dt_ref, dw_ref, qt_ref, qw_ref, out_ref):
+    terms = dt_ref[...]  # i32[BD, Tmax]
+    w = dw_ref[...].astype(jnp.float32)  # [BD, Tmax]
+    qt = qt_ref[0, :]  # i32[Lq]
+    qw = qw_ref[0, :].astype(jnp.float32)  # [Lq]
+    bd, tmax = terms.shape
+    lq = qt.shape[0]
+    onehot = (terms.reshape(bd * tmax, 1) == qt[None, :]).astype(jnp.float32)  # [BD*Tmax, Lq]
+    qv = jnp.dot(onehot, qw[:, None], preferred_element_type=jnp.float32)  # [BD*Tmax, 1]
+    scores = jnp.sum(qv.reshape(bd, tmax) * w, axis=-1, keepdims=True)  # [BD, 1]
+    out_ref[...] = scores
+
+
+def sparse_score_kernel(
+    doc_terms: jax.Array,
+    doc_weights: jax.Array,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scores for N docs against one query. N % block_d == 0. f32[N]."""
+    n, tmax = doc_terms.shape
+    assert n % block_d == 0, (n, block_d)
+    lq = q_terms.shape[0]
+    grid = (n // block_d,)
+    out = pl.pallas_call(
+        functools.partial(_score_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, tmax), lambda i: (i, 0)),
+            pl.BlockSpec((block_d, tmax), lambda i: (i, 0)),
+            pl.BlockSpec((1, lq), lambda i: (0, 0)),
+            pl.BlockSpec((1, lq), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_d, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=interpret,
+    )(doc_terms, doc_weights, q_terms.reshape(1, lq), q_weights.reshape(1, lq))
+    return out[:, 0]

@@ -1,0 +1,38 @@
+"""jit'd wrapper around the match-and-accumulate scorer kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default, pad_axis
+from repro.kernels.sparse_score.kernel import sparse_score_kernel
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sparse_score(
+    doc_terms: jax.Array,
+    doc_weights: jax.Array,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    block_d: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Scores for N docs vs one query via the Pallas kernel. f32[N].
+
+    Pads N to the doc-block multiple and Lq to the lane width; padded query
+    slots must carry weight 0 (ops enforces it), padded doc rows score 0 and
+    are sliced off.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n = doc_terms.shape[0]
+    dt = pad_axis(doc_terms.astype(jnp.int32), 0, block_d, fill=-1)
+    dw = pad_axis(doc_weights.astype(jnp.float32), 0, block_d, fill=0.0)
+    qt = pad_axis(q_terms.astype(jnp.int32), 0, 128, fill=-2)
+    qw = pad_axis(q_weights.astype(jnp.float32), 0, 128, fill=0.0)
+    qw = jnp.where(qt == -2, 0.0, qw)
+    scores = sparse_score_kernel(dt, dw, qt, qw, block_d=block_d, interpret=interpret)
+    return scores[:n]

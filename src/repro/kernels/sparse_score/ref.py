@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the match-and-accumulate document scorer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sparse_score_ref(
+    doc_terms: jax.Array,  # i32[N, Tmax] (pad slot = any id with weight 0)
+    doc_weights: jax.Array,  # f32[N, Tmax]
+    q_terms: jax.Array,  # i32[Lq]
+    q_weights: jax.Array,  # f32[Lq] (0 for padding slots)
+) -> jax.Array:
+    """score_d = sum_j w_dj * sum_i [term_dj == q_i] * qw_i. f32[N]."""
+    eq = doc_terms[:, :, None] == q_terms[None, None, :]
+    qv = jnp.sum(jnp.where(eq, q_weights[None, None, :].astype(jnp.float32), 0.0), axis=-1)
+    return jnp.sum(qv * doc_weights.astype(jnp.float32), axis=-1)

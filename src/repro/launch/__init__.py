@@ -1,0 +1,6 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import — never import it
+from code that needs the real device count.
+"""
+from repro.launch.mesh import make_production_mesh, mesh_for, n_chips  # noqa: F401

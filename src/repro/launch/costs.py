@@ -1,0 +1,351 @@
+"""Roofline cost accounting.
+
+XLA's HloCostAnalysis counts every while-loop body ONCE (verified: an 8-step
+``lax.scan`` of a 512^3 matmul reports 1/8 of the true FLOPs), and our layer
+stacks, loss chunking, attention chunking and grad accumulation are all
+scans. Three consequences, three fixes:
+
+  * **FLOPs**: computed analytically from the model config + cell shape —
+    an exact matmul inventory (attention, FFN/MoE-with-capacity, vocab
+    projections, interaction layers) times the fwd/bwd/remat multiplier.
+    XLA's raw (loop-undercounting) counter is recorded alongside.
+  * **HBM bytes**: analytic lower-bound traffic model (documented per
+    family): parameter reads/writes (incl. optimizer state), activation
+    read/write per layer, embedding gathers, KV-cache traffic. This is the
+    roofline *denominator* convention: best-achievable traffic, so the
+    memory term is a true lower bound on step time.
+  * **Collective bytes**: parsed from post-SPMD HLO with **while-loop trip
+    multiplication** — each computation's collective bytes are scaled by the
+    product of trip counts of the while loops enclosing it (trip counts are
+    recovered from each loop condition's ROOT compare against a constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs
+# ---------------------------------------------------------------------------
+
+
+def _lm_layer_matmul_flops_per_token(cfg) -> float:
+    """Projection + FFN matmul FLOPs for ONE token through ONE layer (fwd)."""
+    d, hd = cfg.d_model, cfg.d_head
+    attn = 2.0 * d * cfg.n_heads * hd  # wq
+    attn += 2.0 * 2.0 * d * cfg.n_kv_heads * hd  # wk, wv
+    attn += 2.0 * cfg.n_heads * hd * d  # wo
+    if cfg.moe is not None:
+        m = cfg.moe
+        # HLO computes the full capacity buffer: E * C tokens of expert work,
+        # C = T*K/E * capacity_factor  =>  per source token: K * cf experts
+        ffn = 3.0 * 2.0 * d * m.d_expert_ff * m.top_k * m.capacity_factor
+        ffn += 2.0 * d * m.n_experts  # router
+        if m.n_shared:
+            ffn += 3.0 * 2.0 * d * m.d_expert_ff * m.n_shared
+    else:
+        ffn = 3.0 * 2.0 * d * cfg.d_ff
+    return attn + ffn
+
+
+def _lm_attention_flops_per_token(cfg, seq: int, context: Optional[int] = None) -> float:
+    """Score + AV einsum FLOPs per *query* token (fwd), summed over layers."""
+    total = 0.0
+    for l in range(cfg.n_layers):
+        w = cfg.layer_window(l)
+        if context is not None:  # decode: attend over the cache
+            s_eff = min(w, context) if w > 0 else context
+        else:  # full causal self-attention averages S/2 visible keys
+            s_eff = min(w, seq) if w > 0 else seq / 2.0
+        total += 2.0 * 2.0 * s_eff * cfg.n_heads * cfg.d_head
+    return total
+
+
+def _remat_mult(cfg) -> float:
+    # fwd(1) + bwd(2) (+ recompute fwd(1) under full remat)
+    return {"none": 3.0, "dots": 3.5, "full": 4.0}.get(getattr(cfg, "remat", "none"), 3.0)
+
+
+def lm_train_flops(cfg, batch: int, seq: int) -> float:
+    tokens = batch * seq
+    per_tok = cfg.n_layers * _lm_layer_matmul_flops_per_token(cfg)
+    attn = _lm_attention_flops_per_token(cfg, seq) * tokens
+    body = (per_tok * tokens + attn) * _remat_mult(cfg)
+    logits = 2.0 * cfg.d_model * cfg.vocab * tokens * 3.0  # loss is outside remat
+    embed_bwd = 2.0 * cfg.d_model * tokens  # scatter-add grads (cheap)
+    return body + logits + embed_bwd
+
+
+def lm_prefill_flops(cfg, batch: int, seq: int) -> float:
+    tokens = batch * seq
+    per_tok = cfg.n_layers * _lm_layer_matmul_flops_per_token(cfg)
+    attn = _lm_attention_flops_per_token(cfg, seq) * tokens
+    logits = 2.0 * cfg.d_model * cfg.vocab * batch  # last position only
+    return per_tok * tokens + attn + logits
+
+
+def lm_decode_flops(cfg, batch: int, context: int) -> float:
+    per_tok = cfg.n_layers * _lm_layer_matmul_flops_per_token(cfg)
+    attn = _lm_attention_flops_per_token(cfg, 1, context=context)
+    logits = 2.0 * cfg.d_model * cfg.vocab
+    return (per_tok + attn + logits) * batch
+
+
+def gnn_train_flops(cfg, n_nodes: int, n_edges: int) -> float:
+    h = cfg.d_hidden
+    enc = n_nodes * (cfg.d_feat + h) * h + n_edges * (cfg.d_edge_feat + h) * h
+    per_layer = n_edges * (3 * h + h) * h + n_nodes * (2 * h + h) * h
+    dec = n_nodes * (h * h + h * cfg.n_vars)
+    fwd = 2.0 * (enc + cfg.n_layers * per_layer + dec)
+    mult = 4.0 if cfg.remat != "none" else 3.0
+    return fwd * mult
+
+
+def recsys_dense_params(cfg) -> int:
+    """Interaction/MLP params (excludes the embedding table + wide vector)."""
+    import numpy as np
+    import jax
+
+    from repro.archs.recsys import abstract_params
+
+    p = abstract_params(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(p):
+        k = jax.tree_util.keystr(path)
+        if "table" in k or "wide" in k or "pos_embed" in k:
+            continue
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+def recsys_forward_flops(cfg, batch: int) -> float:
+    dense = recsys_dense_params(cfg)
+    if cfg.kind == "din":
+        # attention MLP runs per history position; split params by module
+        per_hist = 0
+        import numpy as np
+        import jax
+
+        from repro.archs.recsys import abstract_params
+
+        p = abstract_params(cfg)
+        attn_p = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(p["attn"]))
+        rest = dense - attn_p
+        return 2.0 * batch * (attn_p * cfg.seq_len + rest)
+    if cfg.kind == "sasrec":
+        per_pos = dense  # blocks run per sequence position
+        attn_quad = 2.0 * 2.0 * cfg.seq_len * cfg.embed_dim * cfg.n_blocks
+        return 2.0 * batch * cfg.seq_len * (per_pos + attn_quad) / 1.0
+    return 2.0 * batch * dense
+
+
+def recsys_train_flops(cfg, batch: int) -> float:
+    return 3.0 * recsys_forward_flops(cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM bytes (lower-bound traffic)
+# ---------------------------------------------------------------------------
+
+
+def _dtype_bytes(cfg) -> int:
+    import jax.numpy as jnp
+
+    return jnp.dtype(getattr(cfg, "dtype", jnp.float32)).itemsize
+
+
+def lm_train_bytes(cfg, batch: int, seq: int) -> float:
+    b = _dtype_bytes(cfg)
+    tokens = batch * seq
+    p = cfg.n_params()
+    # params: read fwd + read bwd-recompute + grad write + AdamW (rd p,m,v / wr p,m,v in f32)
+    param_traffic = p * b * 3 + p * 4 * 6
+    # activations: ~6 major [tokens, d] tensors read+written per layer
+    act = cfg.n_layers * tokens * cfg.d_model * b * 12
+    logits = 2.0 * tokens * cfg.vocab * 4 / max(1, (tokens // cfg.vocab_chunk) if cfg.vocab_chunk else 1)
+    return param_traffic + act + logits
+
+
+def lm_decode_bytes(cfg, batch: int, context: int) -> float:
+    b = _dtype_bytes(cfg)
+    params = cfg.n_active_params() * b  # every weight read once
+    cache = 0.0
+    for l in range(cfg.n_layers):
+        w = cfg.layer_window(l)
+        s_eff = min(w, context) if w > 0 else context
+        cache += 2.0 * s_eff * cfg.n_kv_heads * cfg.d_head * b * batch  # k+v read
+    return params + cache
+
+
+def lm_prefill_bytes(cfg, batch: int, seq: int) -> float:
+    b = _dtype_bytes(cfg)
+    tokens = batch * seq
+    return cfg.n_params() * b + cfg.n_layers * tokens * cfg.d_model * b * 8
+
+
+def gnn_train_bytes(cfg, n_nodes: int, n_edges: int) -> float:
+    h, b = cfg.d_hidden, _dtype_bytes(cfg)
+    per_layer = (2 * n_edges + 2 * n_nodes) * h * b * 3  # msgs+nodes, fwd/bwd
+    return cfg.n_params() * (4 * 9) + cfg.n_layers * per_layer
+
+
+def recsys_train_bytes(cfg, batch: int) -> float:
+    lookups = batch * cfg.table.n_slots * cfg.table.dim * 4 * 3  # gather + grad scatter
+    if cfg.kind in ("din", "sasrec"):
+        lookups *= cfg.seq_len / max(cfg.table.n_slots, 1)
+    dense = recsys_dense_params(cfg) * 4 * 9
+    acts = batch * 4 * 4096  # order-of-magnitude MLP activations
+    return lookups + dense + acts
+
+
+def recsys_serve_bytes(cfg, batch: int) -> float:
+    lookups = batch * cfg.table.n_slots * cfg.table.dim * 4
+    if cfg.kind in ("din", "sasrec"):
+        lookups *= cfg.seq_len / max(cfg.table.n_slots, 1)
+    return lookups + recsys_dense_params(cfg) * 4
+
+
+# ---------------------------------------------------------------------------
+# loop-aware collective parsing
+# ---------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"%?([\w\.\-]+)\s*=\s*s(?:32|64)\[\]\s+constant\((\d+)\)")
+_ROOT_CMP = re.compile(r"ROOT\s+%?[\w\.\-]+\s*=\s*pred\[\]\s+compare\(([^)]*)\)")
+_COLL_LINE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    coll: dict  # kind -> {count, bytes}
+    whiles: list  # [(cond_name, body_name)]
+    constants: dict  # const name -> int
+    root_cmp_args: Optional[str] = None
+
+
+def _parse_computations(hlo: str) -> dict:
+    comps: dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        hdr = _COMP_HDR.match(line) if (line and not line.startswith(" ")) else None
+        if hdr is None and s.endswith("{") and ("->" in s) and ("%" in s):
+            hdr = _COMP_HDR.match(s)
+        if hdr:
+            cur = _Computation(hdr.group(1), {}, [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        mc = _CONST_RE.search(s)
+        if mc:
+            cur.constants[mc.group(1)] = int(mc.group(2))
+        mw = _WHILE_RE.search(s)
+        if mw:
+            cur.whiles.append((mw.group(1), mw.group(2)))
+        mr = _ROOT_CMP.search(s)
+        if mr:
+            cur.root_cmp_args = mr.group(1)
+        ml = _COLL_LINE.search(s)
+        if ml and "-done" not in s:
+            ty, kind = ml.group(1), ml.group(2)
+            b = _shape_bytes(ty) * (2 if kind == "all-reduce" else 1)
+            rec = cur.coll.setdefault(kind, {"count": 0, "bytes": 0})
+            rec["count"] += 1
+            rec["bytes"] += b
+    return comps
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Trip count from the loop condition's ROOT compare vs constant."""
+    if cond.root_cmp_args:
+        for name, val in cond.constants.items():
+            if name in cond.root_cmp_args:
+                return max(1, val)
+    # fallback: the largest constant in the condition
+    return max([1] + list(cond.constants.values()))
+
+
+def parse_collectives_loop_aware(hlo: str) -> dict:
+    """Per-device collective bytes with while-loop trip multiplication."""
+    comps = _parse_computations(hlo)
+    # multiplier per computation: product of enclosing loop trip counts
+    mult: dict[str, int] = {name: 1 for name in comps}
+
+    # iterate to fixpoint (nested whiles): body multiplier = caller's * trips
+    for _ in range(8):
+        changed = False
+        for c in comps.values():
+            for cond_name, body_name in c.whiles:
+                cond = comps.get(cond_name)
+                trips = _trip_count(cond) if cond else 1
+                want = mult.get(c.name, 1) * trips
+                for target in (body_name, cond_name):
+                    if target in mult and mult[target] != want:
+                        mult[target] = want
+                        changed = True
+        if not changed:
+            break
+
+    out: dict = {}
+    for c in comps.values():
+        m = mult.get(c.name, 1)
+        for kind, rec in c.coll.items():
+            agg = out.setdefault(kind, {"count": 0, "bytes": 0})
+            agg["count"] += rec["count"] * m
+            agg["bytes"] += rec["bytes"] * m
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dispatch per (family, kind)
+# ---------------------------------------------------------------------------
+
+
+def analytic_costs(family: str, kind: str, cfg, dims: dict) -> dict:
+    """(flops, bytes) for the whole step, hardware-independent."""
+    if family == "lm":
+        B, S = dims["global_batch"], dims["seq_len"]
+        if kind == "train":
+            return {"flops": lm_train_flops(cfg, B, S), "bytes": lm_train_bytes(cfg, B, S)}
+        if kind == "prefill":
+            return {"flops": lm_prefill_flops(cfg, B, S), "bytes": lm_prefill_bytes(cfg, B, S)}
+        return {"flops": lm_decode_flops(cfg, B, S), "bytes": lm_decode_bytes(cfg, B, S)}
+    if family == "gnn":
+        n, e = dims["_n_nodes"], dims["_n_edges"]
+        return {"flops": gnn_train_flops(cfg, n, e), "bytes": gnn_train_bytes(cfg, n, e)}
+    if family == "recsys":
+        B = dims.get("n_candidates", dims["batch"]) if kind == "retrieval" else dims["batch"]
+        if kind == "train":
+            return {"flops": recsys_train_flops(cfg, B), "bytes": recsys_train_bytes(cfg, B)}
+        return {"flops": recsys_forward_flops(cfg, B), "bytes": recsys_serve_bytes(cfg, B)}
+    raise ValueError(family)

@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run must set ``XLA_FLAGS`` before any jax initialization.
+
+Topology: TPU v5e pods of 16x16 = 256 chips; the multi-pod mesh stacks two
+pods on a leading ``pod`` axis (512 chips). The ``pod`` axis joins the
+data-parallel group (gradient sync crosses DCI; model parallelism stays
+inside a pod where ICI bandwidth lives).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_for(name: str):
+    if name in ("single", "single_pod", "16x16"):
+        return make_production_mesh(multi_pod=False)
+    if name in ("multi", "multi_pod", "2x16x16"):
+        return make_production_mesh(multi_pod=True)
+    raise ValueError(f"unknown mesh {name!r} (use 'single' or 'multi')")
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

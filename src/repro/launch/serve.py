@@ -1,0 +1,69 @@
+"""Serving driver: ``python -m repro.launch.serve [...]``.
+
+End-to-end anytime retrieval: synthetic corpus -> retrieval-model treatment
+-> impact index -> batched SAAT serving with the deadline->rho controller.
+Prints effectiveness (RR@10) + the full latency distribution (tail latency is
+the paper's headline serving metric).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_impact_index, pad_queries
+from repro.data.synthetic import CorpusConfig, generate_corpus
+from repro.metrics.ir_metrics import mrr_at_k
+from repro.models.treatments import MODEL_NAMES, apply_treatment
+from repro.serving import AnytimeServer, ServingConfig, run_query_stream
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="spladev2", choices=list(MODEL_NAMES))
+    ap.add_argument("--docs", type=int, default=20000)
+    ap.add_argument("--queries", type=int, default=500)
+    ap.add_argument("--k", type=int, default=100)
+    ap.add_argument("--deadline-ms", type=float, default=None)
+    ap.add_argument("--rho", type=int, default=None, help="fixed posting budget (overrides deadline)")
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    corpus = generate_corpus(CorpusConfig(n_docs=args.docs, n_queries=args.queries))
+    enc = apply_treatment(corpus, args.model)
+    index = build_impact_index(
+        enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs, enc.n_terms
+    )
+    max_q = max(len(t) for t in enc.query_terms)
+    qt, qw = pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)
+
+    ladder = (args.rho,) if args.rho else (100_000, 500_000, 1_000_000, 5_000_000)
+    server = AnytimeServer(
+        index,
+        ServingConfig(
+            k=args.k, rho_ladder=ladder, batch_size=args.batch, deadline_ms=args.deadline_ms
+        ),
+    )
+    server.warmup(jnp.asarray(qt[: args.batch]), jnp.asarray(qw[: args.batch]))
+    server.reset_stats()
+    scores, ids = run_query_stream(server, qt, qw)
+    stats = server.stats()
+    print(
+        json.dumps(
+            {
+                "model": args.model,
+                "n_docs": corpus.n_docs,
+                "n_postings": index.n_postings,
+                "rr@10": round(mrr_at_k(ids, corpus.qrels, 10), 4),
+                "latency": {k: round(v, 3) for k, v in stats.row().items()},
+                "tail_ratio_p99_p50": round(stats.tail_ratio, 2),
+            },
+            indent=1,
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

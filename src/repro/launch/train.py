@@ -1,0 +1,125 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps (smoke-scale on CPU by default, production configs when
+``--full`` is given on hardware that can hold them). Wires together the
+whole substrate: arch registry -> data pipeline -> sharded train step ->
+checkpoint manager (periodic + SIGTERM) -> metrics log. This is deliverable
+(b)'s end-to-end driver for the assigned architectures; the sparse-encoder
+training example lives in ``examples/train_sparse_encoder.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import json
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.data import pipeline
+from repro.distributed.sharding import param_shardings, train_state_shardings
+from repro.train import AdamWConfig, init_train_state, make_train_step
+from repro.train.trainer import abstract_train_state
+
+
+def _make_loss(spec, cfg):
+    if spec.family == "lm":
+        from repro.archs.transformer import lm_loss
+
+        return lambda p, b: lm_loss(p, b["tokens"], b["labels"], cfg)
+    if spec.family == "gnn":
+        from repro.archs.gnn import gnn_loss
+
+        return lambda p, b: gnn_loss(p, b, cfg)
+    from repro.archs.recsys import loss as recsys_loss
+
+    return lambda p, b: recsys_loss(p, b, cfg)
+
+
+def _make_batches(spec, cfg, batch: int, seq: int):
+    if spec.family == "lm":
+        return pipeline.lm_token_batches(cfg.vocab, batch, seq)
+    if spec.family == "gnn":
+        readout = getattr(cfg, "graph_readout", False)
+        return pipeline.gnn_batches(cfg, n_nodes=max(batch * 4, 64), n_edges=max(batch * 16, 256),
+                                    graph_readout_graphs=8 if readout else 0)
+    return pipeline.recsys_batches(cfg, batch)
+
+
+def _init_params(spec, cfg, key):
+    if spec.family == "lm":
+        from repro.archs.transformer import init_lm_params
+
+        return init_lm_params(key, cfg)
+    if spec.family == "gnn":
+        from repro.archs.gnn import init_gnn_params
+
+        return init_gnn_params(key, cfg)
+    from repro.archs.recsys import init_params
+
+    return init_params(key, cfg)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--full", action="store_true", help="use the full (not smoke) config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.config_for("train_4k" if "train_4k" in spec.cells else "train_batch") if args.full else spec.smoke_config()
+    loss_fn = _make_loss(spec, cfg)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10), total_steps=args.steps)
+    step_fn = make_train_step(loss_fn, opt, grad_accum=args.grad_accum)
+
+    params = _init_params(spec, cfg, jax.random.PRNGKey(0))
+    state = init_train_state(params)
+
+    cm = None
+    if args.ckpt_dir:
+        cm = CheckpointManager(args.ckpt_dir, keep=2)
+        if args.resume and cm.latest_step() is not None:
+            abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            state, meta = cm.restore(abstract)
+            print(f"resumed from step {int(state.step)} ({meta})")
+
+        def on_sigterm(signum, frame):  # checkpoint-on-preemption
+            cm.save(int(state.step), state, {"reason": "sigterm"})
+            cm.wait()
+            sys.exit(0)
+
+        signal.signal(signal.SIGTERM, on_sigterm)
+
+    batches = _make_batches(spec, cfg, args.batch, args.seq)
+    fn = jax.jit(step_fn)
+    t0 = time.time()
+    for i, batch in enumerate(itertools.islice(batches, args.steps)):
+        state, metrics = fn(state, batch)
+        if cm and (i + 1) % args.ckpt_every == 0:
+            cm.save(int(state.step), state, {"metrics": {k: float(v) for k, v in metrics.items()}})
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            m = {k: round(float(v), 4) for k, v in metrics.items() if jnp.ndim(v) == 0}
+            print(f"step {i}: {json.dumps(m)}", flush=True)
+    if cm:
+        cm.save(int(state.step), state, {"final": True})
+        cm.wait()
+    dt = time.time() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s ({dt / args.steps * 1e3:.1f} ms/step)")
+
+
+if __name__ == "__main__":
+    main()

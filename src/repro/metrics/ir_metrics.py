@@ -1,0 +1,35 @@
+"""IR effectiveness metrics: RR@10 (the paper's official metric) + recall."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def mrr_at_k(ranked_doc_ids: np.ndarray, qrels: np.ndarray, k: int = 10) -> float:
+    """Mean reciprocal rank at cutoff k.
+
+    Args:
+      ranked_doc_ids: [n_queries, >=k] doc ids in decreasing score order.
+      qrels: [n_queries] the single relevant doc per query (MS MARCO style).
+    """
+    ranked = np.asarray(ranked_doc_ids)[:, :k]
+    rel = np.asarray(qrels).reshape(-1, 1)
+    hits = ranked == rel
+    ranks = np.argmax(hits, axis=1) + 1
+    rr = np.where(hits.any(axis=1), 1.0 / ranks, 0.0)
+    return float(rr.mean())
+
+
+def recall_at_k(ranked_doc_ids: np.ndarray, qrels: np.ndarray, k: int = 1000) -> float:
+    ranked = np.asarray(ranked_doc_ids)[:, :k]
+    rel = np.asarray(qrels).reshape(-1, 1)
+    return float((ranked == rel).any(axis=1).mean())
+
+
+def rank_overlap(ids_a: np.ndarray, ids_b: np.ndarray, k: int) -> float:
+    """Mean top-k set overlap between two systems (rank-safety diagnostics)."""
+    a = np.asarray(ids_a)[:, :k]
+    b = np.asarray(ids_b)[:, :k]
+    out = []
+    for i in range(a.shape[0]):
+        out.append(len(np.intersect1d(a[i], b[i])) / k)
+    return float(np.mean(out))

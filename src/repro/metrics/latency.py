@@ -1,0 +1,47 @@
+"""Latency distribution statistics (paper Figure 2: tail latency).
+
+The paper's key systems observation is not about means alone: DAAT means can
+beat SAAT while DAAT's p99/max explode on ill-behaved queries. We therefore
+always report the full Tukey summary.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    mean_ms: float
+    p50_ms: float
+    p75_ms: float
+    p95_ms: float
+    p99_ms: float
+    max_ms: float
+    std_ms: float
+    n: int
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def tail_ratio(self) -> float:
+        """p99 / p50 — the predictability figure of merit."""
+        return self.p99_ms / max(self.p50_ms, 1e-9)
+
+
+def summarize_latencies(latencies_ms) -> LatencyStats:
+    x = np.asarray(list(latencies_ms), dtype=np.float64)
+    if x.size == 0:
+        return LatencyStats(0, 0, 0, 0, 0, 0, 0, 0)
+    return LatencyStats(
+        mean_ms=float(x.mean()),
+        p50_ms=float(np.percentile(x, 50)),
+        p75_ms=float(np.percentile(x, 75)),
+        p95_ms=float(np.percentile(x, 95)),
+        p99_ms=float(np.percentile(x, 99)),
+        max_ms=float(x.max()),
+        std_ms=float(x.std()),
+        n=int(x.size),
+    )

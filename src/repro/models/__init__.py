@@ -1,0 +1,19 @@
+"""Retrieval models: the paper's six corpus treatments + neural sparse encoders.
+
+``treatments`` produces, for each retrieval model, the (doc COO, weighted
+queries) pair the core indexes consume — BM25, BM25 w/ doc2query-T5,
+DeepImpact, uniCOIL-T5, uniCOIL-TILDE, SPLADEv2 — with weight distributions
+calibrated against the paper's Table 2.
+
+``sparse_encoder`` is the *trainable* path: a JAX transformer backbone with a
+SPLADE-style (vocab-logit) or uniCOIL-style (scalar-per-token) head, trained
+with pairwise + FLOPS-regularized losses (``repro.train``).
+"""
+from repro.models.bm25 import BM25Params, bm25_weights  # noqa: F401
+from repro.models.treatments import (  # noqa: F401
+    MODEL_NAMES,
+    PROFILES,
+    EncodedCollection,
+    apply_treatment,
+    encode_all,
+)

@@ -1,0 +1,8 @@
+"""Anytime serving: deadline->rho control, batched streams, doc sharding."""
+from repro.serving.scheduler import AnytimeServer, ServingConfig, run_query_stream  # noqa: F401
+from repro.serving.sharded import (  # noqa: F401
+    abstract_stacked_index,
+    make_sharded_serve_step,
+    shard_corpus,
+    stack_indexes,
+)

@@ -1,0 +1,163 @@
+"""Anytime serving: batched queries, deadline -> rho control, doc sharding.
+
+The paper's core serving claim is that SAAT's posting budget rho makes query
+cost — and therefore latency — *predictable*. This module turns that into a
+deadline controller: given a target latency, pick the largest rho whose
+predicted cost fits. Because rho is a static tensor shape, the controller
+quantizes to a ladder of pre-compiled rho levels (one executable per level;
+switching levels never recompiles at serve time).
+
+At pod scale, documents shard over the ``model`` axis: each chip runs the
+identical rho-budgeted scan over its shard and ships only its k finalists
+(``sharded_topk_merge``). Uniform per-chip work = no stragglers from corpus
+skew — the paper's tail-latency argument, promoted to a cluster property.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.impact_index import ImpactIndex
+from repro.core.saat import max_segments_per_term, saat_search
+from repro.metrics.latency import LatencyStats, summarize_latencies
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    k: int = 1000
+    rho_ladder: tuple[int, ...] = (100_000, 500_000, 1_000_000, 5_000_000, 10_000_000)
+    batch_size: int = 32
+    deadline_ms: Optional[float] = None  # None = always use max rho
+    scatter_impl: str = "sort"
+    ema_alpha: float = 0.2  # cost-model smoothing
+
+
+@dataclasses.dataclass
+class _CostModel:
+    """us per million postings, learned online per rho level."""
+
+    us_per_mpost: dict
+    alpha: float
+
+    def update(self, rho: int, elapsed_us: float):
+        per = elapsed_us / max(rho / 1e6, 1e-9)
+        old = self.us_per_mpost.get(rho)
+        self.us_per_mpost[rho] = per if old is None else (1 - self.alpha) * old + self.alpha * per
+
+    def predict_us(self, rho: int) -> float:
+        if not self.us_per_mpost:
+            return 0.0
+        # nearest calibrated level
+        lvl = min(self.us_per_mpost, key=lambda r: abs(r - rho))
+        return self.us_per_mpost[lvl] * rho / 1e6
+
+
+class AnytimeServer:
+    """Batched SAAT serving over one impact index."""
+
+    def __init__(self, index: ImpactIndex, cfg: ServingConfig):
+        self.index = index
+        self.cfg = cfg
+        self.max_segs = max_segments_per_term(index)
+        self._latencies_ms: list[float] = []
+        self._rhos: list[int] = []
+        self._cost = _CostModel({}, cfg.ema_alpha)
+        # cap the ladder at the index's own posting count (exact level)
+        exact = index.n_postings
+        ladder = sorted({min(r, exact) for r in cfg.rho_ladder} | {exact})
+        self.rho_ladder = tuple(ladder)
+
+    # -------------------------- rho selection -----------------------------
+
+    def pick_rho(self) -> int:
+        if self.cfg.deadline_ms is None:
+            return self.rho_ladder[-1]
+        budget_us = self.cfg.deadline_ms * 1e3
+        best = self.rho_ladder[0]
+        for rho in self.rho_ladder:
+            pred = self._cost.predict_us(rho)
+            if pred == 0.0 or pred <= budget_us:
+                best = rho
+        return best
+
+    # ----------------------------- serving --------------------------------
+
+    def search_batch(self, q_terms: jax.Array, q_weights: jax.Array, rho: Optional[int] = None):
+        rho = rho or self.pick_rho()
+        t0 = time.perf_counter()
+        res = saat_search(
+            self.index,
+            q_terms,
+            q_weights,
+            k=self.cfg.k,
+            rho=rho,
+            max_segs_per_term=self.max_segs,
+            scatter_impl=self.cfg.scatter_impl,
+        )
+        jax.block_until_ready(res.scores)
+        elapsed = (time.perf_counter() - t0) * 1e3
+        per_query = elapsed / q_terms.shape[0]
+        for _ in range(q_terms.shape[0]):
+            self._latencies_ms.append(per_query)
+            self._rhos.append(rho)
+        self._cost.update(rho, per_query * 1e3)
+        return res
+
+    def warmup(self, q_terms: jax.Array, q_weights: jax.Array, repeats: int = 2):
+        """Compile + calibrate every rho level (excluded from stats)."""
+        for rho in self.rho_ladder:
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                res = saat_search(
+                    self.index,
+                    q_terms,
+                    q_weights,
+                    k=self.cfg.k,
+                    rho=rho,
+                    max_segs_per_term=self.max_segs,
+                    scatter_impl=self.cfg.scatter_impl,
+                )
+                jax.block_until_ready(res.scores)
+                per_query_us = (time.perf_counter() - t0) * 1e6 / q_terms.shape[0]
+            self._cost.update(rho, per_query_us)
+
+    def stats(self) -> LatencyStats:
+        return summarize_latencies(self._latencies_ms)
+
+    def reset_stats(self):
+        self._latencies_ms.clear()
+        self._rhos.clear()
+
+
+def run_query_stream(
+    server: AnytimeServer,
+    q_terms: np.ndarray,  # [N, Lq]
+    q_weights: np.ndarray,
+    *,
+    batch_size: Optional[int] = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Drive a query stream through the server in fixed batches.
+
+    Returns (scores [N, k], doc_ids [N, k]). The final ragged batch is padded
+    with repeats (served, then dropped) so every executable sees one shape.
+    """
+    bs = batch_size or server.cfg.batch_size
+    N = q_terms.shape[0]
+    out_s, out_i = [], []
+    for lo in range(0, N, bs):
+        hi = min(lo + bs, N)
+        qt = q_terms[lo:hi]
+        qw = q_weights[lo:hi]
+        if hi - lo < bs:  # pad final batch
+            pad = bs - (hi - lo)
+            qt = np.concatenate([qt, np.repeat(qt[-1:], pad, 0)])
+            qw = np.concatenate([qw, np.repeat(qw[-1:], pad, 0)])
+        res = server.search_batch(jnp.asarray(qt), jnp.asarray(qw))
+        out_s.append(np.asarray(res.scores)[: hi - lo])
+        out_i.append(np.asarray(res.doc_ids)[: hi - lo])
+    return np.concatenate(out_s), np.concatenate(out_i)

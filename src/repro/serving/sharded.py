@@ -1,0 +1,263 @@
+"""Doc-sharded SAAT retrieval: the paper's serve step at pod scale.
+
+Documents are partitioned into ``n_shards`` equal ranges over the ``model``
+mesh axis; each chip owns the full impact index *of its shard* and runs the
+identical rho-budgeted SAAT scan. Only the k finalists cross the ICI
+(``k * 8`` bytes per shard vs ``n_docs * 4`` for accumulator exchange).
+Queries batch over the data axes.
+
+Why this is the right scale-out for the paper's technique:
+  * per-chip work is rho_per_shard postings — *identical by construction*
+    across chips, so corpus skew cannot create stragglers (the paper's
+    predictable-latency claim, promoted to a cluster property);
+  * a lost pod/chip shrinks the corpus coverage but never blocks the merge
+    (elastic serving; repro.distributed.elastic).
+
+``stack_indexes`` packs per-shard indexes into one pytree with a leading
+shard axis (sharded over ``model``); ``abstract_stacked_index`` builds the
+same as ShapeDtypeStructs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.impact_index import ImpactIndex, build_impact_index
+from repro.core.quantization import QuantConfig
+from repro.core.saat import saat_search
+from repro.core.topk import sharded_topk_merge
+from repro.distributed.sharding import mesh_axes
+
+
+# --------------------------------------------------------------------------
+# shard construction (host side)
+# --------------------------------------------------------------------------
+
+
+def shard_corpus(
+    doc_idx: np.ndarray,
+    term_idx: np.ndarray,
+    weights: np.ndarray,
+    n_docs: int,
+    n_terms: int,
+    n_shards: int,
+    **build_kwargs,
+) -> tuple[list[ImpactIndex], int]:
+    """Split a COO corpus into per-shard impact indexes (equal doc ranges).
+
+    All shards quantize against the GLOBAL max weight so their impact grids
+    (and therefore merged scores) are identical to a global index's.
+    """
+    docs_per_shard = -(-n_docs // n_shards)
+    global_max = float(np.max(weights)) if len(weights) else 1.0
+    shards = []
+    for s in range(n_shards):
+        lo, hi = s * docs_per_shard, min((s + 1) * docs_per_shard, n_docs)
+        m = (doc_idx >= lo) & (doc_idx < hi)
+        shards.append(
+            build_impact_index(
+                doc_idx[m] - lo, term_idx[m], weights[m], docs_per_shard, n_terms,
+                quant_max_weight=global_max, **build_kwargs
+            )
+        )
+    return shards, docs_per_shard
+
+
+def _pad_cat(arrs: Sequence[np.ndarray], fill) -> np.ndarray:
+    n = max(a.shape[0] for a in arrs)
+    out = np.full((len(arrs), n) + arrs[0].shape[1:], fill, dtype=arrs[0].dtype)
+    for i, a in enumerate(arrs):
+        out[i, : a.shape[0]] = a
+    return out
+
+
+def stack_indexes(shards: list[ImpactIndex]) -> ImpactIndex:
+    """Stack per-shard indexes on a new leading axis (ragged -> padded).
+
+    Static metadata comes from shard 0 (shards are built with identical
+    corpus-level constants); per-term CSR tables are padded per shard.
+    """
+    fields = [f.name for f in dataclasses.fields(ImpactIndex)]
+    data_fields = [
+        f for f in fields
+        if f not in ("n_docs", "n_terms", "n_blocks", "block_size", "max_doc_terms", "scale", "bits")
+    ]
+    stacked = {}
+    for f in data_fields:
+        if f in ("doc_terms", "doc_weights"):
+            continue  # ragged in BOTH dims; re-padded below
+        arrs = [np.asarray(jax.device_get(getattr(s, f))) for s in shards]
+        fill = 0
+        stacked[f] = jnp.asarray(_pad_cat(arrs, fill))
+    meta = {
+        k: getattr(shards[0], k)
+        for k in ("n_docs", "n_terms", "n_blocks", "block_size", "scale", "bits")
+    }
+    meta["max_doc_terms"] = max(s.max_doc_terms for s in shards)
+    # re-pad doc-major stores to a common Tmax
+    tmax = meta["max_doc_terms"]
+    dts = [np.asarray(jax.device_get(s.doc_terms)) for s in shards]
+    dws = [np.asarray(jax.device_get(s.doc_weights)) for s in shards]
+    nd = max(a.shape[0] for a in dts)
+    dt = np.full((len(shards), nd, tmax), shards[0].n_terms, dtype=np.int32)
+    dw = np.zeros((len(shards), nd, tmax), dtype=np.float32)
+    for i, (a, b) in enumerate(zip(dts, dws)):
+        dt[i, : a.shape[0], : a.shape[1]] = a
+        dw[i, : b.shape[0], : b.shape[1]] = b
+    stacked["doc_terms"] = jnp.asarray(dt)
+    stacked["doc_weights"] = jnp.asarray(dw)
+    return ImpactIndex(**stacked, **meta)
+
+
+def abstract_stacked_index(
+    *,
+    n_shards: int,
+    docs_per_shard: int,
+    n_terms: int,
+    postings_per_shard: int,
+    segments_per_shard: int,
+    bm_cells_per_shard: int,
+    max_doc_terms: int,
+    block_size: int = 128,
+) -> ImpactIndex:
+    """ShapeDtypeStruct stacked index for the dry-run (no allocation)."""
+    S = n_shards
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    n_docs_pad = -(-docs_per_shard // block_size) * block_size
+    n_blocks = n_docs_pad // block_size
+    return ImpactIndex(
+        doc_ids=sds((S, postings_per_shard), i32),
+        seg_term=sds((S, segments_per_shard), i32),
+        seg_weight=sds((S, segments_per_shard), f32),
+        seg_start=sds((S, segments_per_shard), i32),
+        seg_len=sds((S, segments_per_shard), i32),
+        term_seg_start=sds((S, n_terms + 1), i32),
+        term_seg_count=sds((S, n_terms + 1), i32),
+        term_post_count=sds((S, n_terms + 1), i32),
+        term_max_weight=sds((S, n_terms + 1), f32),
+        bm_block=sds((S, bm_cells_per_shard), i32),
+        bm_weight=sds((S, bm_cells_per_shard), f32),
+        term_bm_start=sds((S, n_terms + 1), i32),
+        term_bm_count=sds((S, n_terms + 1), i32),
+        doc_terms=sds((S, n_docs_pad, max_doc_terms), i32),
+        doc_weights=sds((S, n_docs_pad, max_doc_terms), f32),
+        doc_n_terms=sds((S, n_docs_pad), i32),
+        doc_weight_sum=sds((S, n_docs_pad), f32),
+        n_docs=docs_per_shard,
+        n_terms=n_terms,
+        n_blocks=n_blocks,
+        block_size=block_size,
+        max_doc_terms=max_doc_terms,
+        scale=1.0,
+        bits=8,
+    )
+
+
+# --------------------------------------------------------------------------
+# the sharded serve step
+# --------------------------------------------------------------------------
+
+
+def make_sharded_serve_step(
+    mesh: Mesh,
+    *,
+    k: int,
+    rho_per_shard: int,
+    max_segs_per_term: int,
+    docs_per_shard: int,
+    scatter_impl: str = "sort",
+):
+    """Builds ``serve(index_stack, q_terms, q_weights) -> (scores, ids)``.
+
+    Inside ``shard_map``: every model-rank runs the identical rho-budgeted
+    SAAT over its local doc shard, globalizes ids by its shard offset, then
+    merges finalists with a k-sized all-gather over ``model``. Data axes
+    carry the query batch.
+    """
+    axes = mesh_axes(mesh)
+    dp = axes.data if len(axes.data) > 1 else axes.data[0]
+    idx_specs = jax.tree.map(lambda _: P("model"), _index_data_template())
+    in_specs = (idx_specs, P(dp, None), P(dp, None))
+    out_specs = (P(dp, None), P(dp, None))
+
+    def body(idx_data: dict, qt, qw):
+        # the block may hold SEVERAL shards when n_shards > model-axis size
+        # (multiple doc ranges per chip): search each, merge locally, then
+        # k-merge across chips
+        n_local = jax.tree.leaves(idx_data)[0].shape[0]
+        rank = jax.lax.axis_index("model").astype(jnp.int32)
+        pool_s = pool_i = None
+        for j in range(n_local):
+            local = jax.tree.map(lambda x, _j=j: x[_j], idx_data)
+            index = ImpactIndex(**local, **_static_meta_from(local, docs_per_shard))
+            res = saat_search(
+                index,
+                qt,
+                qw,
+                k=k,
+                rho=rho_per_shard,
+                max_segs_per_term=max_segs_per_term,
+                scatter_impl=scatter_impl,
+            )
+            gids = res.doc_ids + (rank * n_local + j) * docs_per_shard
+            if pool_s is None:
+                pool_s, pool_i = res.scores, gids
+            else:
+                from repro.core.topk import merge_topk
+
+                pool_s, pool_i = merge_topk(pool_s, pool_i, res.scores, gids, k)
+        return sharded_topk_merge(pool_s, pool_i, k, "model")
+
+    sm = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+    def serve(index_stack: ImpactIndex, q_terms, q_weights):
+        data = _index_data_dict(index_stack)
+        return sm(data, q_terms, q_weights)
+
+    return serve, in_specs, out_specs
+
+
+_META_FIELDS = ("n_docs", "n_terms", "n_blocks", "block_size", "max_doc_terms", "scale", "bits")
+
+
+def _index_data_dict(index: ImpactIndex) -> dict:
+    return {
+        f.name: getattr(index, f.name)
+        for f in dataclasses.fields(ImpactIndex)
+        if f.name not in _META_FIELDS
+    }
+
+
+def _index_data_template() -> dict:
+    return {
+        f.name: None
+        for f in dataclasses.fields(ImpactIndex)
+        if f.name not in _META_FIELDS
+    }
+
+
+def _static_meta_from(local: dict, docs_per_shard: int) -> dict:
+    n_docs_pad, tmax = local["doc_terms"].shape
+    n_terms = local["term_seg_start"].shape[0] - 1
+    block_size = 128
+    return dict(
+        n_docs=docs_per_shard,
+        n_terms=n_terms,
+        n_blocks=n_docs_pad // block_size,
+        block_size=block_size,
+        max_doc_terms=tmax,
+        scale=1.0,
+        bits=8,
+    )

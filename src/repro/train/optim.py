@@ -1,0 +1,99 @@
+"""AdamW + LR schedules, built from scratch (no optax dependency).
+
+Optimizer state is a plain pytree mirroring the params, so the distributed
+layer can shard ``m``/``v`` with the *same* PartitionSpecs as the weights —
+that is the ZeRO/FSDP property that lets a 34B model's optimizer state fit
+256 chips (DESIGN.md §5). Moments are always f32 regardless of param dtype
+(bf16-safe mixed precision).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    schedule: str = "warmup_cosine"  # constant | warmup_cosine | warmup_linear
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    m: Any  # pytree like params, f32
+    v: Any  # pytree like params, f32
+    count: jax.Array  # i32[]
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(m=zeros, v=jax.tree.map(jnp.copy, zeros), count=jnp.zeros((), jnp.int32))
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        frac = jnp.float32(1.0)
+    elif cfg.schedule == "warmup_linear":
+        t = jnp.clip((s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        frac = 1.0 - (1.0 - cfg.min_lr_frac) * t
+    else:  # warmup_cosine
+        t = jnp.clip((s - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(
+    grads, state: AdamWState, params, cfg: AdamWConfig
+) -> tuple[Any, AdamWState, dict]:
+    """Returns (new_params, new_state, metrics). Decoupled weight decay."""
+    if cfg.grad_clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state.count + 1
+    lr = schedule_lr(cfg, count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        step = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        p_new = p.astype(jnp.float32) - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+        return p_new.astype(p.dtype), m_new, v_new
+
+    # flatten/unflatten (rather than a tuple-leaf tree_map) so params pytrees
+    # may themselves contain tuples without confusing is_leaf
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(state.m)
+    v_flat = treedef.flatten_up_to(state.v)
+    triples = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in triples])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in triples])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in triples])
+    return new_params, AdamWState(new_m, new_v, count), {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,36 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real (1-device) CPU; only launch/dryrun.py forces 512."""
+import numpy as np
+import pytest
+
+from repro.core import build_impact_index, pad_queries
+from repro.data.synthetic import CorpusConfig, generate_corpus
+from repro.models.treatments import apply_treatment
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    return generate_corpus(CorpusConfig(n_docs=400, n_queries=30, n_concepts=80, seed=3))
+
+
+@pytest.fixture(scope="session")
+def bm25_collection(tiny_corpus):
+    return apply_treatment(tiny_corpus, "bm25")
+
+
+@pytest.fixture(scope="session")
+def splade_collection(tiny_corpus):
+    return apply_treatment(tiny_corpus, "spladev2")
+
+
+@pytest.fixture(scope="session")
+def bm25_index(tiny_corpus, bm25_collection):
+    enc = bm25_collection
+    return build_impact_index(enc.doc_idx, enc.term_idx, enc.weights, tiny_corpus.n_docs, enc.n_terms)
+
+
+@pytest.fixture(scope="session")
+def bm25_queries(bm25_collection):
+    enc = bm25_collection
+    max_q = max(len(t) for t in enc.query_terms)
+    return pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)

@@ -1,0 +1,169 @@
+"""Core retrieval invariants: quantization, index, SAAT/DAAT/exhaustive."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    QuantConfig,
+    blockmax_search,
+    build_impact_index,
+    dequantize,
+    exact_rho,
+    exhaustive_search,
+    quantization_error,
+    quantize,
+    saat_search,
+)
+from repro.core.daat import max_blocks_per_term
+from repro.core.saat import max_segments_per_term
+from repro.core.topk import merge_topk, tiled_topk, topk
+from repro.metrics.ir_metrics import mrr_at_k, rank_overlap
+
+
+# ---------------------------------------------------------------- quantization
+
+
+def test_quantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    w = rng.gamma(2.0, 3.0, 10000)
+    for bits in (4, 8, 12):
+        err = quantization_error(w, QuantConfig(bits=bits))
+        assert err["bound_ok"], err
+
+
+def test_quantize_zero_reserved():
+    q, _ = quantize(np.array([0.0, -1.0, 0.5, 2.0]), QuantConfig(bits=8))
+    assert q[0] == 0 and q[1] == 0 and q[2] >= 1 and q[3] >= 1
+
+
+def test_quantize_monotone():
+    w = np.linspace(0.01, 10, 1000)
+    q, _ = quantize(w, QuantConfig(bits=8))
+    assert (np.diff(q) >= 0).all()
+
+
+def test_log_scheme_roundtrip():
+    w = np.exp(np.random.default_rng(1).normal(0, 2, 1000))
+    cfg = QuantConfig(bits=8, scheme="log")
+    q, scale = quantize(w, cfg)
+    deq = dequantize(q, scale, cfg)
+    # log-scheme relative error stays bounded
+    rel = np.abs(deq - w) / w
+    assert np.median(rel) < 0.2
+
+
+# ---------------------------------------------------------------- index
+
+
+def test_index_invariants(bm25_index, bm25_collection):
+    idx = bm25_index
+    # segments ordered by (term, impact desc)
+    seg_term = np.asarray(idx.seg_term)
+    seg_w = np.asarray(idx.seg_weight)
+    same_term = seg_term[1:] == seg_term[:-1]
+    assert (seg_w[1:][same_term] <= seg_w[:-1][same_term] + 1e-6).all()
+    # CSR covers all postings
+    assert int(np.asarray(idx.term_post_count).sum()) == len(bm25_collection.doc_idx)
+    # doc-major nnz matches
+    assert int(np.asarray(idx.doc_n_terms).sum()) == len(bm25_collection.doc_idx)
+    # block-max >= every posting weight in that (term, block)
+    assert float(np.asarray(idx.term_max_weight).max()) > 0
+
+
+def test_index_size_accounting(bm25_index):
+    assert bm25_index.posting_store_nbytes() < bm25_index.nbytes()
+
+
+# ---------------------------------------------------------------- evaluation
+
+
+def test_saat_exact_equals_exhaustive(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt), jnp.asarray(qw)
+    k = 10
+    ex = exhaustive_search(bm25_index, qt, qw, k=k)
+    sa = saat_search(
+        bm25_index, qt, qw, k=k, rho=exact_rho(bm25_index),
+        max_segs_per_term=max_segments_per_term(bm25_index),
+    )
+    np.testing.assert_allclose(np.asarray(sa.scores), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+    assert rank_overlap(np.asarray(sa.doc_ids), np.asarray(ex.doc_ids), k) > 0.99
+
+
+def test_saat_scatter_impls_agree(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt[:8]), jnp.asarray(qw[:8])
+    ms = max_segments_per_term(bm25_index)
+    res = {}
+    for impl in ("jnp", "sort", "pallas"):
+        r = saat_search(bm25_index, qt, qw, k=10, rho=5000, max_segs_per_term=ms, scatter_impl=impl)
+        res[impl] = np.asarray(r.scores)
+    np.testing.assert_allclose(res["jnp"], res["sort"], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(res["jnp"], res["pallas"], rtol=1e-3, atol=1e-3)
+
+
+def test_saat_monotone_in_rho(bm25_index, bm25_queries, tiny_corpus):
+    """More postings budget -> effectiveness never degrades (on average)."""
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt), jnp.asarray(qw)
+    ms = max_segments_per_term(bm25_index)
+    mrrs = []
+    for rho in (200, 2000, exact_rho(bm25_index)):
+        r = saat_search(bm25_index, qt, qw, k=10, rho=rho, max_segs_per_term=ms)
+        mrrs.append(mrr_at_k(np.asarray(r.doc_ids), tiny_corpus.qrels, 10))
+    assert mrrs[0] <= mrrs[1] + 0.02 and mrrs[1] <= mrrs[2] + 0.02, mrrs
+
+
+def test_saat_postings_budget_respected(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    r = saat_search(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, rho=500,
+        max_segs_per_term=max_segments_per_term(bm25_index),
+    )
+    assert int(np.asarray(r.postings_processed).max()) <= 500
+
+
+def test_daat_rank_safe_equals_exhaustive(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt), jnp.asarray(qw)
+    ex = exhaustive_search(bm25_index, qt, qw, k=10)
+    da = blockmax_search(
+        bm25_index, qt, qw, k=10, est_blocks=2, block_budget=2,
+        max_bm_per_term=max_blocks_per_term(bm25_index), exact=True,
+    )
+    assert bool(np.asarray(da.rank_safe).all())
+    np.testing.assert_allclose(np.asarray(da.scores), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+
+
+def test_daat_skipping_happens_on_bm25(bm25_index, bm25_queries):
+    """BM25's skewed weights must leave some blocks skippable."""
+    qt, qw = bm25_queries
+    da = blockmax_search(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, est_blocks=1, block_budget=1,
+        max_bm_per_term=max_blocks_per_term(bm25_index), exact=True,
+    )
+    scored = np.asarray(da.blocks_scored)
+    assert (scored < bm25_index.n_blocks).any()
+
+
+# ---------------------------------------------------------------- top-k utils
+
+
+def test_tiled_topk_matches_full():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=4096), jnp.float32)
+    s1, i1 = topk(x, 50)
+    s2, i2 = tiled_topk(x, 50, num_tiles=8)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(np.asarray(x)[np.asarray(i2)], np.asarray(s1))
+
+
+def test_merge_topk():
+    sa = jnp.asarray([9.0, 5.0, 1.0])
+    ia = jnp.asarray([1, 2, 3], jnp.int32)
+    sb = jnp.asarray([7.0, 6.0, 0.5])
+    ib = jnp.asarray([4, 5, 6], jnp.int32)
+    ms, mi = merge_topk(sa, ia, sb, ib, 4)
+    np.testing.assert_allclose(np.asarray(ms), [9.0, 7.0, 6.0, 5.0])
+    np.testing.assert_array_equal(np.asarray(mi), [1, 4, 5, 2])

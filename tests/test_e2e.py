@@ -1,0 +1,194 @@
+"""End-to-end behaviour: the paper's findings reproduced on a tiny corpus,
+plus the trainable sparse-encoder loop and the wacky-weights analyzers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_impact_index, exhaustive_search, pad_queries
+from repro.core.wacky import (
+    accumulator_overflow,
+    blockmax_tightness,
+    skip_opportunity,
+    term_statistics,
+    weight_distribution_stats,
+)
+from repro.data.synthetic import CorpusConfig, generate_corpus, mismatch_rate
+from repro.metrics.ir_metrics import mrr_at_k
+from repro.models.treatments import MODEL_NAMES, apply_treatment
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_corpus(CorpusConfig(n_docs=1500, n_queries=80, n_concepts=200, seed=7))
+
+
+@pytest.fixture(scope="module")
+def encoded(corpus):
+    return {m: apply_treatment(corpus, m) for m in ("bm25", "bm25-t5", "spladev2")}
+
+
+def _search_mrr(corpus, enc, k=10):
+    idx = build_impact_index(enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs, enc.n_terms)
+    max_q = max(len(t) for t in enc.query_terms)
+    qt, qw = pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)
+    res = exhaustive_search(idx, jnp.asarray(qt), jnp.asarray(qw), k=k)
+    return mrr_at_k(np.asarray(res.doc_ids), corpus.qrels, k), idx, (qt, qw)
+
+
+def test_vocabulary_mismatch_exists(corpus):
+    """The corpus must exhibit the mismatch that expansion models fix."""
+    assert mismatch_rate(corpus) > 0.15
+
+
+def test_effectiveness_ordering(corpus, encoded):
+    """Expansion + learned weights beat BM25 (paper Table 1 ordering)."""
+    mrr = {m: _search_mrr(corpus, e)[0] for m, e in encoded.items()}
+    assert mrr["bm25-t5"] > mrr["bm25"], mrr
+    assert mrr["spladev2"] > mrr["bm25"] + 0.05, mrr
+
+
+def test_wacky_weights_flatter_for_learned(encoded):
+    s_bm25 = weight_distribution_stats(encoded["bm25"].weights)
+    s_spl = weight_distribution_stats(encoded["spladev2"].weights)
+    assert s_spl["cv"] < s_bm25["cv"]  # flatter distribution
+
+
+def test_skip_opportunity_collapses_for_wacky(corpus, encoded):
+    """The paper's central mechanism: learned weights kill DAAT skipping."""
+    out = {}
+    for m in ("bm25", "spladev2"):
+        _, idx, (qt, qw) = _search_mrr(corpus, encoded[m])
+        from repro.core.daat import max_blocks_per_term
+
+        out[m] = skip_opportunity(
+            idx, jnp.asarray(qt), jnp.asarray(qw), k=10,
+            max_bm_per_term=max_blocks_per_term(idx),
+        )["skippable_fraction_mean"]
+    assert out["spladev2"] < out["bm25"], out
+
+
+def test_blockmax_coverage_higher_for_wacky(corpus, encoded):
+    """Wacky terms appear in (almost) EVERY doc block: a query term then
+    contributes to every block's upper bound, which is what makes the bounds
+    loose relative to the threshold. (Raw per-cell tightness is only
+    meaningful at high coverage — on sparse BM25 terms a block max trivially
+    equals the term max, so coverage is the discriminative statistic.)"""
+    _, idx_b, _ = _search_mrr(corpus, encoded["bm25"])
+    _, idx_s, _ = _search_mrr(corpus, encoded["spladev2"])
+    cov_b = blockmax_tightness(idx_b)["cells_per_term_mean"] / idx_b.n_blocks
+    cov_s = blockmax_tightness(idx_s)["cells_per_term_mean"] / idx_s.n_blocks
+    assert cov_s > 2 * cov_b, (cov_s, cov_b)
+
+
+def test_accumulator_overflow_for_learned_weights(corpus, encoded):
+    """The 16-bit JASS accumulator overflow appears for learned models."""
+    _, idx_s, _ = _search_mrr(corpus, encoded["spladev2"])
+    rep = accumulator_overflow(idx_s, query_weight_max=64.0)
+    assert rep["overflows"]
+
+
+def test_term_statistics_expansion_visible(corpus, encoded):
+    ts_b = term_statistics(
+        encoded["bm25"].doc_idx, encoded["bm25"].term_idx, encoded["bm25"].weights,
+        corpus.n_docs, encoded["bm25"].query_terms, encoded["bm25"].query_weights,
+    )
+    ts_s = term_statistics(
+        encoded["spladev2"].doc_idx, encoded["spladev2"].term_idx, encoded["spladev2"].weights,
+        corpus.n_docs, encoded["spladev2"].query_terms, encoded["spladev2"].query_weights,
+    )
+    assert ts_s.doc_unique_terms > ts_b.doc_unique_terms
+    assert ts_s.query_unique_terms > ts_b.query_unique_terms
+    assert ts_s.doc_total_terms > 5 * ts_b.doc_total_terms  # pseudo-doc mass
+
+
+def test_all_treatments_encode(corpus):
+    for m in MODEL_NAMES:
+        enc = apply_treatment(corpus, m)
+        assert len(enc.doc_idx) > 0 and (enc.weights > 0).all()
+
+
+# ------------------------------------------------------- trainable encoder
+
+
+def test_sparse_encoder_learns_ranking():
+    """A few steps of the SPLADE-style encoder beat the untrained encoder."""
+    from repro.data.pipeline import TripleSampler
+    from repro.models.sparse_encoder import (
+        SparseEncoderConfig,
+        encode,
+        encoder_backbone,
+        encoder_loss,
+        init_encoder_params,
+        score,
+    )
+    from repro.train import AdamWConfig, init_train_state, make_train_step, train_loop
+
+    corpus = generate_corpus(CorpusConfig(n_docs=300, n_queries=60, n_concepts=40, seed=1))
+    cfg = SparseEncoderConfig(
+        backbone=encoder_backbone(d_model=64, n_layers=2, vocab=corpus.config.n_surface_terms),
+        flops_weight=1e-5,
+        query_flops_weight=1e-5,
+    )
+    params = init_encoder_params(jax.random.PRNGKey(0), cfg)
+    sampler = TripleSampler(corpus, q_len=8, d_len=32)
+    step = make_train_step(
+        lambda p, b: encoder_loss(p, b, cfg), AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=40)
+    )
+    batches = [next(sampler.batches(16)) for _ in range(40)]
+    state, hist = train_loop(step, init_train_state(params), batches)
+    assert hist[-1]["pair_acc"] > max(hist[0]["pair_acc"], 0.6)
+    assert hist[-1]["rank_loss"] < hist[0]["rank_loss"]
+
+
+def test_sparse_encoder_flops_reg_sparsifies():
+    """Stronger FLOPS regularization -> sparser document reps."""
+    from repro.data.pipeline import TripleSampler
+    from repro.models.sparse_encoder import (
+        SparseEncoderConfig,
+        encoder_backbone,
+        encoder_loss,
+        init_encoder_params,
+    )
+    from repro.train import AdamWConfig, init_train_state, make_train_step, train_loop
+
+    corpus = generate_corpus(CorpusConfig(n_docs=200, n_queries=40, n_concepts=30, seed=2))
+    sampler = TripleSampler(corpus, q_len=8, d_len=32)
+    batches = [next(sampler.batches(8)) for _ in range(25)]
+    nnz = {}
+    for w in (1e-6, 3e-2):
+        cfg = SparseEncoderConfig(
+            backbone=encoder_backbone(d_model=48, n_layers=1, vocab=corpus.config.n_surface_terms),
+            flops_weight=w,
+            query_flops_weight=w,
+        )
+        params = init_encoder_params(jax.random.PRNGKey(3), cfg)
+        step = make_train_step(
+            lambda p, b, _c=cfg: encoder_loss(p, b, _c),
+            AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=25),
+        )
+        state, hist = train_loop(step, init_train_state(params), batches)
+        nnz[w] = hist[-1]["doc_nnz"]
+    assert nnz[3e-2] < nnz[1e-6], nnz
+
+
+def test_unicoil_head_no_expansion():
+    """uniCOIL reps activate only input-token dims."""
+    from repro.models.sparse_encoder import (
+        SparseEncoderConfig,
+        encode,
+        encoder_backbone,
+        init_encoder_params,
+    )
+
+    cfg = SparseEncoderConfig(
+        backbone=encoder_backbone(d_model=32, n_layers=1, vocab=256), head="unicoil"
+    )
+    params = init_encoder_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray([[5, 9, 11, 0]], jnp.int32)
+    mask = jnp.asarray([[True, True, True, False]])
+    rep = encode(params, toks, mask, cfg)
+    active = set(np.nonzero(np.asarray(rep[0]))[0].tolist())
+    assert active <= {5, 9, 11}

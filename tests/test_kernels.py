@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_prune.ops import block_prune
+from repro.kernels.block_prune.ref import block_prune_ref
+from repro.kernels.block_topk.ops import block_topk
+from repro.kernels.block_topk.ref import block_topk_ref
+from repro.kernels.impact_scatter.ops import impact_scatter
+from repro.kernels.impact_scatter.ref import impact_scatter_ref
+from repro.kernels.sparse_score.ops import sparse_score
+from repro.kernels.sparse_score.ref import sparse_score_ref
+
+
+@pytest.mark.parametrize("n_postings", [128, 1000, 4096])
+@pytest.mark.parametrize("n_docs", [512, 1000])
+@pytest.mark.parametrize("sort_by_doc", [True, False])
+def test_impact_scatter_sweep(n_postings, n_docs, sort_by_doc):
+    rng = np.random.default_rng(n_postings + n_docs)
+    docs = jnp.asarray(rng.integers(0, n_docs, n_postings), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, n_postings), jnp.float32)
+    got = impact_scatter(docs, contribs, n_docs, block_d=256, tile_p=128, sort_by_doc=sort_by_doc, interpret=True)
+    want = impact_scatter_ref(docs, contribs, n_docs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_impact_scatter_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    docs = jnp.asarray(rng.integers(0, 300, 512), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, 512), dtype)
+    got = impact_scatter(docs, contribs, 300, interpret=True)
+    want = impact_scatter_ref(docs, contribs.astype(jnp.float32), 300)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_impact_scatter_zero_contrib_padding():
+    docs = jnp.zeros(256, jnp.int32)
+    contribs = jnp.zeros(256, jnp.float32)
+    got = impact_scatter(docs, contribs, 128, interpret=True)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+@pytest.mark.parametrize("n,k,tile", [(1000, 10, 256), (8192, 100, 1024), (100, 100, 128), (5000, 7, 512)])
+def test_block_topk_sweep(n, k, tile):
+    rng = np.random.default_rng(n + k)
+    scores = jnp.asarray(rng.normal(size=n), jnp.float32)
+    s, i = block_topk(scores, k, tile=tile, interpret=True)
+    rs, ri = block_topk_ref(scores, min(k, n))
+    np.testing.assert_allclose(np.asarray(s)[: min(k, n)], np.asarray(rs), rtol=1e-6)
+    # ids must point at the same scores (ties may permute)
+    np.testing.assert_allclose(
+        np.asarray(scores)[np.asarray(i)[: min(k, n)]], np.asarray(rs), rtol=1e-6
+    )
+
+
+def test_block_topk_with_neg_inf():
+    scores = jnp.asarray([1.0, -jnp.inf, 3.0, -jnp.inf, 2.0], jnp.float32)
+    s, i = block_topk(scores, 3, tile=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(s), [3.0, 2.0, 1.0])
+
+
+@pytest.mark.parametrize("lq,nb", [(8, 100), (32, 2048), (5, 17)])
+def test_block_prune_sweep(lq, nb):
+    rng = np.random.default_rng(lq * nb)
+    bm = jnp.asarray(rng.gamma(1.0, 1.0, (lq, nb)) * (rng.random((lq, nb)) > 0.3), jnp.float32)
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, lq), jnp.float32)
+    theta = jnp.float32(np.quantile(np.asarray(bm).sum(0), 0.7))
+    ub, mask = block_prune(bm, qw, theta, block_nb=256, interpret=True)
+    rub, rmask = block_prune_ref(bm, qw, theta)
+    np.testing.assert_allclose(np.asarray(ub), np.asarray(rub), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(rmask))
+
+
+@pytest.mark.parametrize("n,tmax,lq", [(100, 16, 8), (512, 64, 32), (130, 7, 3)])
+def test_sparse_score_sweep(n, tmax, lq):
+    rng = np.random.default_rng(n + tmax + lq)
+    V = 500
+    dt = jnp.asarray(rng.integers(0, V, (n, tmax)), jnp.int32)
+    dw = jnp.asarray(rng.gamma(1.0, 1.0, (n, tmax)), jnp.float32)
+    qt = jnp.asarray(rng.choice(V, lq, replace=False), jnp.int32)
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, lq), jnp.float32)
+    got = sparse_score(dt, dw, qt, qw, block_d=128, interpret=True)
+    want = sparse_score_ref(dt, dw, qt, qw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_score_duplicate_query_terms():
+    """Duplicate query terms must both contribute (sum semantics)."""
+    dt = jnp.asarray([[3, 5]], jnp.int32)
+    dw = jnp.asarray([[2.0, 1.0]], jnp.float32)
+    qt = jnp.asarray([3, 3], jnp.int32)
+    qw = jnp.asarray([1.0, 0.5], jnp.float32)
+    got = sparse_score(dt, dw, qt, qw, interpret=True)
+    want = sparse_score_ref(dt, dw, qt, qw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    np.testing.assert_allclose(np.asarray(got), [3.0])

@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.archs.embedding import TableSpec, embedding_bag, embedding_lookup, fold_ids
+from repro.core.quantization import QuantConfig, dequantize, quantize
+from repro.core.topk import topk
+from repro.distributed.collectives import compress_decompress, quantize_int8, dequantize_int8
+
+_settings = settings(max_examples=30, deadline=None)
+
+
+@_settings
+@given(
+    st.lists(st.floats(0.001, 1e4), min_size=1, max_size=200),
+    st.sampled_from([4, 6, 8, 10]),
+)
+def test_quantization_error_bounded_by_step(weights, bits):
+    w = np.asarray(weights)
+    q, scale = quantize(w, QuantConfig(bits=bits))
+    deq = dequantize(q, scale)
+    assert np.all(np.abs(deq - w) <= scale + 1e-9 * np.abs(w).max())
+    assert q.max() <= (1 << bits) - 1 and q[w > 0].min() >= 1
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(2, 64))
+def test_topk_permutation_invariance(seed, n):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    k = min(8, n)
+    s1, _ = topk(jnp.asarray(x), k)
+    perm = rng.permutation(n)
+    s2, i2 = topk(jnp.asarray(x[perm]), k)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(x[perm][np.asarray(i2)], np.asarray(s1))
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(1, 300), st.integers(2, 50))
+def test_segment_sum_equals_onehot_matmul(seed, n, segs):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, segs, n)
+    vals = rng.normal(size=n).astype(np.float32)
+    got = jax.ops.segment_sum(jnp.asarray(vals), jnp.asarray(ids), num_segments=segs)
+    onehot = np.zeros((segs, n), np.float32)
+    onehot[ids, np.arange(n)] = 1.0
+    np.testing.assert_allclose(np.asarray(got), onehot @ vals, rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1))
+def test_embedding_bag_equals_dense(seed):
+    rng = np.random.default_rng(seed)
+    spec = TableSpec((7, 13, 29), 4)
+    table = jnp.asarray(rng.normal(size=(spec.total_rows, 4)).astype(np.float32))
+    nnz, bags = 40, 6
+    flat = rng.integers(0, spec.total_rows, nnz)
+    seg = np.sort(rng.integers(0, bags, nnz))
+    got = embedding_bag(table, jnp.asarray(flat), jnp.asarray(seg), bags)
+    want = np.zeros((bags, 4), np.float32)
+    for i, b in zip(flat, seg):
+        want[b] += np.asarray(table)[i]
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1))
+def test_fold_ids_in_range(seed):
+    rng = np.random.default_rng(seed)
+    spec = TableSpec((5, 11, 1000), 2)
+    ids = jnp.asarray(rng.integers(-(2**30), 2**31 - 1, (8, 3)), jnp.int32)
+    rows = np.asarray(fold_ids(jnp.abs(ids), spec))
+    offs = spec.offsets
+    for s in range(3):
+        lo, hi = offs[s], offs[s] + spec.slot_rows[s]
+        assert ((rows[:, s] >= lo) & (rows[:, s] < hi)).all()
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3000))
+def test_int8_compression_bounded_error(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32) * 10)
+    xc = compress_decompress(x, block=256)
+    # error bounded by half a quantization step per block
+    blocks = np.asarray(x)
+    err = np.abs(np.asarray(xc) - blocks)
+    step = np.abs(blocks).max() / 127
+    assert err.max() <= step + 1e-6
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_shape_dtype(seed):
+    rng = np.random.default_rng(seed)
+    shape = (rng.integers(1, 20), rng.integers(1, 20))
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    q, s = quantize_int8(x, block=64)
+    y = dequantize_int8(q, s, x.shape, x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_saat_plan_contribution_order(seed, scale):
+    """Plans always process segments in non-increasing contribution order."""
+    from repro.core import build_impact_index
+    from repro.core.saat import saat_plan
+
+    rng = np.random.default_rng(seed)
+    n_docs, n_terms, n_post = 50, 20, 300
+    d = rng.integers(0, n_docs, n_post)
+    t = rng.integers(0, n_terms, n_post)
+    w = rng.gamma(2.0, scale, n_post)
+    idx = build_impact_index(d, t, w, n_docs, n_terms)
+    qt = jnp.asarray(rng.choice(n_terms, 5, replace=False).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, 5).astype(np.float32))
+    plan = saat_plan(idx, qt, qw, max_segs_per_term=int(jnp.max(idx.term_seg_count)))
+    c = np.asarray(plan.contribs)
+    assert (np.diff(c) <= 1e-6).all()

@@ -1,0 +1,103 @@
+"""Sharding rule-table unit tests (pure functions; no multi-device needed)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    Axes,
+    FSDP_MIN_BYTES,
+    LM_RULES,
+    RECSYS_RULES,
+    spec_for_path,
+)
+
+AXES = Axes(data=("data",))
+MESH = {"data": 16, "model": 16}
+MULTI = Axes(data=("pod", "data"))
+MESH_MULTI = {"pod": 2, "data": 16, "model": 16}
+BIG = FSDP_MIN_BYTES + 1
+
+
+def test_lm_column_parallel():
+    s = spec_for_path(".blocks.0.attn.wq", (7168, 7168), LM_RULES, AXES, MESH, BIG)
+    assert s == P("data", "model")
+
+
+def test_lm_row_parallel():
+    s = spec_for_path(".blocks.0.attn.wo", (7168, 7168), LM_RULES, AXES, MESH, BIG)
+    assert s == P("model", "data")
+
+
+def test_lm_small_leaf_drops_fsdp():
+    s = spec_for_path(".blocks.0.attn.wq", (1152, 1024), LM_RULES, AXES, MESH, nbytes=1024)
+    assert s == P(None, "model")
+
+
+def test_lm_stacked_leading_axes_unsharded():
+    s = spec_for_path(".blocks.0.mlp.w_up", (4, 6, 1152, 6912), LM_RULES, AXES, MESH, BIG)
+    assert s == P(None, None, "data", "model")
+
+
+def test_lm_vocab_sharded_embed():
+    s = spec_for_path(".embed", (256000, 3072), LM_RULES, AXES, MESH, BIG)
+    assert s == P("model", None)
+
+
+def test_moe_ep_when_divisible():
+    s = spec_for_path(".blocks.0.moe.w_gate", (64, 2048, 1408), LM_RULES, AXES, MESH, BIG)
+    assert s == P("model", "data", None)
+
+
+def test_moe_fallback_when_not_divisible():
+    s = spec_for_path(".blocks.0.moe.w_gate", (40, 1536, 512), LM_RULES, AXES, MESH, BIG)
+    assert s == P(None, "data", "model")
+
+
+def _replicated(spec: P) -> bool:
+    return all(e is None for e in spec)
+
+
+def test_norms_replicated():
+    s = spec_for_path(".blocks.0.ln_attn.scale", (7168,), LM_RULES, AXES, MESH, BIG)
+    assert _replicated(s)
+
+
+def test_recsys_table_all_axes():
+    s = spec_for_path(".table", (41_943_040, 16), RECSYS_RULES, AXES, MESH, BIG)
+    assert s == P(("data", "model"), None)
+
+
+def test_recsys_table_fallback_model_only():
+    # 1040 rows: divisible by 16 (model) but not 256 (all)
+    s = spec_for_path(".table", (1040, 16), RECSYS_RULES, AXES, MESH, BIG)
+    assert s == P("model", None)
+
+
+def test_recsys_tiny_table_replicated():
+    s = spec_for_path(".table", (100, 16), RECSYS_RULES, AXES, MESH, BIG)
+    assert _replicated(s)
+
+
+def test_multipod_data_axes_grouped():
+    s = spec_for_path(".blocks.0.attn.wq", (7168, 7168), LM_RULES, MULTI, MESH_MULTI, BIG)
+    assert s == P(("pod", "data"), "model")
+
+
+def test_divisibility_partial_degrade():
+    # dim0 not divisible by model (49155 vocab) -> that dim degrades to None
+    s = spec_for_path(".embed", (49155, 1536), LM_RULES, AXES, MESH, BIG)
+    assert s == P(None, None)
+
+
+def test_param_specs_tree(tmp_path):
+    """param_specs mirrors an actual arch param tree (single-device mesh)."""
+    from repro.archs.recsys import abstract_params
+    from repro.configs import get_arch
+    from repro.distributed.sharding import param_specs
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_arch("wide-deep").smoke_config()
+    specs = param_specs(abstract_params(cfg), "recsys", mesh)
+    assert jax.tree_util.tree_structure(specs) == jax.tree_util.tree_structure(
+        abstract_params(cfg)
+    )

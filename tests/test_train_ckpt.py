@@ -1,0 +1,188 @@
+"""Trainer, optimizer, compression, and checkpoint behaviour tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed.collectives import (
+    CompressionConfig,
+    make_error_feedback_transform,
+)
+from repro.train import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    init_train_state,
+    make_train_step,
+    schedule_lr,
+    train_loop,
+)
+
+
+def _quadratic_loss(p, batch):
+    pred = batch["x"] @ p["w"] + p["b"]
+    l = jnp.mean((pred - batch["y"]) ** 2)
+    return l, {"mse": l}
+
+
+def _batches(n, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(4, 3)).astype(np.float32)
+    for _ in range(n):
+        x = rng.normal(size=(16, 4)).astype(np.float32)
+        yield {"x": jnp.asarray(x), "y": jnp.asarray(x @ w_true)}
+
+
+def test_train_loss_decreases():
+    params = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((3,))}
+    step = make_train_step(_quadratic_loss, AdamWConfig(lr=0.05, warmup_steps=1, weight_decay=0.0))
+    state, hist = train_loop(step, init_train_state(params), list(_batches(60)))
+    assert hist[-1]["loss"] < 0.1 * hist[0]["loss"]
+
+
+def test_grad_accum_equivalence():
+    """accum=4 over one batch == accum=1 over the same batch (mean loss)."""
+    params = {"w": jnp.ones((4, 3)), "b": jnp.zeros((3,))}
+    batch = next(_batches(1))
+    s1 = make_train_step(_quadratic_loss, AdamWConfig(lr=1e-2, warmup_steps=1))
+    s4 = make_train_step(_quadratic_loss, AdamWConfig(lr=1e-2, warmup_steps=1), grad_accum=4)
+    st1, _ = jax.jit(s1)(init_train_state(params), batch)
+    st4, _ = jax.jit(s4)(init_train_state(params), batch)
+    for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st4.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_adamw_matches_reference_step():
+    """One AdamW step against a hand-computed reference."""
+    cfg = AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      grad_clip_norm=0.0, schedule="constant", warmup_steps=0)
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.5])}
+    st = adamw_init(p)
+    new_p, st2, _ = adamw_update(g, st, p, cfg)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    step = (m / (1 - 0.9)) / (np.sqrt(v / (1 - 0.99)) + 1e-8)
+    np.testing.assert_allclose(float(new_p["w"][0]), 2.0 - 0.1 * step, rtol=1e-5)
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(schedule_lr(cfg, jnp.asarray(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[2] > lrs[3] > lrs[4] >= 0.1 * (1 - 1e-6)
+
+
+def test_grad_clip_caps_norm():
+    from repro.train import clip_by_global_norm, global_norm
+
+    g = {"a": jnp.full((100,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(100.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_error_feedback_compensates():
+    """With error feedback, the SUM of sent grads converges to the true sum."""
+    compress, init_res = make_error_feedback_transform(CompressionConfig(block=64))
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=256).astype(np.float32))}
+    res = init_res(g)
+    sent_total = np.zeros(256, np.float32)
+    for _ in range(20):
+        sent, res = compress(g, res)
+        sent_total += np.asarray(sent["w"])
+    np.testing.assert_allclose(sent_total / 20, np.asarray(g["w"]), atol=0.02)
+
+
+def test_compressed_grads_still_converge():
+    compress, init_res = make_error_feedback_transform(CompressionConfig(block=32))
+    residual = {"holder": None}
+    params = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((3,))}
+    residual["holder"] = init_res(params)
+
+    def transform(grads):
+        sent, residual["holder"] = compress(grads, residual["holder"])
+        return sent
+
+    step = make_train_step(
+        _quadratic_loss, AdamWConfig(lr=0.05, warmup_steps=1, weight_decay=0.0),
+        grad_transform=transform,
+    )
+    state, hist = train_loop(step, init_train_state(params), list(_batches(60)), jit=False)
+    assert hist[-1]["loss"] < 0.2 * hist[0]["loss"]
+
+
+# ------------------------------------------------------------------ checkpoint
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2, async_writes=False)
+    params = {"w": jnp.arange(12.0).reshape(3, 4), "nested": {"b": jnp.ones((2,))}}
+    state = init_train_state(params)
+    for s in (1, 2, 3):
+        cm.save(s, state)
+    assert cm.available_steps() == [2, 3]  # keep=2 GC'd step 1
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    restored, _ = cm.restore(abstract)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_structure_mismatch_rejected(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_writes=False)
+    state = init_train_state({"w": jnp.ones((2, 2))})
+    cm.save(1, state)
+    bad = init_train_state({"w": jnp.ones((2, 2)), "extra": jnp.ones((1,))})
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), bad)
+    with pytest.raises(ValueError, match="mismatch"):
+        cm.restore(abstract)
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_writes=False)
+    state = init_train_state({"w": jnp.ones((2, 2))})
+    cm.save(1, state)
+    bad = init_train_state({"w": jnp.ones((3, 2))})
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), bad)
+    with pytest.raises(ValueError, match="shape"):
+        cm.restore(abstract)
+
+
+def test_checkpoint_atomicity_tmp_dirs_invisible(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_writes=False)
+    # a crashed writer leaves a tmp dir: must not be listed as a checkpoint
+    os.makedirs(tmp_path / "step_000000007.tmp-dead")
+    state = init_train_state({"w": jnp.ones((2,))})
+    cm.save(9, state)
+    assert cm.available_steps() == [9]
+
+
+def test_checkpoint_async_writer(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_writes=True)
+    state = init_train_state({"w": jnp.ones((64, 64))})
+    cm.save(5, state)
+    cm.wait()
+    assert cm.latest_step() == 5
+
+
+def test_checkpoint_resume_training(tmp_path):
+    """Save mid-run, restore, continue — matches an uninterrupted run."""
+    params = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((3,))}
+    step = make_train_step(_quadratic_loss, AdamWConfig(lr=0.05, warmup_steps=1))
+    batches = list(_batches(10))
+    # uninterrupted
+    state_a, _ = train_loop(step, init_train_state(params), batches)
+    # interrupted at 5
+    state_b, _ = train_loop(step, init_train_state(params), batches[:5])
+    cm = CheckpointManager(str(tmp_path), async_writes=False)
+    cm.save(5, state_b)
+    abstract = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state_b)
+    restored, _ = cm.restore(abstract)
+    state_c, _ = train_loop(step, restored, batches[5:])
+    for a, c in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_c.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-5, atol=1e-6)
