@@ -14,6 +14,7 @@ def main() -> None:
         fig2_tail_latency,
         fig3_pareto,
         roofline,
+        side_batched_vs_vmap,
         side_blockmax_vs_exhaustive,
         table1_models_systems,
         table2_term_stats,
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig2_tail_latency", fig2_tail_latency.main),
         ("fig3_pareto", fig3_pareto.main),
         ("side_blockmax_vs_exhaustive", side_blockmax_vs_exhaustive.main),
+        ("side_batched_vs_vmap", side_batched_vs_vmap.main),
         ("roofline", roofline.main),
     ]
     t_all = time.time()

@@ -1,0 +1,86 @@
+"""Side experiment: natively batched SAAT engine vs the legacy vmap path.
+
+The batched engine runs the whole ``[B, Lq]`` batch as one executable — one
+batched plan argsort, one batched binary-search gather, one batch-aware
+scatter — where the legacy formulation vmaps a single-query program B times.
+Guided-traversal follow-ups show evaluator-level batching dominates learned
+sparse latency; this bench records mean and p99 per-batch latency at several
+batch sizes so the win (and where it starts) is visible on any backend.
+
+Both paths share rho, k, and scatter_impl, and return identical doc ids
+(asserted below), so the timing difference is pure execution strategy.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import saat_search, saat_search_vmap
+from repro.core.saat import max_segments_per_term
+
+K = 100
+RHO = 20_000
+MODEL = "bm25"
+BATCH_SIZES = (1, 8, 32, 64)
+SCATTER = "sort"
+REPEATS = 30
+
+
+def _timed_samples(fn, qt, qw, repeats: int) -> np.ndarray:
+    jax.block_until_ready(fn(qt, qw))  # compile
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(qt, qw))
+        out.append((time.perf_counter() - t0) * 1e3)
+    return np.asarray(out)
+
+
+def run() -> list[dict]:
+    idx = C.index_for(MODEL)
+    qt_all, qw_all = C.queries_for(MODEL)
+    ms = max_segments_per_term(idx)
+    rho = min(RHO, idx.n_postings)
+    rows = []
+    for bs in BATCH_SIZES:
+        reps = -(-bs // qt_all.shape[0])
+        qt = np.tile(np.asarray(qt_all), (reps, 1))[:bs]
+        qw = np.tile(np.asarray(qw_all), (reps, 1))[:bs]
+        qt, qw = jax.numpy.asarray(qt), jax.numpy.asarray(qw)
+
+        batched = lambda q, w: saat_search(
+            idx, q, w, k=K, rho=rho, max_segs_per_term=ms, scatter_impl=SCATTER
+        )
+        vmapped = lambda q, w: saat_search_vmap(
+            idx, q, w, k=K, rho=rho, max_segs_per_term=ms, scatter_impl=SCATTER
+        )
+        # identical doc ids, or the timing comparison is meaningless
+        rb, rv = batched(qt, qw), vmapped(qt, qw)
+        assert (np.asarray(rb.doc_ids) == np.asarray(rv.doc_ids)).all()
+
+        tb = _timed_samples(batched, qt, qw, REPEATS)
+        tv = _timed_samples(vmapped, qt, qw, REPEATS)
+        rows.append(
+            {
+                "batch": bs,
+                "rho": rho,
+                "batched_mean_ms": round(float(tb.mean()), 3),
+                "batched_p99_ms": round(float(np.percentile(tb, 99)), 3),
+                "vmap_mean_ms": round(float(tv.mean()), 3),
+                "vmap_p99_ms": round(float(np.percentile(tv, 99)), 3),
+                "mean_speedup": round(float(tv.mean() / tb.mean()), 3),
+                "batched_faster": bool(tb.mean() < tv.mean()),
+            }
+        )
+    return rows
+
+
+def main():
+    C.print_csv("Side experiment: natively batched SAAT vs vmap", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -38,5 +38,6 @@ from repro.core.saat import (  # noqa: F401
     max_segments_per_term,
     saat_plan,
     saat_search,
+    saat_search_vmap,
 )
 from repro.core.topk import merge_topk, sharded_topk_merge, tiled_topk, topk  # noqa: F401

@@ -44,6 +44,22 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
+# Static (non-array) fields of ImpactIndex. The single source of truth for
+# the pytree registration AND for every consumer that splits an index into
+# (data, meta) — e.g. repro.serving.sharded — so a new metadata field cannot
+# silently be treated as an array leaf somewhere.
+META_FIELDS = (
+    "n_docs",
+    "n_terms",
+    "n_blocks",
+    "block_size",
+    "max_doc_terms",
+    "scale",
+    "bits",
+    "max_segs",
+)
+
+
 @partial(
     jax.tree_util.register_dataclass,
     data_fields=[
@@ -65,7 +81,7 @@ def _round_up(n: int, m: int) -> int:
         "doc_n_terms",
         "doc_weight_sum",
     ],
-    meta_fields=["n_docs", "n_terms", "n_blocks", "block_size", "max_doc_terms", "scale", "bits"],
+    meta_fields=list(META_FIELDS),
 )
 @dataclasses.dataclass(frozen=True)
 class ImpactIndex:
@@ -101,6 +117,10 @@ class ImpactIndex:
     max_doc_terms: int
     scale: float
     bits: int
+    # Largest per-term segment count, computed at build time. Static plan
+    # bound for SAAT; 0 = unknown (abstract/hand-rolled indexes), in which
+    # case ``max_segments_per_term`` falls back to a device sync.
+    max_segs: int = 0
 
     @property
     def n_postings(self) -> int:
@@ -272,6 +292,7 @@ def build_impact_index(
         max_doc_terms=int(max_doc_terms),
         scale=float(scale),
         bits=int(quant.bits),
+        max_segs=int(term_seg_count.max()),
     )
 
 

@@ -14,8 +14,16 @@ executes the *identical* instruction stream — the strongest possible form of
 the paper's "SAAT has predictable latency" claim, and simultaneously the
 straggler-mitigation primitive for multi-pod serving.
 
+The engine is *natively batched*: a ``[B, Lq]`` query batch runs one batched
+argsort in the planner, one histogram-based batched ``searchsorted`` in the
+posting gather, and one batch-aware scatter — a single executable per
+(k, rho) configuration, not ``B`` vmapped single-query programs. ``saat_search_vmap`` keeps the original
+``jax.vmap(one-query)`` formulation as a parity oracle and benchmark baseline
+(``benchmarks/side_batched_vs_vmap.py``).
+
 The scatter is the hot loop; ``scatter_impl='pallas'`` routes it to the
-one-hot-matmul Pallas kernel (``repro.kernels.impact_scatter``).
+one-hot-matmul Pallas kernel (``repro.kernels.impact_scatter``), which for the
+batched engine grids over (query, doc-block, posting-tile).
 """
 from __future__ import annotations
 
@@ -31,12 +39,16 @@ from repro.core.topk import topk
 
 
 class SaatPlan(NamedTuple):
-    """Per-query segment schedule, ordered by decreasing contribution."""
+    """Per-query segment schedule, ordered by decreasing contribution.
 
-    starts: jax.Array  # i32[n_cand] posting-store offsets
-    contribs: jax.Array  # f32[n_cand] per-posting score contribution
-    cum_len: jax.Array  # i32[n_cand] inclusive prefix sum of segment lengths
-    total_postings: jax.Array  # i32[] total candidate postings
+    All fields carry the query batch dims in front (``[..., n_cand]``);
+    single-query plans are simply the rank-1 case.
+    """
+
+    starts: jax.Array  # i32[..., n_cand] posting-store offsets
+    contribs: jax.Array  # f32[..., n_cand] per-posting score contribution
+    cum_len: jax.Array  # i32[..., n_cand] inclusive prefix sum of segment lengths
+    total_postings: jax.Array  # i32[...] total candidate postings
 
 
 class SaatResult(NamedTuple):
@@ -47,7 +59,14 @@ class SaatResult(NamedTuple):
 
 
 def max_segments_per_term(index: ImpactIndex) -> int:
-    """Static bound for plan shapes (index-build-time constant)."""
+    """Static bound for plan shapes (index-build-time constant).
+
+    ``build_impact_index`` records this as ``index.max_segs`` so the serving
+    hot path never blocks on a device sync; the reduction below only runs for
+    indexes assembled by hand without the metadata.
+    """
+    if index.max_segs > 0:
+        return int(index.max_segs)
     return int(jax.device_get(index.term_seg_count.max()))
 
 
@@ -57,27 +76,52 @@ def saat_plan(
     q_weights: jax.Array,
     max_segs_per_term: int,
 ) -> SaatPlan:
-    """Build the contribution-ordered segment schedule for one query."""
+    """Build the contribution-ordered segment schedule.
+
+    Shape-polymorphic over leading batch dims: ``[Lq]`` inputs give a
+    single-query plan, ``[B, Lq]`` a batched plan whose JASS ordering is ONE
+    batched argsort over ``[B, n_cand]`` rather than B independent sorts.
+    """
     n_terms = index.n_terms
     t = jnp.where(q_weights > 0, q_terms, n_terms)  # pad slot has no segments
-    base = index.term_seg_start[t]  # [Lq]
-    cnt = jnp.minimum(index.term_seg_count[t], max_segs_per_term)  # [Lq]
+    base = index.term_seg_start[t]  # [..., Lq]
+    cnt = jnp.minimum(index.term_seg_count[t], max_segs_per_term)  # [..., Lq]
     offs = jnp.arange(max_segs_per_term, dtype=jnp.int32)
-    j = base[:, None] + offs[None, :]  # [Lq, M]
-    valid = offs[None, :] < cnt[:, None]
+    j = base[..., :, None] + offs  # [..., Lq, M]
+    valid = offs < cnt[..., :, None]
     j = jnp.where(valid, j, 0)
-    contrib = index.seg_weight[j] * q_weights[:, None].astype(jnp.float32)
+    contrib = index.seg_weight[j] * q_weights[..., :, None].astype(jnp.float32)
     contrib = jnp.where(valid, contrib, -jnp.inf)
     lens = jnp.where(valid, index.seg_len[j], 0)
     starts = jnp.where(valid, index.seg_start[j], 0)
 
-    flat_c = contrib.reshape(-1)
-    order = jnp.argsort(-flat_c)  # decreasing contribution (JASS order)
-    starts = starts.reshape(-1)[order]
-    lens = lens.reshape(-1)[order]
-    contribs = jnp.where(jnp.isfinite(flat_c[order]), flat_c[order], 0.0)
-    cum = jnp.cumsum(lens, dtype=jnp.int32)
-    return SaatPlan(starts=starts, contribs=contribs, cum_len=cum, total_postings=cum[-1])
+    flat_shape = contrib.shape[:-2] + (contrib.shape[-2] * contrib.shape[-1],)
+    flat_c = contrib.reshape(flat_shape)
+    order = jnp.argsort(-flat_c, axis=-1)  # decreasing contribution (JASS order)
+    starts = jnp.take_along_axis(starts.reshape(flat_shape), order, axis=-1)
+    lens = jnp.take_along_axis(lens.reshape(flat_shape), order, axis=-1)
+    sorted_c = jnp.take_along_axis(flat_c, order, axis=-1)
+    contribs = jnp.where(jnp.isfinite(sorted_c), sorted_c, 0.0)
+    cum = jnp.cumsum(lens, axis=-1, dtype=jnp.int32)
+    return SaatPlan(
+        starts=starts, contribs=contribs, cum_len=cum, total_postings=cum[..., -1]
+    )
+
+
+def _batched_searchsorted_slots(cum: jax.Array, rho: int) -> jax.Array:
+    """Row-wise ``searchsorted(cum[b], arange(rho), side='right')`` without vmap.
+
+    Because the queries are the *sorted* slot ids ``0..rho-1``, the binary
+    search collapses to a counting argument: ``j[b, p] = #{i : cum[b, i] <= p}``
+    is the prefix sum of a histogram of ``cum`` values. One batched
+    ``[B, n_cand]`` scatter-add plus one batched ``[B, rho]`` cumsum —
+    integer ops only, so bit-identical to ``jnp.searchsorted``.
+    """
+    B = cum.shape[0]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    bins = jnp.clip(cum, 0, rho)  # bin rho collects entries past the budget
+    hist = jnp.zeros((B, rho + 1), jnp.int32).at[rows, bins].add(1)
+    return jnp.cumsum(hist[:, :rho], axis=-1)
 
 
 def _gather_postings(
@@ -93,6 +137,26 @@ def _gather_postings(
     valid = p < plan.total_postings
     docs = index.doc_ids[jnp.where(valid, pidx, 0)]
     contribs = jnp.where(valid, plan.contribs[j], 0.0)
+    docs = jnp.where(valid, docs, 0)
+    n_processed = jnp.minimum(plan.total_postings, rho).astype(jnp.int32)
+    return docs, contribs, n_processed
+
+
+def _gather_postings_batched(
+    index: ImpactIndex, plan: SaatPlan, rho: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched slot -> posting map: one histogram searchsorted over [B, rho]."""
+    B, n_cand = plan.cum_len.shape
+    p = jnp.broadcast_to(jnp.arange(rho, dtype=jnp.int32), (B, rho))
+    j = _batched_searchsorted_slots(plan.cum_len, rho)
+    j = jnp.minimum(j, n_cand - 1)
+    prev_cum = jnp.take_along_axis(plan.cum_len, jnp.maximum(j - 1, 0), axis=-1)
+    prev = jnp.where(j > 0, prev_cum, 0)
+    offset = p - prev
+    pidx = jnp.take_along_axis(plan.starts, j, axis=-1) + offset
+    valid = p < plan.total_postings[:, None]
+    docs = index.doc_ids[jnp.where(valid, pidx, 0)]
+    contribs = jnp.where(valid, jnp.take_along_axis(plan.contribs, j, axis=-1), 0.0)
     docs = jnp.where(valid, docs, 0)
     n_processed = jnp.minimum(plan.total_postings, rho).astype(jnp.int32)
     return docs, contribs, n_processed
@@ -116,8 +180,45 @@ def _accumulate(index: ImpactIndex, docs, contribs, scatter_impl: str) -> jax.Ar
     return acc
 
 
+def _accumulate_batched(
+    index: ImpactIndex, docs: jax.Array, contribs: jax.Array, scatter_impl: str
+) -> jax.Array:
+    """Batch-aware scatter: ``docs/contribs [B, rho]`` -> ``acc [B, n_docs_pad]``."""
+    n_docs_pad = index.doc_terms.shape[0]
+    B = docs.shape[0]
+    if scatter_impl == "jnp":
+        rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+        acc = jnp.zeros((B, n_docs_pad), jnp.float32).at[rows, docs].add(contribs)
+    elif scatter_impl == "sort":
+        if B * n_docs_pad < 2**31:  # row-offset keys must fit int32
+            # One batched multi-operand sort-by-doc (docs key, contribs
+            # payload — cheaper than argsort + two gathers), then a single
+            # flat segment-sum with row-offset doc keys (row b owns keys
+            # [b*D, (b+1)*D)).
+            sd, sc = jax.lax.sort((docs, contribs), dimension=-1, num_keys=1)
+            keys = sd + jnp.arange(B, dtype=jnp.int32)[:, None] * n_docs_pad
+            acc = jax.ops.segment_sum(
+                sc.reshape(-1),
+                keys.reshape(-1),
+                num_segments=B * n_docs_pad,
+                indices_are_sorted=True,
+            ).reshape(B, n_docs_pad)
+        else:
+            # Flat keys would overflow int32 and an unsorted scatter can't
+            # exploit ordering anyway, so skip the sort entirely.
+            rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+            acc = jnp.zeros((B, n_docs_pad), jnp.float32).at[rows, docs].add(contribs)
+    elif scatter_impl == "pallas":
+        from repro.kernels.impact_scatter import ops as scatter_ops
+
+        acc = scatter_ops.impact_scatter_batched(docs, contribs, n_docs_pad)
+    else:
+        raise ValueError(f"unknown scatter_impl {scatter_impl!r}")
+    return acc
+
+
 def _mask_pad_docs(index: ImpactIndex, acc: jax.Array) -> jax.Array:
-    n_docs_pad = acc.shape[0]
+    n_docs_pad = acc.shape[-1]
     live = jnp.arange(n_docs_pad, dtype=jnp.int32) < index.n_docs
     return jnp.where(live, acc, -jnp.inf)
 
@@ -133,10 +234,40 @@ def saat_search(
     max_segs_per_term: int,
     scatter_impl: str = "jnp",
 ) -> SaatResult:
-    """Batched anytime SAAT top-k. ``q_terms/q_weights: [B, Lq]``.
+    """Natively batched anytime SAAT top-k. ``q_terms/q_weights: [B, Lq]``.
 
     ``rho`` is the JASS posting budget. Exact (rank-safe) evaluation = any
     ``rho >= index.n_postings`` (the executor stops at the query's own total).
+
+    The whole batch is one executable per (k, rho, scatter_impl): the planner
+    runs one batched argsort, the gather one batched binary search, and the
+    scatter one batch-aware kernel launch — no per-query vmapped programs.
+    """
+    if q_terms.ndim != 2:
+        raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
+    plan = saat_plan(index, q_terms, q_weights, max_segs_per_term)
+    docs, contribs, n_proc = _gather_postings_batched(index, plan, rho)
+    acc = _accumulate_batched(index, docs, contribs, scatter_impl)
+    scores, ids = topk(_mask_pad_docs(index, acc), k)
+    return SaatResult(scores, ids.astype(jnp.int32), n_proc, plan.total_postings)
+
+
+@partial(jax.jit, static_argnames=("k", "rho", "max_segs_per_term", "scatter_impl"))
+def saat_search_vmap(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    k: int,
+    rho: int,
+    max_segs_per_term: int,
+    scatter_impl: str = "jnp",
+) -> SaatResult:
+    """Legacy ``jax.vmap(one-query)`` SAAT — parity oracle / benchmark baseline.
+
+    Semantically identical to :func:`saat_search`; kept so the batched engine
+    can be validated bit-for-bit on doc ids and raced in
+    ``benchmarks/side_batched_vs_vmap.py``.
     """
 
     def one(qt, qw):

@@ -287,8 +287,36 @@ def constraint(x, mesh: Optional[Mesh], *spec):
 # --------------------------------------------------------------------------
 
 
+def _get_abstract_mesh():
+    """Version-tolerant ambient-mesh lookup.
+
+    ``jax.sharding.get_abstract_mesh`` only exists in newer JAX releases; on
+    older ones the ambient mesh set by ``with mesh:`` lives in
+    ``jax._src.mesh.thread_resources``. When the new API exists but reports
+    no mesh (e.g. the scope was entered via the legacy ``with mesh:``
+    context rather than ``jax.set_mesh``), fall through to the
+    thread-resources lookup rather than trusting the empty answer. Returns
+    ``None`` when no mesh scope is active (or the private fallback is
+    unavailable), so callers degrade to the documented no-op.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        m = get()
+        if m is not None and not m.empty:
+            return m
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        m = _mesh_lib.thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return None
+    if m is None or m.empty:
+        return None
+    return m
+
+
 def current_axes() -> Optional[Axes]:
-    m = jax.sharding.get_abstract_mesh()
+    m = _get_abstract_mesh()
     if m is None or m.empty or not m.axis_names:
         return None
     data = tuple(n for n in m.axis_names if n != "model")
@@ -300,7 +328,7 @@ def current_axes() -> Optional[Axes]:
 
 def ambient_axis_size(token: str) -> int:
     """Size of a logical axis group under the ambient mesh (1 if none)."""
-    m = jax.sharding.get_abstract_mesh()
+    m = _get_abstract_mesh()
     axes = current_axes()
     if axes is None:
         return 1

@@ -1,1 +1,1 @@
-from repro.kernels.impact_scatter.ops import impact_scatter  # noqa: F401
+from repro.kernels.impact_scatter.ops import impact_scatter, impact_scatter_batched  # noqa: F401

@@ -54,6 +54,83 @@ def _scatter_kernel(ranges_ref, docs_ref, contribs_ref, acc_ref, *, block_d: int
         acc_ref[0, :] += partial[:, 0]
 
 
+def _scatter_kernel_batched(ranges_ref, docs_ref, contribs_ref, acc_ref, *, block_d: int):
+    d = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    block_start = d * block_d
+    tile_lo = ranges_ref[0, 0, 0]
+    tile_hi = ranges_ref[0, 0, 1]
+    overlaps = (tile_lo < block_start + block_d) & (tile_hi > block_start)
+
+    @pl.when(overlaps)
+    def _accumulate():
+        docs = docs_ref[0, 0, :]  # i32[TP]
+        c = contribs_ref[0, 0, :]  # f32[TP]
+        local = docs - block_start
+        bd = acc_ref.shape[2]
+        tp = docs.shape[0]
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, (bd, tp), 0)
+        onehot = (row_ids == local[None, :]).astype(jnp.float32)
+        partial = jnp.dot(onehot, c[:, None], preferred_element_type=jnp.float32)  # [BD, 1]
+        acc_ref[0, 0, :] += partial[:, 0]
+
+
+def impact_scatter_batched_kernel(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    tile_ranges: jax.Array,
+    *,
+    n_docs: int,
+    block_d: int = 512,
+    tile_p: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched scatter-add: one grid axis over queries, then (blocks x tiles).
+
+    The per-query accumulator block is revisited across the innermost tile
+    axis exactly as in the single-query kernel, so VMEM residency and the
+    skip-range optimization carry over unchanged; queries never share an
+    accumulator, so no cross-query reduction is needed.
+
+    Args:
+      doc_ids: i32[B, P], P % tile_p == 0, values in [0, n_docs).
+      contribs: f32[B, P].
+      tile_ranges: i32[B, P // tile_p, 2] per-(query, tile) doc-id bounds.
+      n_docs: accumulator length; must be % block_d == 0.
+
+    Returns:
+      f32[B, n_docs] accumulators.
+    """
+    B, P = doc_ids.shape
+    assert P % tile_p == 0, (P, tile_p)
+    assert n_docs % block_d == 0, (n_docs, block_d)
+    n_tiles = P // tile_p
+    n_blocks = n_docs // block_d
+
+    grid = (B, n_blocks, n_tiles)
+    docs3d = doc_ids.reshape(B, n_tiles, tile_p)
+    c3d = contribs.astype(jnp.float32).reshape(B, n_tiles, tile_p)
+
+    out = pl.pallas_call(
+        functools.partial(_scatter_kernel_batched, block_d=block_d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 2), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_d), lambda b, d, t: (b, d, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_blocks, block_d), jnp.float32),
+        interpret=interpret,
+    )(tile_ranges, docs3d, c3d)
+    return out.reshape(B, n_docs)
+
+
 def impact_scatter_kernel(
     doc_ids: jax.Array,
     contribs: jax.Array,

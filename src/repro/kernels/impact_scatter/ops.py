@@ -12,7 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default, pad_axis, round_up
-from repro.kernels.impact_scatter.kernel import impact_scatter_kernel
+from repro.kernels.impact_scatter.kernel import (
+    impact_scatter_batched_kernel,
+    impact_scatter_kernel,
+)
 
 
 @partial(
@@ -65,3 +68,61 @@ def impact_scatter(
         interpret=interpret,
     )
     return acc[:n_docs]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_docs", "block_d", "tile_p", "sort_by_doc", "interpret"),
+)
+def impact_scatter_batched(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    *,
+    block_d: int = 512,
+    tile_p: int = 512,
+    sort_by_doc: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """acc[b, d] = sum of contribs[b] with doc_ids[b] == d, natively batched.
+
+    The whole batch runs as ONE kernel launch with a grid axis over queries —
+    the batched SAAT engine's hot loop. ``sort_by_doc=True`` applies a single
+    batched argsort along the posting axis so each (query, tile) covers a
+    narrow doc range and the kernel skips non-overlapping accumulator blocks,
+    exactly as in the single-query path.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n_docs_pad = round_up(max(n_docs, block_d), block_d)
+    docs = doc_ids.astype(jnp.int32)
+    c = contribs.astype(jnp.float32)
+    if sort_by_doc:
+        # multi-operand sort: docs key, contribs payload (one fused pass
+        # instead of argsort + two gathers)
+        docs, c = jax.lax.sort((docs, c), dimension=-1, num_keys=1)
+    docs = pad_axis(docs, 1, tile_p, fill=0)
+    c = pad_axis(c, 1, tile_p, fill=0.0)
+    B = docs.shape[0]
+    n_tiles = docs.shape[1] // tile_p
+    tiles = docs.reshape(B, n_tiles, tile_p)
+    if sort_by_doc:
+        ranges = jnp.stack([tiles.min(axis=2), tiles.max(axis=2) + 1], axis=2)
+    else:
+        ranges = jnp.stack(
+            [
+                jnp.zeros((B, n_tiles), jnp.int32),
+                jnp.full((B, n_tiles), n_docs_pad, jnp.int32),
+            ],
+            axis=2,
+        )
+    acc = impact_scatter_batched_kernel(
+        docs,
+        c,
+        ranges.astype(jnp.int32),
+        n_docs=n_docs_pad,
+        block_d=block_d,
+        tile_p=tile_p,
+        interpret=interpret,
+    )
+    return acc[:, :n_docs]

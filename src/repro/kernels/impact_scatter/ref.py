@@ -13,3 +13,13 @@ def impact_scatter_ref(doc_ids: jax.Array, contribs: jax.Array, n_docs: int) -> 
     """
     acc = jnp.zeros((n_docs,), jnp.float32)
     return acc.at[doc_ids].add(contribs.astype(jnp.float32))
+
+
+def impact_scatter_batched_ref(
+    doc_ids: jax.Array, contribs: jax.Array, n_docs: int
+) -> jax.Array:
+    """Batched oracle: acc[b, d] = sum of contribs[b] whose doc_ids[b] == d."""
+    B = doc_ids.shape[0]
+    acc = jnp.zeros((B, n_docs), jnp.float32)
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    return acc.at[rows, doc_ids].add(contribs.astype(jnp.float32))

@@ -4,8 +4,11 @@ The paper's core serving claim is that SAAT's posting budget rho makes query
 cost — and therefore latency — *predictable*. This module turns that into a
 deadline controller: given a target latency, pick the largest rho whose
 predicted cost fits. Because rho is a static tensor shape, the controller
-quantizes to a ladder of pre-compiled rho levels (one executable per level;
-switching levels never recompiles at serve time).
+quantizes to a ladder of pre-compiled rho levels — and because ``saat_search``
+is natively batched, each level is ONE batched executable over the whole
+``[B, Lq]`` query batch (single batched plan sort, gather, and scatter), not
+``B`` vmapped single-query programs. Switching levels never recompiles at
+serve time.
 
 At pod scale, documents shard over the ``model`` axis: each chip runs the
 identical rho-budgeted scan over its shard and ships only its k finalists
@@ -58,7 +61,13 @@ class _CostModel:
 
 
 class AnytimeServer:
-    """Batched SAAT serving over one impact index."""
+    """Batched SAAT serving over one impact index.
+
+    Every ``search_batch`` call dispatches the natively batched engine; the
+    per-rho executables are compiled once (``warmup``) and reused. The plan
+    bound ``max_segs`` comes from index build-time metadata, so constructing
+    a server never blocks on a device sync.
+    """
 
     def __init__(self, index: ImpactIndex, cfg: ServingConfig):
         self.index = index

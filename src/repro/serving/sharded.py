@@ -29,7 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.impact_index import ImpactIndex, build_impact_index
+from repro.core.impact_index import ImpactIndex, META_FIELDS as _META_FIELDS, build_impact_index
 from repro.core.quantization import QuantConfig
 from repro.core.saat import saat_search
 from repro.core.topk import sharded_topk_merge
@@ -85,10 +85,7 @@ def stack_indexes(shards: list[ImpactIndex]) -> ImpactIndex:
     corpus-level constants); per-term CSR tables are padded per shard.
     """
     fields = [f.name for f in dataclasses.fields(ImpactIndex)]
-    data_fields = [
-        f for f in fields
-        if f not in ("n_docs", "n_terms", "n_blocks", "block_size", "max_doc_terms", "scale", "bits")
-    ]
+    data_fields = [f for f in fields if f not in _META_FIELDS]
     stacked = {}
     for f in data_fields:
         if f in ("doc_terms", "doc_weights"):
@@ -96,11 +93,11 @@ def stack_indexes(shards: list[ImpactIndex]) -> ImpactIndex:
         arrs = [np.asarray(jax.device_get(getattr(s, f))) for s in shards]
         fill = 0
         stacked[f] = jnp.asarray(_pad_cat(arrs, fill))
-    meta = {
-        k: getattr(shards[0], k)
-        for k in ("n_docs", "n_terms", "n_blocks", "block_size", "scale", "bits")
-    }
-    meta["max_doc_terms"] = max(s.max_doc_terms for s in shards)
+    # shard-invariant meta comes from shard 0; size-like bounds take the max
+    _RAGGED_META = ("max_doc_terms", "max_segs")
+    meta = {k: getattr(shards[0], k) for k in _META_FIELDS if k not in _RAGGED_META}
+    for k in _RAGGED_META:
+        meta[k] = max(getattr(s, k) for s in shards)
     # re-pad doc-major stores to a common Tmax
     tmax = meta["max_doc_terms"]
     dts = [np.asarray(jax.device_get(s.doc_terms)) for s in shards]
@@ -184,7 +181,10 @@ def make_sharded_serve_step(
     Inside ``shard_map``: every model-rank runs the identical rho-budgeted
     SAAT over its local doc shard, globalizes ids by its shard offset, then
     merges finalists with a k-sized all-gather over ``model``. Data axes
-    carry the query batch.
+    carry the query batch; each rank's local batch executes the natively
+    batched engine (one plan sort / gather / scatter for the whole block),
+    so the per-chip instruction stream stays identical across ranks AND
+    independent of batch composition.
     """
     axes = mesh_axes(mesh)
     dp = axes.data if len(axes.data) > 1 else axes.data[0]
@@ -227,9 +227,6 @@ def make_sharded_serve_step(
         return sm(data, q_terms, q_weights)
 
     return serve, in_specs, out_specs
-
-
-_META_FIELDS = ("n_docs", "n_terms", "n_blocks", "block_size", "max_doc_terms", "scale", "bits")
 
 
 def _index_data_dict(index: ImpactIndex) -> dict:

@@ -8,8 +8,8 @@ from repro.kernels.block_prune.ops import block_prune
 from repro.kernels.block_prune.ref import block_prune_ref
 from repro.kernels.block_topk.ops import block_topk
 from repro.kernels.block_topk.ref import block_topk_ref
-from repro.kernels.impact_scatter.ops import impact_scatter
-from repro.kernels.impact_scatter.ref import impact_scatter_ref
+from repro.kernels.impact_scatter.ops import impact_scatter, impact_scatter_batched
+from repro.kernels.impact_scatter.ref import impact_scatter_batched_ref, impact_scatter_ref
 from repro.kernels.sparse_score.ops import sparse_score
 from repro.kernels.sparse_score.ref import sparse_score_ref
 
@@ -41,6 +41,44 @@ def test_impact_scatter_zero_contrib_padding():
     contribs = jnp.zeros(256, jnp.float32)
     got = impact_scatter(docs, contribs, 128, interpret=True)
     assert float(jnp.abs(got).max()) == 0.0
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+@pytest.mark.parametrize("n_postings", [128, 1000])
+@pytest.mark.parametrize("sort_by_doc", [True, False])
+def test_impact_scatter_batched_sweep(batch, n_postings, sort_by_doc):
+    n_docs = 700
+    rng = np.random.default_rng(batch * 1000 + n_postings)
+    docs = jnp.asarray(rng.integers(0, n_docs, (batch, n_postings)), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, (batch, n_postings)), jnp.float32)
+    got = impact_scatter_batched(
+        docs, contribs, n_docs, block_d=256, tile_p=128, sort_by_doc=sort_by_doc, interpret=True
+    )
+    want = impact_scatter_batched_ref(docs, contribs, n_docs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_impact_scatter_batched_matches_per_query_kernel():
+    """Batched kernel rows == the single-query kernel run row by row."""
+    rng = np.random.default_rng(7)
+    B, P, D = 4, 512, 600
+    docs = jnp.asarray(rng.integers(0, D, (B, P)), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, (B, P)), jnp.float32)
+    got = impact_scatter_batched(docs, contribs, D, block_d=256, tile_p=128, interpret=True)
+    for b in range(B):
+        row = impact_scatter(docs[b], contribs[b], D, block_d=256, tile_p=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(row), rtol=1e-5, atol=1e-5)
+
+
+def test_impact_scatter_batched_rows_independent():
+    """A hot row must not leak into its neighbors' accumulators."""
+    B, P, D = 3, 256, 512
+    docs = jnp.zeros((B, P), jnp.int32)
+    contribs = jnp.zeros((B, P), jnp.float32)
+    contribs = contribs.at[1, :].set(1.0)
+    got = impact_scatter_batched(docs, contribs, D, block_d=256, tile_p=128, interpret=True)
+    assert float(jnp.abs(got[0]).max()) == 0.0 and float(jnp.abs(got[2]).max()) == 0.0
+    assert float(got[1, 0]) == float(P)
 
 
 @pytest.mark.parametrize("n,k,tile", [(1000, 10, 256), (8192, 100, 1024), (100, 100, 128), (5000, 7, 512)])

@@ -1,0 +1,135 @@
+"""Parity suite for the natively batched SAAT engine.
+
+The batched engine must be indistinguishable from the legacy vmap path
+(bit-for-bit on doc ids, fp32 tolerance on scores) and from the exhaustive
+oracle at a rank-safe rho — for every scatter_impl, including ragged batches
+with zero-weight pad terms and budgets past the total posting count.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact_rho, exhaustive_search, saat_search, saat_search_vmap
+from repro.core.saat import max_segments_per_term, saat_plan
+from repro.metrics.ir_metrics import rank_overlap
+
+SCATTER_IMPLS = ("jnp", "sort", "pallas")
+
+
+def _assert_engines_match(index, qt, qw, *, k, rho, impl):
+    ms = max_segments_per_term(index)
+    b = saat_search(index, qt, qw, k=k, rho=rho, max_segs_per_term=ms, scatter_impl=impl)
+    v = saat_search_vmap(index, qt, qw, k=k, rho=rho, max_segs_per_term=ms, scatter_impl=impl)
+    np.testing.assert_array_equal(np.asarray(b.doc_ids), np.asarray(v.doc_ids))
+    np.testing.assert_allclose(np.asarray(b.scores), np.asarray(v.scores), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(b.postings_processed), np.asarray(v.postings_processed)
+    )
+    np.testing.assert_array_equal(np.asarray(b.total_postings), np.asarray(v.total_postings))
+    return b
+
+
+@pytest.mark.parametrize("impl", SCATTER_IMPLS)
+def test_batched_matches_vmap_budgeted(bm25_index, bm25_queries, impl):
+    qt, qw = bm25_queries
+    _assert_engines_match(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, rho=500, impl=impl
+    )
+
+
+@pytest.mark.parametrize("impl", SCATTER_IMPLS)
+def test_batched_matches_vmap_and_exhaustive_at_exact_rho(bm25_index, bm25_queries, impl):
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt), jnp.asarray(qw)
+    b = _assert_engines_match(
+        bm25_index, qt, qw, k=10, rho=exact_rho(bm25_index), impl=impl
+    )
+    ex = exhaustive_search(bm25_index, qt, qw, k=10)
+    np.testing.assert_allclose(np.asarray(b.scores), np.asarray(ex.scores), rtol=1e-3, atol=1e-3)
+    assert rank_overlap(np.asarray(b.doc_ids), np.asarray(ex.doc_ids), 10) > 0.99
+
+
+@pytest.mark.parametrize("impl", SCATTER_IMPLS)
+def test_batched_rho_beyond_total_postings(bm25_index, bm25_queries, impl):
+    """A budget past every query's postings must stop at each query's total."""
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt[:6]), jnp.asarray(qw[:6])
+    rho = exact_rho(bm25_index) * 2
+    b = _assert_engines_match(bm25_index, qt, qw, k=10, rho=rho, impl=impl)
+    assert (
+        np.asarray(b.postings_processed) == np.asarray(b.total_postings)
+    ).all()
+
+
+@pytest.mark.parametrize("impl", SCATTER_IMPLS)
+def test_batched_ragged_batch_with_pad_terms(bm25_index, bm25_queries, impl):
+    """Rows with mostly zero-weight pad terms ride the same executable."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:8]), np.array(qw[:8])
+    # make the batch ragged: progressively zero out trailing terms per row
+    for i in range(qt.shape[0]):
+        keep = max(1, qt.shape[1] - i)
+        qw[i, keep:] = 0.0
+        qt[i, keep:] = bm25_index.n_terms  # pad slot
+    b = _assert_engines_match(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, rho=2000, impl=impl
+    )
+    # shorter queries have fewer candidate postings
+    totals = np.asarray(b.total_postings)
+    assert totals[-1] <= totals[0]
+
+
+@pytest.mark.parametrize("impl", SCATTER_IMPLS)
+def test_batched_all_pad_query_row(bm25_index, bm25_queries, impl):
+    """An all-zero-weight row must produce empty results, not garbage."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:4]), np.array(qw[:4])
+    qw[2] = 0.0
+    qt[2] = bm25_index.n_terms
+    b = _assert_engines_match(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, rho=1000, impl=impl
+    )
+    assert int(np.asarray(b.total_postings)[2]) == 0
+    assert int(np.asarray(b.postings_processed)[2]) == 0
+    np.testing.assert_allclose(np.asarray(b.scores)[2], 0.0)
+
+
+def test_batched_batch_of_one(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    _assert_engines_match(
+        bm25_index, jnp.asarray(qt[:1]), jnp.asarray(qw[:1]), k=5, rho=300, impl="jnp"
+    )
+
+
+def test_saat_search_rejects_unbatched_input(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    with pytest.raises(ValueError, match="B, Lq"):
+        saat_search(
+            bm25_index,
+            jnp.asarray(qt[0]),
+            jnp.asarray(qw[0]),
+            k=5,
+            rho=100,
+            max_segs_per_term=max_segments_per_term(bm25_index),
+        )
+
+
+def test_batched_plan_matches_single_query_plans(bm25_index, bm25_queries):
+    """saat_plan on [B, Lq] == stacking B single-query plans."""
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt[:5]), jnp.asarray(qw[:5])
+    ms = max_segments_per_term(bm25_index)
+    batched = saat_plan(bm25_index, qt, qw, ms)
+    for i in range(qt.shape[0]):
+        single = saat_plan(bm25_index, qt[i], qw[i], ms)
+        np.testing.assert_array_equal(np.asarray(batched.starts[i]), np.asarray(single.starts))
+        np.testing.assert_array_equal(np.asarray(batched.cum_len[i]), np.asarray(single.cum_len))
+        np.testing.assert_allclose(
+            np.asarray(batched.contribs[i]), np.asarray(single.contribs)
+        )
+
+
+def test_max_segments_cached_without_device_sync(bm25_index):
+    assert bm25_index.max_segs > 0
+    assert max_segments_per_term(bm25_index) == bm25_index.max_segs
+    assert bm25_index.max_segs == int(np.asarray(bm25_index.term_seg_count).max())
