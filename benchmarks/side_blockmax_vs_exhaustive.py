@@ -10,7 +10,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import blockmax_search, exhaustive_search
+from repro.core import daat_search_batched, daat_search_vmap, exhaustive_search
 from repro.core.daat import max_blocks_per_term
 from repro.core.wacky import blockmax_tightness, skip_opportunity
 
@@ -26,10 +26,14 @@ def run() -> list[dict]:
         qt, qw = C.queries_for(model)
         mb = max_blocks_per_term(idx)
         _, ex_secs = C.timed(lambda q, w: exhaustive_search(idx, q, w, k=K), qt[:BATCH], qw[:BATCH])
-        daat = lambda q, w: blockmax_search(
+        daat = lambda q, w: daat_search_batched(
+            idx, q, w, k=K, est_blocks=8, block_budget=16, max_bm_per_term=mb, exact=True
+        )
+        daat_vmap = lambda q, w: daat_search_vmap(
             idx, q, w, k=K, est_blocks=8, block_budget=16, max_bm_per_term=mb, exact=True
         )
         full, daat_secs = C.timed(daat, qt[:BATCH], qw[:BATCH])
+        _, vmap_secs = C.timed(daat_vmap, qt[:BATCH], qw[:BATCH])
         skip = skip_opportunity(idx, qt, qw, k=K, max_bm_per_term=mb)
         tight = blockmax_tightness(idx)
         rows.append(
@@ -40,6 +44,7 @@ def run() -> list[dict]:
                 "blocks_scored_mean": int(np.asarray(daat(qt, qw).blocks_scored).mean()),
                 "blocks_total": idx.n_blocks,
                 "daat_us_per_q": round(daat_secs / BATCH * 1e6, 1),
+                "daat_vmap_us_per_q": round(vmap_secs / BATCH * 1e6, 1),
                 "exhaustive_us_per_q": round(ex_secs / BATCH * 1e6, 1),
                 "daat_slower": bool(daat_secs > ex_secs),
             }

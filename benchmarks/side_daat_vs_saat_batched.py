@@ -1,0 +1,97 @@
+"""Side experiment: batched SAAT vs batched DAAT — the paper's Fig. 2 regime.
+
+After PR 1 only SAAT ran as one natively batched executable, so the repo's
+headline SAAT-vs-DAAT numbers compared a batched engine against B vmapped
+programs — apples to oranges at serving scale. With ``daat_search_batched``
+both engines now execute the whole ``[B, Lq]`` batch as ONE executable each,
+so this bench finally reports an apples-to-apples throughput / tail-latency
+comparison:
+
+  * SAAT: rho-budgeted cost, identical instruction stream per batch — mean
+    and p99 should sit on top of each other (predictable latency);
+  * DAAT: the single while_loop runs until the SLOWEST query in the batch is
+    rank-safe — mean/p99 spread is the paper's data-dependent tail, now
+    measured per batched executable.
+
+Run across models: BM25's skewed weights keep the DAAT loop short; wacky
+learned weights (spladev2) collapse skipping and stretch its tail.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import daat_search_batched, saat_search
+from repro.core.daat import max_blocks_per_term
+from repro.core.saat import max_segments_per_term
+
+K = 100
+RHO = 20_000
+MODELS = ("bm25", "spladev2")
+BATCH_SIZES = (1, 8, 32)
+SCATTER = "sort"
+EST_BLOCKS = 8
+BLOCK_BUDGET = 16
+REPEATS = 30
+
+
+def _timed_samples(fn, qt, qw, repeats: int) -> np.ndarray:
+    jax.block_until_ready(fn(qt, qw))  # compile
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(qt, qw))
+        out.append((time.perf_counter() - t0) * 1e3)
+    return np.asarray(out)
+
+
+def run() -> list[dict]:
+    rows = []
+    for model in MODELS:
+        idx = C.index_for(model)
+        qt_all, qw_all = C.queries_for(model)
+        ms = max_segments_per_term(idx)
+        mb = max_blocks_per_term(idx)
+        rho = min(RHO, idx.n_postings)
+        for bs in BATCH_SIZES:
+            reps = -(-bs // qt_all.shape[0])
+            qt = np.tile(np.asarray(qt_all), (reps, 1))[:bs]
+            qw = np.tile(np.asarray(qw_all), (reps, 1))[:bs]
+            qt, qw = jax.numpy.asarray(qt), jax.numpy.asarray(qw)
+
+            saat = lambda q, w: saat_search(
+                idx, q, w, k=K, rho=rho, max_segs_per_term=ms, scatter_impl=SCATTER
+            )
+            daat = lambda q, w: daat_search_batched(
+                idx, q, w, k=K, est_blocks=EST_BLOCKS, block_budget=BLOCK_BUDGET,
+                max_bm_per_term=mb, exact=True,
+            )
+            ts = _timed_samples(saat, qt, qw, REPEATS)
+            td = _timed_samples(daat, qt, qw, REPEATS)
+            work = daat(qt, qw)
+            rows.append(
+                {
+                    "model": model,
+                    "batch": bs,
+                    "saat_mean_ms": round(float(ts.mean()), 3),
+                    "saat_p99_ms": round(float(np.percentile(ts, 99)), 3),
+                    "daat_mean_ms": round(float(td.mean()), 3),
+                    "daat_p99_ms": round(float(np.percentile(td, 99)), 3),
+                    "daat_chunks_max": int(np.asarray(work.chunks).max()),
+                    "daat_blocks_scored_mean": int(np.asarray(work.blocks_scored).mean()),
+                    "blocks_total": idx.n_blocks,
+                    "saat_faster": bool(ts.mean() < td.mean()),
+                }
+            )
+    return rows
+
+
+def main():
+    C.print_csv("Side experiment: batched SAAT vs batched DAAT", run())
+
+
+if __name__ == "__main__":
+    main()

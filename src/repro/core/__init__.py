@@ -5,16 +5,23 @@ Public API:
     QuantConfig, quantize, dequantize     impact quantization
     ImpactIndex, build_impact_index       JASS-style impact-ordered index
     saat_search, exact_rho                anytime SAAT (rho posting budget)
-    blockmax_search                       vectorized Block-Max DAAT
+    daat_search_batched                   natively batched Block-Max DAAT
+    blockmax_search / daat_search_vmap    vmapped Block-Max DAAT (parity oracle)
     exhaustive_search                     rank-safe exhaustive disjunction
     wacky.*                               weight-wackiness analyzers
     pareto.*                              effectiveness/efficiency frontier
 """
 from repro.core.daat import (  # noqa: F401
+    DaatPlan,
     DaatResult,
+    WorkStats,
     blockmax_search,
     block_upper_bounds,
+    daat_plan,
+    daat_search_batched,
+    daat_search_vmap,
     max_blocks_per_term,
+    query_vectors,
     score_blocks,
 )
 from repro.core.exhaustive import ExhaustiveResult, exhaustive_search, score_all_docs  # noqa: F401

@@ -20,6 +20,37 @@ the bounds are loose, almost nothing is skippable, and the loop degenerates
 toward exhaustive scoring — reproducing both the paper's DAAT slowdown *and*
 its unpredictable tail latency, structurally, on TPU. ``WorkStats`` exposes
 the survivor counts that quantify the collapse (benchmarks Table 1 / §4.2).
+
+Batched while_loop semantics
+----------------------------
+Like the SAAT engine (PR 1), DAAT now has a *natively batched* formulation,
+``daat_search_batched``: the whole ``[B, Lq]`` query batch is ONE executable —
+one batched block-upper-bound scatter (``ub[b_q, blk]``), one batched phase-1
+scoring pass, and a SINGLE ``lax.while_loop`` whose state carries every
+query's (pool, processed-set, theta, chunk-count) side by side. Each query's
+threshold dynamics stay *independent*:
+
+  * the loop condition is ``any(active)`` where ``active[q]`` is exactly the
+    per-query condition the single-query loop would evaluate
+    (``max remaining ub > theta AND chunks < max_chunks``);
+  * the body computes one batched chunk step, then per-query ``where`` masks
+    keep every *inactive* query's state frozen — a query that became
+    rank-safe idles (its rows ride along untouched) while stragglers keep
+    scoring.
+
+This replicates ``jax.vmap``-of-``while_loop`` semantics by construction, so
+``daat_search_batched`` is bit-identical to the ``daat_search_vmap`` oracle —
+but the batch executes as one program (one scatter, one top-k, one scorer per
+iteration) instead of B interleaved vmapped programs. Tail latency remains
+data-dependent *by design*: the batch runs until its SLOWEST query is done
+(max over per-query trip counts), which is precisely the paper's DAAT
+tail-latency mechanism, now measured per batch. ``WorkStats`` is still
+per-query: survivor counts, scored-block counts, trip counts, and rank-safety
+flags are carried through the masked loop unchanged.
+
+``daat_search_vmap`` (the historical ``blockmax_search``, kept as an alias)
+remains the parity oracle and benchmark baseline
+(``benchmarks/side_daat_vs_saat_batched.py``).
 """
 from __future__ import annotations
 
@@ -33,6 +64,15 @@ from repro.core.impact_index import ImpactIndex, query_vector
 from repro.core.topk import merge_topk, topk
 
 
+class WorkStats(NamedTuple):
+    """Per-query DAAT work metrics — the paper's skipping-collapse evidence."""
+
+    n_survivors: jax.Array  # i32[...] blocks with ub > theta after phase 1
+    blocks_scored: jax.Array  # i32[...] total blocks actually scored
+    chunks: jax.Array  # i32[...] while_loop trip count (tail-latency proxy)
+    rank_safe: jax.Array  # bool[...] all survivors were scored
+
+
 class DaatResult(NamedTuple):
     scores: jax.Array  # f32[..., k]
     doc_ids: jax.Array  # i32[..., k]
@@ -41,10 +81,49 @@ class DaatResult(NamedTuple):
     chunks: jax.Array  # i32[...] while_loop trip count (tail-latency proxy)
     rank_safe: jax.Array  # bool[...] all survivors were scored
 
+    @property
+    def stats(self) -> WorkStats:
+        return WorkStats(self.n_survivors, self.blocks_scored, self.chunks, self.rank_safe)
+
+
+class DaatPlan(NamedTuple):
+    """Batched phase-0 output: per-query dense vectors the scorer consumes.
+
+    Fields carry an optional leading query-batch dim (``[Lq]`` or ``[B, Lq]``
+    inputs); single-query plans are the rank-1 case.
+    """
+
+    ub: jax.Array  # f32[..., n_blocks] additive block upper bounds
+    qvec: jax.Array  # f32[..., n_terms + 1] dense query vector (pad slot 0)
+
 
 def max_blocks_per_term(index: ImpactIndex) -> int:
-    """Static bound on per-term block-max list length (safety: must not clip)."""
+    """Static bound on per-term block-max list length (safety: must not clip).
+
+    ``build_impact_index`` records this as ``index.max_bm`` so DAAT serving
+    setup never blocks on a device sync (mirroring ``max_segs`` for SAAT);
+    the reduction below only runs for indexes assembled by hand without the
+    metadata.
+    """
+    if index.max_bm > 0:
+        return int(index.max_bm)
     return int(jax.device_get(index.term_bm_count.max()))
+
+
+def query_vectors(index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array) -> jax.Array:
+    """Dense query vectors over V+1 slots: ``[Lq]`` or ``[B, Lq]`` inputs.
+
+    The batched (rank-2) case is ONE scatter over ``[B, V+1]`` (duplicate
+    query terms sum, pad slot forced to 0), not B vmapped scatters.
+    """
+    if q_terms.ndim == 1:
+        return query_vector(index, q_terms, q_weights)
+    n_terms = index.n_terms
+    safe = jnp.where(q_weights > 0, q_terms, n_terms)
+    qvec = jnp.zeros(q_terms.shape[:-1] + (n_terms + 1,), jnp.float32)
+    rows = jnp.arange(q_terms.shape[0], dtype=jnp.int32)[:, None]
+    qvec = qvec.at[rows, safe].add(q_weights.astype(jnp.float32))
+    return qvec.at[..., n_terms].set(0.0)
 
 
 def block_upper_bounds(
@@ -53,19 +132,43 @@ def block_upper_bounds(
     q_weights: jax.Array,
     max_bm_per_term: int,
 ) -> jax.Array:
-    """BMW-style additive upper bound for every document block. f32[n_blocks]."""
+    """BMW-style additive upper bound for every document block.
+
+    ``[Lq]`` inputs give ``f32[n_blocks]``; ``[B, Lq]`` inputs give
+    ``f32[B, n_blocks]`` computed by ONE batched scatter-add over the
+    per-term block-max lists (``ub[b_q, blk] = sum_t qw * blockmax``).
+    Ranks above 2 are not supported (the row-index scatter is rank-2).
+    """
     n_terms = index.n_terms
     t = jnp.where(q_weights > 0, q_terms, n_terms)
     base = index.term_bm_start[t]
     cnt = jnp.minimum(index.term_bm_count[t], max_bm_per_term)
     offs = jnp.arange(max_bm_per_term, dtype=jnp.int32)
-    idx = base[:, None] + offs[None, :]
-    valid = offs[None, :] < cnt[:, None]
+    idx = base[..., :, None] + offs
+    valid = offs < cnt[..., :, None]
     idx = jnp.where(valid, idx, 0)
     blocks = jnp.where(valid, index.bm_block[idx], 0)
-    w = jnp.where(valid, index.bm_weight[idx] * q_weights[:, None].astype(jnp.float32), 0.0)
-    ub = jnp.zeros((index.n_blocks,), jnp.float32)
-    return ub.at[blocks.reshape(-1)].add(w.reshape(-1))
+    w = jnp.where(valid, index.bm_weight[idx] * q_weights[..., :, None].astype(jnp.float32), 0.0)
+    flat = blocks.shape[:-2] + (blocks.shape[-2] * blocks.shape[-1],)
+    blocks, w = blocks.reshape(flat), w.reshape(flat)
+    ub = jnp.zeros(blocks.shape[:-1] + (index.n_blocks,), jnp.float32)
+    if blocks.ndim == 1:
+        return ub.at[blocks].add(w)
+    rows = jnp.arange(blocks.shape[0], dtype=jnp.int32)[:, None]
+    return ub.at[rows, blocks].add(w)
+
+
+def daat_plan(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    max_bm_per_term: int,
+) -> DaatPlan:
+    """Phase 0 for a whole batch: block upper bounds + dense query vectors."""
+    return DaatPlan(
+        ub=block_upper_bounds(index, q_terms, q_weights, max_bm_per_term),
+        qvec=query_vectors(index, q_terms, q_weights),
+    )
 
 
 def score_blocks(
@@ -73,25 +176,48 @@ def score_blocks(
 ) -> Tuple[jax.Array, jax.Array]:
     """Exact scores for whole blocks of documents via the doc-major store.
 
-    Returns ``(scores[nb, block_size], doc_ids[nb, block_size])`` with padded
-    documents masked to -inf. The inner op is a gather of query weights by
-    term id + a weighted row reduction — the ``block_score`` Pallas kernel
-    implements the same contraction with VMEM-tiled blocks.
+    ``qvec[V+1], block_ids[nb]`` returns
+    ``(scores[nb, block_size], doc_ids[nb, block_size])``; the batched case
+    ``qvec[B, V+1], block_ids[B, nb]`` returns ``[B, nb, block_size]`` pairs.
+    Padded documents are masked to -inf. The inner op is a gather of query
+    weights by term id + a weighted row reduction — the ``block_score`` Pallas
+    kernel implements the same contraction with VMEM-tiled blocks.
     """
     bs = index.block_size
-    docs = block_ids[:, None] * bs + jnp.arange(bs, dtype=jnp.int32)[None, :]
-    terms = index.doc_terms[docs]  # [nb, bs, Tmax]
+    docs = block_ids[..., :, None] * bs + jnp.arange(bs, dtype=jnp.int32)
+    terms = index.doc_terms[docs]  # [..., nb, bs, Tmax]
     w = index.doc_weights[docs]
-    scores = jnp.sum(qvec[terms] * w, axis=-1)
+    if qvec.ndim == 1:
+        qv = qvec[terms]
+    else:
+        rows = jnp.arange(qvec.shape[0], dtype=jnp.int32)[:, None, None, None]
+        qv = qvec[rows, terms]
+    scores = jnp.sum(qv * w, axis=-1)
     scores = jnp.where(docs < index.n_docs, scores, -jnp.inf)
     return scores, docs
+
+
+def _resolve_daat_shapes(
+    index: ImpactIndex, k: int, est_blocks: int, block_budget: int, max_chunks: int | None
+) -> Tuple[int, int, int]:
+    n_blocks = index.n_blocks
+    est_blocks = min(est_blocks, n_blocks)
+    block_budget = min(block_budget, n_blocks)
+    if max_chunks is None:
+        max_chunks = -(-n_blocks // block_budget)  # ceil: worst case scores all
+    if k > est_blocks * index.block_size:
+        raise ValueError(
+            f"k={k} exceeds the phase-1 pool (est_blocks={est_blocks} * "
+            f"block_size={index.block_size}); raise est_blocks"
+        )
+    return est_blocks, block_budget, max_chunks
 
 
 @partial(
     jax.jit,
     static_argnames=("k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks"),
 )
-def blockmax_search(
+def daat_search_vmap(
     index: ImpactIndex,
     q_terms: jax.Array,
     q_weights: jax.Array,
@@ -103,12 +229,16 @@ def blockmax_search(
     exact: bool = True,
     max_chunks: int | None = None,
 ) -> DaatResult:
-    """Batched block-max DAAT top-k. ``q_terms/q_weights: [B, Lq]``."""
+    """Legacy ``jax.vmap(one-query)`` block-max DAAT — the parity oracle.
+
+    ``q_terms/q_weights: [B, Lq]``. Semantically identical to
+    :func:`daat_search_batched`; kept so the batched engine can be validated
+    bit-for-bit on doc ids and raced in the side benchmarks.
+    """
     n_blocks = index.n_blocks
-    est_blocks = min(est_blocks, n_blocks)
-    block_budget = min(block_budget, n_blocks)
-    if max_chunks is None:
-        max_chunks = -(-n_blocks // block_budget)  # ceil: worst case scores all
+    est_blocks, block_budget, max_chunks = _resolve_daat_shapes(
+        index, k, est_blocks, block_budget, max_chunks
+    )
 
     def one(qt, qw):
         qvec = query_vector(index, qt, qw)
@@ -158,3 +288,99 @@ def blockmax_search(
         return DaatResult(pool_s, pool_i, survivors0, blocks_scored, chunks, rank_safe)
 
     return jax.vmap(one)(q_terms, q_weights)
+
+
+# Historical name, kept for existing callers (benchmarks, wacky reports).
+blockmax_search = daat_search_vmap
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks"),
+)
+def daat_search_batched(
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    k: int,
+    est_blocks: int,
+    block_budget: int,
+    max_bm_per_term: int,
+    exact: bool = True,
+    max_chunks: int | None = None,
+) -> DaatResult:
+    """Natively batched block-max DAAT top-k. ``q_terms/q_weights: [B, Lq]``.
+
+    One executable per (k, est_blocks, block_budget, exact) configuration for
+    the whole batch: a single phase-0 scatter, a single phase-1 scoring pass,
+    and a single ``lax.while_loop`` with per-query masked state (see module
+    docstring for the batched-loop semantics). Bit-identical doc ids and
+    :class:`WorkStats` to :func:`daat_search_vmap`.
+    """
+    if q_terms.ndim != 2:
+        raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
+    n_blocks = index.n_blocks
+    est_blocks, block_budget, max_chunks = _resolve_daat_shapes(
+        index, k, est_blocks, block_budget, max_chunks
+    )
+    B = q_terms.shape[0]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+
+    plan = daat_plan(index, q_terms, q_weights, max_bm_per_term)
+    ub, qvec = plan.ub, plan.qvec  # [B, n_blocks], [B, V+1]
+
+    # ---- phase 1: seed every query's top-k pool in one batched pass ----
+    _, b1 = topk(ub, est_blocks)  # [B, est_blocks]
+    s1, d1 = score_blocks(index, qvec, b1)  # [B, est_blocks, bs]
+    pool_s, pool_i = topk(s1.reshape(B, -1), k)
+    pool_i = jnp.take_along_axis(d1.reshape(B, -1), pool_i, axis=-1).astype(jnp.int32)
+    theta = pool_s[:, k - 1]  # [B]
+    processed = jnp.zeros((B, n_blocks), jnp.bool_).at[rows, b1].set(True)
+    survivors0 = jnp.sum((ub > theta[:, None]) & ~processed, axis=-1).astype(jnp.int32)
+
+    # ---- phase 2: one while_loop, per-query state advances independently ----
+    def remaining_ub(processed):
+        return jnp.where(processed, -jnp.inf, ub)
+
+    def active_rows(state):
+        pool_s, pool_i, processed, theta, chunks = state
+        more = jnp.max(remaining_ub(processed), axis=-1) > theta
+        return more & (chunks < max_chunks)  # bool[B]
+
+    def cond(state):
+        return jnp.any(active_rows(state))
+
+    def body(state):
+        pool_s, pool_i, processed, theta, chunks = state
+        act = active_rows(state)  # finished queries idle below
+        rub = remaining_ub(processed)
+        ub_c, b_c = topk(rub, block_budget)  # [B, budget]
+        live = ub_c > theta[:, None]  # only these can change the top-k
+        s_c, d_c = score_blocks(index, qvec, b_c)  # [B, budget, bs]
+        s_c = jnp.where(live[..., None], s_c, -jnp.inf)
+        new_s, new_i = merge_topk(
+            pool_s, pool_i, s_c.reshape(B, -1), d_c.reshape(B, -1).astype(jnp.int32), k
+        )
+        new_theta = new_s[:, k - 1]
+        new_processed = processed.at[rows, b_c].set(
+            processed[rows, b_c] | live
+        )
+        # per-query masking: inactive rows keep their state bit-for-bit
+        pool_s = jnp.where(act[:, None], new_s, pool_s)
+        pool_i = jnp.where(act[:, None], new_i, pool_i)
+        processed = jnp.where(act[:, None], new_processed, processed)
+        theta = jnp.where(act, new_theta, theta)
+        chunks = chunks + act.astype(jnp.int32)
+        return pool_s, pool_i, processed, theta, chunks
+
+    state = (pool_s, pool_i, processed, theta, jnp.zeros((B,), jnp.int32))
+    if exact:
+        pool_s, pool_i, processed, theta, chunks = jax.lax.while_loop(cond, body, state)
+    else:
+        # approximate mode: at most one chunk step, per-query gated
+        new_state = body(state)
+        pool_s, pool_i, processed, theta, chunks = new_state
+    blocks_scored = jnp.sum(processed, axis=-1).astype(jnp.int32)
+    rank_safe = jnp.max(remaining_ub(processed), axis=-1) <= theta
+    return DaatResult(pool_s, pool_i, survivors0, blocks_scored, chunks, rank_safe)

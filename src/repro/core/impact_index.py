@@ -57,6 +57,7 @@ META_FIELDS = (
     "scale",
     "bits",
     "max_segs",
+    "max_bm",
 )
 
 
@@ -121,6 +122,10 @@ class ImpactIndex:
     # bound for SAAT; 0 = unknown (abstract/hand-rolled indexes), in which
     # case ``max_segments_per_term`` falls back to a device sync.
     max_segs: int = 0
+    # Largest per-term block-max list length, computed at build time. Static
+    # bound for the DAAT block-upper-bound gather; 0 = unknown, in which case
+    # ``max_blocks_per_term`` falls back to a device sync.
+    max_bm: int = 0
 
     @property
     def n_postings(self) -> int:
@@ -293,6 +298,7 @@ def build_impact_index(
         scale=float(scale),
         bits=int(quant.bits),
         max_segs=int(term_seg_count.max()),
+        max_bm=int(term_bm_count.max()),
     )
 
 

@@ -9,7 +9,7 @@ Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec VMEM tiling),
 ``ops.py`` (jit'd wrapper, padding, interpret-mode selection) and ``ref.py``
 (pure-jnp oracle used by the allclose sweep tests).
 """
-from repro.kernels.block_prune import block_prune  # noqa: F401
-from repro.kernels.block_topk import block_topk  # noqa: F401
-from repro.kernels.impact_scatter import impact_scatter  # noqa: F401
+from repro.kernels.block_prune import block_prune, block_prune_batched  # noqa: F401
+from repro.kernels.block_topk import block_topk, block_topk_batched  # noqa: F401
+from repro.kernels.impact_scatter import impact_scatter, impact_scatter_batched  # noqa: F401
 from repro.kernels.sparse_score import sparse_score  # noqa: F401

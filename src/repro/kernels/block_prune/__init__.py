@@ -1,1 +1,1 @@
-from repro.kernels.block_prune.ops import block_prune  # noqa: F401
+from repro.kernels.block_prune.ops import block_prune, block_prune_batched  # noqa: F401

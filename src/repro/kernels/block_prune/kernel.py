@@ -8,6 +8,11 @@ scores — so the *measured* number of surviving blocks is precisely the
 paper's "how much can DAAT skip" quantity.
 
 Grid tiles the block axis; the query column (Lq) stays resident in VMEM.
+
+The batched variant grids over (query, block-tile): each grid cell prunes one
+query's tile of blocks against that query's own theta, so a whole ``[B, Lq]``
+batch is one kernel launch — the DAAT analogue of ``impact_scatter_batched``.
+Queries never share state, so no cross-query reduction is needed.
 """
 from __future__ import annotations
 
@@ -23,6 +28,47 @@ def _prune_kernel(bm_ref, qw_ref, theta_ref, ub_ref, mask_ref):
     ub = jnp.dot(qw, bm, preferred_element_type=jnp.float32)  # [1, NBt]
     ub_ref[...] = ub
     mask_ref[...] = ((ub > theta) & (ub > 0)).astype(jnp.int32)
+
+
+def _prune_kernel_batched(bm_ref, qw_ref, theta_ref, ub_ref, mask_ref):
+    bm = bm_ref[0].astype(jnp.float32)  # [Lq, NBt]
+    qw = qw_ref[0].astype(jnp.float32)  # [1, Lq]
+    theta = theta_ref[0, 0, 0]
+    ub = jnp.dot(qw, bm, preferred_element_type=jnp.float32)  # [1, NBt]
+    ub_ref[...] = ub
+    mask_ref[...] = ((ub > theta) & (ub > 0)).astype(jnp.int32)
+
+
+def block_prune_batched_kernel(
+    blockmax: jax.Array,  # f32[B, Lq, NB]
+    q_weights: jax.Array,  # f32[B, Lq]
+    theta: jax.Array,  # f32[B]
+    *,
+    block_nb: int = 2048,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    b, lq, nb = blockmax.shape
+    assert nb % block_nb == 0, (nb, block_nb)
+    grid = (b, nb // block_nb)
+    ub, mask = pl.pallas_call(
+        _prune_kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, lq, block_nb), lambda q, i: (q, 0, i)),
+            pl.BlockSpec((1, 1, lq), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda q, i: (q, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_nb), lambda q, i: (q, i)),
+            pl.BlockSpec((1, block_nb), lambda q, i: (q, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb), jnp.float32),
+            jax.ShapeDtypeStruct((b, nb), jnp.int32),
+        ],
+        interpret=interpret,
+    )(blockmax, q_weights.reshape(b, 1, lq), theta.reshape(b, 1, 1))
+    return ub, mask
 
 
 def block_prune_kernel(

@@ -6,7 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.block_prune.kernel import block_prune_kernel
+from repro.kernels.block_prune.kernel import block_prune_batched_kernel, block_prune_kernel
 from repro.kernels.common import interpret_default, pad_axis
 
 
@@ -33,3 +33,32 @@ def block_prune(
         interpret=interpret,
     )
     return ub[:nb], mask[:nb].astype(jnp.bool_)
+
+
+@partial(jax.jit, static_argnames=("block_nb", "interpret"))
+def block_prune_batched(
+    blockmax: jax.Array,
+    q_weights: jax.Array,
+    theta: jax.Array,
+    *,
+    block_nb: int = 2048,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched (ub, survive_mask): ``blockmax [B, Lq, NB]``, per-query theta.
+
+    One kernel launch grids over (query, block-tile); each query is pruned
+    against its own threshold. Rows/thetas never mix across queries.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, lq, nb = blockmax.shape
+    block_nb = min(block_nb, max(128, nb))
+    bm = pad_axis(blockmax.astype(jnp.float32), 2, block_nb, fill=0.0)
+    ub, mask = block_prune_batched_kernel(
+        bm,
+        q_weights.astype(jnp.float32),
+        jnp.asarray(theta, jnp.float32),
+        block_nb=block_nb,
+        interpret=interpret,
+    )
+    return ub[:, :nb], mask[:, :nb].astype(jnp.bool_)

@@ -18,3 +18,16 @@ def block_prune_ref(
     ub = jnp.einsum("i,ib->b", q_weights.astype(jnp.float32), blockmax.astype(jnp.float32))
     survive = (ub > theta) & (ub > 0)
     return ub, survive
+
+
+def block_prune_batched_ref(
+    blockmax: jax.Array,  # f32[B, Lq, n_blocks]
+    q_weights: jax.Array,  # f32[B, Lq]
+    theta: jax.Array,  # f32[B] per-query thresholds
+) -> tuple[jax.Array, jax.Array]:
+    """Batched oracle: (ub[B, n_blocks], survive_mask[B, n_blocks])."""
+    ub = jnp.einsum(
+        "qi,qib->qb", q_weights.astype(jnp.float32), blockmax.astype(jnp.float32)
+    )
+    survive = (ub > theta[:, None]) & (ub > 0)
+    return ub, survive

@@ -1,1 +1,1 @@
-from repro.kernels.block_topk.ops import block_topk  # noqa: F401
+from repro.kernels.block_topk.ops import block_topk, block_topk_batched  # noqa: F401

@@ -29,6 +29,49 @@ def _topk_kernel(scores_ref, out_s_ref, out_i_ref, *, k: int):
     out_i_ref[0, :] = idx.astype(jnp.int32) + i * t
 
 
+def _topk_kernel_batched(scores_ref, out_s_ref, out_i_ref, *, k: int):
+    i = pl.program_id(1)
+    tile = scores_ref[0, 0, :]  # f32[T] — one (query, tile) cell
+    t = tile.shape[0]
+    s, idx = jax.lax.top_k(tile, k)
+    out_s_ref[0, 0, :] = s
+    out_i_ref[0, 0, :] = idx.astype(jnp.int32) + i * t
+
+
+def block_topk_batched_kernel(
+    scores: jax.Array,  # f32[B, n], n % tile == 0
+    *,
+    k: int,
+    tile: int = 8192,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Stage-1 select for a whole query batch: grid over (query, tile).
+
+    Each grid cell reads one query's VMEM tile exactly once, so the batched
+    pass keeps the single-query kernel's memory-bound roofline while amortizing
+    one launch across the batch (DAAT chunk selection runs this every
+    while_loop iteration).
+    """
+    b, n = scores.shape
+    assert n % tile == 0 and k <= tile, (n, tile, k)
+    n_tiles = n // tile
+    s, i = pl.pallas_call(
+        functools.partial(_topk_kernel_batched, k=k),
+        grid=(b, n_tiles),
+        in_specs=[pl.BlockSpec((1, 1, tile), lambda q, i: (q, i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, 1, k), lambda q, i: (q, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_tiles, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_tiles, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores.reshape(b, n_tiles, tile))
+    return s, i
+
+
 def block_topk_kernel(
     scores: jax.Array,  # f32[n], n % tile == 0
     *,

@@ -6,7 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.block_topk.kernel import block_topk_kernel
+from repro.kernels.block_topk.kernel import block_topk_batched_kernel, block_topk_kernel
 from repro.kernels.common import interpret_default, pad_axis
 
 
@@ -32,4 +32,33 @@ def block_topk(
     if k_eff < k:  # pad to requested k for shape stability
         fs = jnp.concatenate([fs, jnp.full((k - k_eff,), -jnp.inf, fs.dtype)])
         ids = jnp.concatenate([ids, jnp.zeros((k - k_eff,), ids.dtype)])
+    return fs, ids
+
+
+@partial(jax.jit, static_argnames=("k", "tile", "interpret"))
+def block_topk_batched(
+    scores: jax.Array,
+    k: int,
+    *,
+    tile: int = 8192,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Exact per-row top-k over ``scores [B, n]``. Returns ``([B, k], [B, k])``.
+
+    One (query, tile)-gridded kernel launch for stage 1, then one batched
+    finalist merge — no per-query vmapped programs.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    b, n = scores.shape
+    tile = min(tile, max(128, n))
+    k_eff = min(k, n)
+    s = pad_axis(scores.astype(jnp.float32), 1, tile, fill=-jnp.inf)
+    k_tile = min(max(k_eff, 1), tile)
+    ts, ti = block_topk_batched_kernel(s, k=k_tile, tile=tile, interpret=interpret)
+    fs, fi = jax.lax.top_k(ts.reshape(b, -1), k_eff)
+    ids = jnp.take_along_axis(ti.reshape(b, -1), fi, axis=-1)
+    if k_eff < k:  # pad to requested k for shape stability
+        fs = jnp.concatenate([fs, jnp.full((b, k - k_eff), -jnp.inf, fs.dtype)], axis=-1)
+        ids = jnp.concatenate([ids, jnp.zeros((b, k - k_eff), ids.dtype)], axis=-1)
     return fs, ids

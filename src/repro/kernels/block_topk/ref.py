@@ -9,3 +9,9 @@ def block_topk_ref(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Exact top-k (descending scores, int32 indices)."""
     s, i = jax.lax.top_k(scores, k)
     return s, i.astype(jnp.int32)
+
+
+def block_topk_batched_ref(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Row-wise exact top-k over ``[B, n]`` (descending, int32 indices)."""
+    s, i = jax.lax.top_k(scores, k)
+    return s, i.astype(jnp.int32)

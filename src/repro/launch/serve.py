@@ -29,7 +29,15 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=None)
     ap.add_argument("--rho", type=int, default=None, help="fixed posting budget (overrides deadline)")
     ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument(
+        "--engine", default="saat", choices=("saat", "daat"),
+        help="saat = anytime rho-budgeted; daat = batched Block-Max pruning",
+    )
+    ap.add_argument("--daat-est-blocks", type=int, default=8)
+    ap.add_argument("--daat-block-budget", type=int, default=16)
     args = ap.parse_args()
+    if args.engine == "daat" and (args.deadline_ms is not None or args.rho is not None):
+        ap.error("--deadline-ms/--rho are SAAT budgets; the daat engine cannot honor them")
 
     corpus = generate_corpus(CorpusConfig(n_docs=args.docs, n_queries=args.queries))
     enc = apply_treatment(corpus, args.model)
@@ -43,7 +51,9 @@ def main() -> None:
     server = AnytimeServer(
         index,
         ServingConfig(
-            k=args.k, rho_ladder=ladder, batch_size=args.batch, deadline_ms=args.deadline_ms
+            k=args.k, rho_ladder=ladder, batch_size=args.batch,
+            deadline_ms=args.deadline_ms, engine=args.engine,
+            daat_est_blocks=args.daat_est_blocks, daat_block_budget=args.daat_block_budget,
         ),
     )
     server.warmup(jnp.asarray(qt[: args.batch]), jnp.asarray(qw[: args.batch]))

@@ -14,6 +14,13 @@ At pod scale, documents shard over the ``model`` axis: each chip runs the
 identical rho-budgeted scan over its shard and ships only its k finalists
 (``sharded_topk_merge``). Uniform per-chip work = no stragglers from corpus
 skew — the paper's tail-latency argument, promoted to a cluster property.
+
+The server can also run the natively batched Block-Max DAAT engine
+(``engine="daat"``) so both sides of the paper's SAAT-vs-DAAT comparison are
+served by one batched executable each. DAAT has no rho knob: its cost is
+data-dependent (the while_loop runs until the slowest query in the batch is
+rank-safe), which is exactly the tail-latency contrast the benchmarks
+measure.
 """
 from __future__ import annotations
 
@@ -25,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.daat import daat_search_batched, max_blocks_per_term
 from repro.core.impact_index import ImpactIndex
 from repro.core.saat import max_segments_per_term, saat_search
 from repro.metrics.latency import LatencyStats, summarize_latencies
@@ -38,6 +46,12 @@ class ServingConfig:
     deadline_ms: Optional[float] = None  # None = always use max rho
     scatter_impl: str = "sort"
     ema_alpha: float = 0.2  # cost-model smoothing
+    # engine selection: "saat" (anytime, rho ladder) or "daat" (block-max
+    # pruning; data-dependent cost, no rho control)
+    engine: str = "saat"
+    daat_est_blocks: int = 8
+    daat_block_budget: int = 16
+    daat_exact: bool = True
 
 
 @dataclasses.dataclass
@@ -70,9 +84,13 @@ class AnytimeServer:
     """
 
     def __init__(self, index: ImpactIndex, cfg: ServingConfig):
+        if cfg.engine not in ("saat", "daat"):
+            raise ValueError(f"unknown engine {cfg.engine!r}")
         self.index = index
         self.cfg = cfg
+        # both bounds come from index build-time metadata — no device sync
         self.max_segs = max_segments_per_term(index)
+        self.max_bm = max_blocks_per_term(index)
         self._latencies_ms: list[float] = []
         self._rhos: list[int] = []
         self._cost = _CostModel({}, cfg.ema_alpha)
@@ -96,7 +114,32 @@ class AnytimeServer:
 
     # ----------------------------- serving --------------------------------
 
+    def _daat_search(self, q_terms: jax.Array, q_weights: jax.Array):
+        return daat_search_batched(
+            self.index,
+            q_terms,
+            q_weights,
+            k=self.cfg.k,
+            est_blocks=self.cfg.daat_est_blocks,
+            block_budget=self.cfg.daat_block_budget,
+            max_bm_per_term=self.max_bm,
+            exact=self.cfg.daat_exact,
+        )
+
     def search_batch(self, q_terms: jax.Array, q_weights: jax.Array, rho: Optional[int] = None):
+        if self.cfg.engine == "daat":
+            if rho is not None:
+                raise ValueError(
+                    "rho is a SAAT posting budget; the daat engine's cost is "
+                    "data-dependent and cannot honor it"
+                )
+            t0 = time.perf_counter()
+            res = self._daat_search(q_terms, q_weights)
+            jax.block_until_ready(res.scores)
+            per_query = (time.perf_counter() - t0) * 1e3 / q_terms.shape[0]
+            self._latencies_ms.extend([per_query] * q_terms.shape[0])
+            self._rhos.extend([0] * q_terms.shape[0])
+            return res
         rho = rho or self.pick_rho()
         t0 = time.perf_counter()
         res = saat_search(
@@ -119,6 +162,10 @@ class AnytimeServer:
 
     def warmup(self, q_terms: jax.Array, q_weights: jax.Array, repeats: int = 2):
         """Compile + calibrate every rho level (excluded from stats)."""
+        if self.cfg.engine == "daat":
+            for _ in range(repeats):
+                jax.block_until_ready(self._daat_search(q_terms, q_weights).scores)
+            return
         for rho in self.rho_ladder:
             for _ in range(repeats):
                 t0 = time.perf_counter()

@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.daat import daat_search_batched
 from repro.core.impact_index import ImpactIndex, META_FIELDS as _META_FIELDS, build_impact_index
 from repro.core.quantization import QuantConfig
 from repro.core.saat import saat_search
@@ -94,7 +95,7 @@ def stack_indexes(shards: list[ImpactIndex]) -> ImpactIndex:
         fill = 0
         stacked[f] = jnp.asarray(_pad_cat(arrs, fill))
     # shard-invariant meta comes from shard 0; size-like bounds take the max
-    _RAGGED_META = ("max_doc_terms", "max_segs")
+    _RAGGED_META = ("max_doc_terms", "max_segs", "max_bm")
     meta = {k: getattr(shards[0], k) for k in _META_FIELDS if k not in _RAGGED_META}
     for k in _RAGGED_META:
         meta[k] = max(getattr(s, k) for s in shards)
@@ -175,6 +176,11 @@ def make_sharded_serve_step(
     max_segs_per_term: int,
     docs_per_shard: int,
     scatter_impl: str = "sort",
+    engine: str = "saat",
+    daat_est_blocks: int = 8,
+    daat_block_budget: int = 16,
+    max_bm_per_term: int = 0,
+    daat_exact: bool = True,
 ):
     """Builds ``serve(index_stack, q_terms, q_weights) -> (scores, ids)``.
 
@@ -185,7 +191,18 @@ def make_sharded_serve_step(
     batched engine (one plan sort / gather / scatter for the whole block),
     so the per-chip instruction stream stays identical across ranks AND
     independent of batch composition.
+
+    ``engine="daat"`` swaps in the natively batched Block-Max engine per
+    shard (``rho_per_shard`` is then unused; pass the STATIC
+    ``max_bm_per_term`` bound from the stacked index's build-time metadata).
+    Per-chip work becomes data-dependent — each rank loops until its own
+    local batch is rank-safe — so corpus skew CAN create stragglers, which
+    is exactly the contrast with SAAT the paper draws.
     """
+    if engine not in ("saat", "daat"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "daat" and max_bm_per_term <= 0:
+        raise ValueError("engine='daat' needs the static max_bm_per_term bound")
     axes = mesh_axes(mesh)
     dp = axes.data if len(axes.data) > 1 else axes.data[0]
     idx_specs = jax.tree.map(lambda _: P("model"), _index_data_template())
@@ -202,15 +219,27 @@ def make_sharded_serve_step(
         for j in range(n_local):
             local = jax.tree.map(lambda x, _j=j: x[_j], idx_data)
             index = ImpactIndex(**local, **_static_meta_from(local, docs_per_shard))
-            res = saat_search(
-                index,
-                qt,
-                qw,
-                k=k,
-                rho=rho_per_shard,
-                max_segs_per_term=max_segs_per_term,
-                scatter_impl=scatter_impl,
-            )
+            if engine == "daat":
+                res = daat_search_batched(
+                    index,
+                    qt,
+                    qw,
+                    k=k,
+                    est_blocks=daat_est_blocks,
+                    block_budget=daat_block_budget,
+                    max_bm_per_term=max_bm_per_term,
+                    exact=daat_exact,
+                )
+            else:
+                res = saat_search(
+                    index,
+                    qt,
+                    qw,
+                    k=k,
+                    rho=rho_per_shard,
+                    max_segs_per_term=max_segs_per_term,
+                    scatter_impl=scatter_impl,
+                )
             gids = res.doc_ids + (rank * n_local + j) * docs_per_shard
             if pool_s is None:
                 pool_s, pool_i = res.scores, gids

@@ -1,0 +1,207 @@
+"""Adversarial parity suite for the natively batched Block-Max DAAT engine.
+
+``daat_search_batched`` must be indistinguishable from the ``daat_search_vmap``
+oracle — BIT-identical doc ids and per-query ``WorkStats`` — across the inputs
+most likely to break a batched port of data-dependent threshold machinery:
+ragged batches, duplicate query terms, zero-weight terms, ``k > n_docs``, and
+both exact/approximate modes. Exhaustive-oracle comparisons are marked
+``slow`` so the x64 CI parity entry stays fast.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_impact_index,
+    daat_search_batched,
+    daat_search_vmap,
+    exhaustive_search,
+)
+from repro.core.daat import block_upper_bounds, daat_plan, max_blocks_per_term, query_vectors
+from repro.core.impact_index import query_vector
+
+
+def _assert_daat_parity(index, qt, qw, **kw):
+    """Batched vs vmap oracle: bit-identical ids + per-query WorkStats."""
+    kw.setdefault("max_bm_per_term", max_blocks_per_term(index))
+    b = daat_search_batched(index, qt, qw, **kw)
+    v = daat_search_vmap(index, qt, qw, **kw)
+    np.testing.assert_array_equal(np.asarray(b.doc_ids), np.asarray(v.doc_ids))
+    np.testing.assert_allclose(np.asarray(b.scores), np.asarray(v.scores), rtol=1e-5, atol=1e-6)
+    for field in ("n_survivors", "blocks_scored", "chunks", "rank_safe"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(b.stats, field)),
+            np.asarray(getattr(v.stats, field)),
+            err_msg=f"WorkStats.{field} diverged",
+        )
+    return b
+
+
+@pytest.mark.parametrize("exact", [True, False])
+def test_batched_matches_vmap(bm25_index, bm25_queries, exact):
+    qt, qw = bm25_queries
+    _assert_daat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=2, exact=exact,
+    )
+
+
+@pytest.mark.parametrize("exact", [True, False])
+def test_batched_ragged_batch_with_pad_terms(bm25_index, bm25_queries, exact):
+    """Rows with progressively more zero-weight pad terms ride one executable."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:8]), np.array(qw[:8])
+    for i in range(qt.shape[0]):
+        keep = max(1, qt.shape[1] - i)
+        qw[i, keep:] = 0.0
+        qt[i, keep:] = bm25_index.n_terms  # pad slot
+    _assert_daat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=1, exact=exact,
+    )
+
+
+def test_batched_duplicate_query_terms(bm25_index, bm25_queries):
+    """Duplicate terms must sum in the query vector AND the block bounds."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:4]), np.array(qw[:4])
+    qt[:, 1] = qt[:, 0]  # duplicate the heaviest term in every row
+    b = _assert_daat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=2, exact=True,
+    )
+    assert bool(np.asarray(b.rank_safe).all())
+
+
+def test_batched_zero_weight_terms(bm25_index, bm25_queries):
+    """Zero-weight terms contribute nothing (same results with them dropped)."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:4]), np.array(qw[:4])
+    qw[:, 1] = 0.0
+    b = _assert_daat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=2, exact=True,
+    )
+    dropped = np.array(qt)
+    dropped[:, 1] = bm25_index.n_terms  # pad slot: term absent entirely
+    b2 = daat_search_batched(
+        bm25_index, jnp.asarray(dropped), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=2,
+        max_bm_per_term=max_blocks_per_term(bm25_index), exact=True,
+    )
+    np.testing.assert_array_equal(np.asarray(b.doc_ids), np.asarray(b2.doc_ids))
+    np.testing.assert_allclose(np.asarray(b.scores), np.asarray(b2.scores), rtol=1e-6)
+
+
+def test_batched_all_pad_query_row(bm25_index, bm25_queries):
+    """An all-zero-weight row must stay masked, not poison its neighbors."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:4]), np.array(qw[:4])
+    qw[2] = 0.0
+    qt[2] = bm25_index.n_terms
+    b = _assert_daat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=2, exact=True,
+    )
+    assert int(np.asarray(b.n_survivors)[2]) == 0
+
+
+@pytest.mark.parametrize("exact", [True, False])
+def test_batched_k_exceeds_n_docs(exact):
+    """k past the corpus size pads ranks with -inf identically on both paths."""
+    rng = np.random.default_rng(5)
+    n_docs, n_terms = 50, 30
+    d = rng.integers(0, n_docs, 400)
+    t = rng.integers(0, n_terms, 400)
+    w = rng.gamma(2.0, 1.0, 400)
+    idx = build_impact_index(d, t, w, n_docs, n_terms)
+    qt = jnp.asarray(rng.integers(0, n_terms, (3, 4)).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (3, 4)).astype(np.float32))
+    k = n_docs + 10
+    b = _assert_daat_parity(
+        idx, qt, qw, k=k, est_blocks=idx.n_blocks, block_budget=1, exact=exact,
+    )
+    assert b.scores.shape == (3, k)
+    # ranks past the corpus hold -inf (padded docs), never fabricated scores
+    assert bool(np.isneginf(np.asarray(b.scores)[:, n_docs:]).all())
+
+
+def test_k_past_phase1_pool_rejected(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    with pytest.raises(ValueError, match="est_blocks"):
+        daat_search_batched(
+            bm25_index, jnp.asarray(qt[:2]), jnp.asarray(qw[:2]),
+            k=10_000, est_blocks=1, block_budget=1,
+            max_bm_per_term=max_blocks_per_term(bm25_index),
+        )
+
+
+def test_daat_search_batched_rejects_unbatched_input(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    with pytest.raises(ValueError, match="B, Lq"):
+        daat_search_batched(
+            bm25_index, jnp.asarray(qt[0]), jnp.asarray(qw[0]),
+            k=5, est_blocks=2, block_budget=2,
+            max_bm_per_term=max_blocks_per_term(bm25_index),
+        )
+
+
+def test_batched_batch_of_one(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    _assert_daat_parity(
+        bm25_index, jnp.asarray(qt[:1]), jnp.asarray(qw[:1]),
+        k=5, est_blocks=1, block_budget=1, exact=True,
+    )
+
+
+def test_batched_max_chunks_cap(bm25_index, bm25_queries):
+    """A tight chunk cap must stop both engines at the same (unsafe) state."""
+    qt, qw = bm25_queries
+    b = _assert_daat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=1, block_budget=1, exact=True, max_chunks=1,
+    )
+    assert int(np.asarray(b.chunks).max()) <= 1
+
+
+def test_daat_plan_matches_single_query_plans(bm25_index, bm25_queries):
+    """daat_plan on [B, Lq] == stacking B single-query phase-0 passes."""
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt[:5]), jnp.asarray(qw[:5])
+    mb = max_blocks_per_term(bm25_index)
+    plan = daat_plan(bm25_index, qt, qw, mb)
+    for i in range(qt.shape[0]):
+        ub = block_upper_bounds(bm25_index, qt[i], qw[i], mb)
+        qv = query_vector(bm25_index, qt[i], qw[i])
+        np.testing.assert_allclose(np.asarray(plan.ub[i]), np.asarray(ub), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(plan.qvec[i]), np.asarray(qv), rtol=1e-6)
+
+
+def test_query_vectors_batched_matches_single(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt[:6]), jnp.asarray(qw[:6])
+    batched = query_vectors(bm25_index, qt, qw)
+    for i in range(qt.shape[0]):
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(query_vector(bm25_index, qt[i], qw[i]))
+        )
+
+
+def test_max_blocks_cached_without_device_sync(bm25_index):
+    assert bm25_index.max_bm > 0
+    assert max_blocks_per_term(bm25_index) == bm25_index.max_bm
+    assert bm25_index.max_bm == int(np.asarray(bm25_index.term_bm_count).max())
+
+
+@pytest.mark.slow
+def test_batched_exact_equals_exhaustive(bm25_index, bm25_queries):
+    """exact=True from the batched engine == the exhaustive rank-safe oracle."""
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt), jnp.asarray(qw)
+    ex = exhaustive_search(bm25_index, qt, qw, k=10)
+    b = daat_search_batched(
+        bm25_index, qt, qw, k=10, est_blocks=2, block_budget=2,
+        max_bm_per_term=max_blocks_per_term(bm25_index), exact=True,
+    )
+    assert bool(np.asarray(b.rank_safe).all())
+    np.testing.assert_allclose(np.asarray(b.scores), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)

@@ -4,10 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.block_prune.ops import block_prune
-from repro.kernels.block_prune.ref import block_prune_ref
-from repro.kernels.block_topk.ops import block_topk
-from repro.kernels.block_topk.ref import block_topk_ref
+from repro.kernels.block_prune.ops import block_prune, block_prune_batched
+from repro.kernels.block_prune.ref import block_prune_batched_ref, block_prune_ref
+from repro.kernels.block_topk.ops import block_topk, block_topk_batched
+from repro.kernels.block_topk.ref import block_topk_batched_ref, block_topk_ref
 from repro.kernels.impact_scatter.ops import impact_scatter, impact_scatter_batched
 from repro.kernels.impact_scatter.ref import impact_scatter_batched_ref, impact_scatter_ref
 from repro.kernels.sparse_score.ops import sparse_score
@@ -110,6 +110,93 @@ def test_block_prune_sweep(lq, nb):
     rub, rmask = block_prune_ref(bm, qw, theta)
     np.testing.assert_allclose(np.asarray(ub), np.asarray(rub), rtol=1e-4, atol=1e-4)
     np.testing.assert_array_equal(np.asarray(mask), np.asarray(rmask))
+
+
+@pytest.mark.parametrize("batch,n,k,tile", [(1, 1000, 10, 256), (3, 517, 7, 128), (8, 100, 100, 128)])
+def test_block_topk_batched_sweep(batch, n, k, tile):
+    """Non-divisible n/tile shapes; per-row finalists must match the oracle."""
+    rng = np.random.default_rng(batch * 10 + n + k)
+    scores = jnp.asarray(rng.normal(size=(batch, n)), jnp.float32)
+    s, i = block_topk_batched(scores, k, tile=tile, interpret=True)
+    rs, ri = block_topk_batched_ref(scores, min(k, n))
+    ke = min(k, n)
+    np.testing.assert_allclose(np.asarray(s)[:, :ke], np.asarray(rs), rtol=1e-6)
+    np.testing.assert_allclose(  # ids must point at the same scores (ties may permute)
+        np.take_along_axis(np.asarray(scores), np.asarray(i)[:, :ke], axis=-1),
+        np.asarray(rs), rtol=1e-6,
+    )
+
+
+def test_block_topk_batched_matches_per_row_kernel():
+    rng = np.random.default_rng(3)
+    scores = jnp.asarray(rng.normal(size=(4, 600)), jnp.float32)
+    s, i = block_topk_batched(scores, 9, tile=128, interpret=True)
+    for b in range(4):
+        rs, ri = block_topk(scores[b], 9, tile=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(s[b]), np.asarray(rs), rtol=1e-6)
+
+
+def test_block_topk_batched_k_exceeds_n_pads():
+    scores = jnp.asarray(np.random.default_rng(1).normal(size=(2, 40)), jnp.float32)
+    s, i = block_topk_batched(scores, 50, tile=128, interpret=True)
+    assert s.shape == (2, 50)
+    assert bool(np.isneginf(np.asarray(s)[:, 40:]).all())
+
+
+@pytest.mark.parametrize("batch,lq,nb", [(1, 8, 100), (4, 32, 2048), (3, 5, 17)])
+def test_block_prune_batched_sweep(batch, lq, nb):
+    """Non-divisible block counts; each row pruned against its own theta."""
+    rng = np.random.default_rng(batch * 100 + lq * nb)
+    bm = jnp.asarray(
+        rng.gamma(1.0, 1.0, (batch, lq, nb)) * (rng.random((batch, lq, nb)) > 0.3), jnp.float32
+    )
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (batch, lq)), jnp.float32)
+    theta = jnp.asarray(np.quantile(np.asarray(bm).sum(1), 0.7, axis=-1), jnp.float32)
+    ub, mask = block_prune_batched(bm, qw, theta, block_nb=256, interpret=True)
+    rub, rmask = block_prune_batched_ref(bm, qw, theta)
+    np.testing.assert_allclose(np.asarray(ub), np.asarray(rub), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(rmask))
+
+
+def test_block_prune_batched_matches_per_row_kernel():
+    rng = np.random.default_rng(9)
+    B, lq, nb = 3, 6, 130
+    bm = jnp.asarray(rng.gamma(1.0, 1.0, (B, lq, nb)), jnp.float32)
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (B, lq)), jnp.float32)
+    theta = jnp.asarray(rng.gamma(2.0, 2.0, B), jnp.float32)
+    ub, mask = block_prune_batched(bm, qw, theta, block_nb=128, interpret=True)
+    for b in range(B):
+        rub, rmask = block_prune(bm[b], qw[b], theta[b], block_nb=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(ub[b]), np.asarray(rub), rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(mask[b]), np.asarray(rmask))
+
+
+def test_block_prune_batched_degenerate_all_and_none_pruned():
+    """theta below every ub keeps all nonempty blocks; theta above kills all."""
+    rng = np.random.default_rng(4)
+    B, lq, nb = 2, 4, 260  # non-divisible by the 128 tile
+    bm = jnp.asarray(rng.gamma(1.0, 1.0, (B, lq, nb)) + 0.1, jnp.float32)
+    qw = jnp.asarray(np.ones((B, lq)), jnp.float32)
+    ub_ref, _ = block_prune_batched_ref(bm, qw, jnp.zeros((B,), jnp.float32))
+    lo = jnp.full((B,), -1.0, jnp.float32)
+    hi = jnp.asarray(np.asarray(ub_ref).max(-1) + 1.0, jnp.float32)
+    _, mask_none = block_prune_batched(bm, qw, lo, block_nb=128, interpret=True)
+    _, mask_all = block_prune_batched(bm, qw, hi, block_nb=128, interpret=True)
+    assert bool(np.asarray(mask_none).all())  # none pruned: every block survives
+    assert not bool(np.asarray(mask_all).any())  # all pruned: nothing survives
+    # rows see only their own theta: mixing lo/hi prunes exactly one row
+    mixed = jnp.asarray([float(lo[0]), float(hi[1])], jnp.float32)
+    _, mask_mix = block_prune_batched(bm, qw, mixed, block_nb=128, interpret=True)
+    assert bool(np.asarray(mask_mix)[0].all()) and not bool(np.asarray(mask_mix)[1].any())
+
+
+def test_block_prune_batched_empty_blocks_never_survive():
+    """ub == 0 blocks (no query term present) stay dead even with theta < 0."""
+    bm = jnp.zeros((2, 3, 140), jnp.float32)
+    qw = jnp.ones((2, 3), jnp.float32)
+    theta = jnp.full((2,), -5.0, jnp.float32)
+    _, mask = block_prune_batched(bm, qw, theta, block_nb=128, interpret=True)
+    assert not bool(np.asarray(mask).any())
 
 
 @pytest.mark.parametrize("n,tmax,lq", [(100, 16, 8), (512, 64, 32), (130, 7, 3)])

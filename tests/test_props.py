@@ -106,6 +106,92 @@ def test_int8_roundtrip_shape_dtype(seed):
     assert y.shape == x.shape and y.dtype == x.dtype
 
 
+def _random_wacky_index(seed: int, scale: float, *, n_docs=50, n_terms=20, n_post=300):
+    """Small impact-quantized index with gamma-distributed ("wacky") weights."""
+    from repro.core import build_impact_index
+
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, n_docs, n_post)
+    t = rng.integers(0, n_terms, n_post)
+    w = rng.gamma(2.0, scale, n_post)
+    return build_impact_index(d, t, w, n_docs, n_terms), rng
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_block_upper_bounds_dominate_block_scores(seed, scale):
+    """ub[b] is a true upper bound on every block's exact document score."""
+    from repro.core.daat import block_upper_bounds, max_blocks_per_term
+    from repro.core.exhaustive import score_all_docs
+    from repro.core.impact_index import query_vector
+
+    idx, rng = _random_wacky_index(seed, scale)
+    n_q = min(5, idx.n_terms)
+    qt = jnp.asarray(rng.choice(idx.n_terms, n_q, replace=False).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, n_q).astype(np.float32))
+    ub = np.asarray(block_upper_bounds(idx, qt, qw, max_blocks_per_term(idx)))
+    scores = np.asarray(score_all_docs(idx, query_vector(idx, qt, qw)))
+    scores = np.where(np.isfinite(scores), scores, 0.0)  # pad docs score 0
+    block_best = scores.reshape(idx.n_blocks, idx.block_size).max(axis=-1)
+    # fp32 scatter order may differ from the row reduction: allow an ulp-scale slack
+    slack = 1e-5 * max(1.0, float(np.abs(ub).max()))
+    assert (ub + slack >= block_best).all(), (ub, block_best)
+
+
+@pytest.mark.slow
+@_settings
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_daat_exact_equals_exhaustive_topk(seed, scale):
+    """exact=True batched DAAT == exhaustive top-k on random wacky indexes."""
+    from repro.core import daat_search_batched, exhaustive_search
+    from repro.core.daat import max_blocks_per_term
+
+    idx, rng = _random_wacky_index(seed, scale)
+    B, n_q = 3, min(4, idx.n_terms)
+    qt = jnp.asarray(rng.integers(0, idx.n_terms, (B, n_q)).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (B, n_q)).astype(np.float32))
+    k = 5
+    da = daat_search_batched(
+        idx, qt, qw, k=k, est_blocks=1, block_budget=1,
+        max_bm_per_term=max_blocks_per_term(idx), exact=True,
+    )
+    ex = exhaustive_search(idx, qt, qw, k=k)
+    assert bool(np.asarray(da.rank_safe).all())
+    np.testing.assert_allclose(
+        np.asarray(da.scores), np.asarray(ex.scores), rtol=1e-5, atol=1e-5
+    )
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_daat_rank_safe_monotone_in_est_blocks(seed, scale):
+    """Raising est_blocks never decreases rank_safe (chunk ladder is nested).
+
+    Safety at prefix m of the ub order is monotone in m — once the k-th score
+    of the scored prefix dominates the next block's bound, any longer prefix
+    dominates too — so seeding more phase-1 blocks (with the chunk count
+    capped) can only move queries TOWARD rank safety.
+    """
+    from repro.core import daat_search_batched
+    from repro.core.daat import max_blocks_per_term
+
+    idx, rng = _random_wacky_index(seed, scale)
+    n_q = min(4, idx.n_terms)
+    qt = jnp.asarray(rng.integers(0, idx.n_terms, (2, n_q)).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (2, n_q)).astype(np.float32))
+    mb = max_blocks_per_term(idx)
+    prev = None
+    for est in (1, 2, idx.n_blocks):
+        da = daat_search_batched(
+            idx, qt, qw, k=3, est_blocks=est, block_budget=1,
+            max_bm_per_term=mb, exact=True, max_chunks=1,
+        )
+        safe = np.asarray(da.rank_safe).astype(np.int32)
+        if prev is not None:
+            assert (safe >= prev).all(), (est, safe, prev)
+        prev = safe
+
+
 @_settings
 @given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
 def test_saat_plan_contribution_order(seed, scale):

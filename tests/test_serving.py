@@ -53,6 +53,36 @@ def test_latency_stats():
     assert s.tail_ratio > 5
 
 
+def test_server_daat_engine_matches_exhaustive(bm25_index, bm25_queries):
+    """engine='daat' serves the batched Block-Max engine, rank-safe."""
+    qt, qw = bm25_queries
+    srv = AnytimeServer(
+        bm25_index,
+        ServingConfig(k=10, batch_size=8, engine="daat", daat_est_blocks=2, daat_block_budget=2),
+    )
+    srv.warmup(jnp.asarray(qt[:8]), jnp.asarray(qw[:8]))
+    scores, ids = run_query_stream(srv, qt, qw)
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(scores, np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+    assert srv.stats().p50_ms > 0
+
+
+def test_server_rejects_unknown_engine(bm25_index):
+    with pytest.raises(ValueError, match="engine"):
+        AnytimeServer(bm25_index, ServingConfig(engine="bmw"))
+
+
+def test_daat_engine_rejects_explicit_rho(bm25_index, bm25_queries):
+    """A SAAT budget passed to the daat engine is a caller bug, not a no-op."""
+    qt, qw = bm25_queries
+    srv = AnytimeServer(
+        bm25_index,
+        ServingConfig(k=10, engine="daat", daat_est_blocks=2, daat_block_budget=2),
+    )
+    with pytest.raises(ValueError, match="rho"):
+        srv.search_batch(jnp.asarray(qt[:4]), jnp.asarray(qw[:4]), rho=100)
+
+
 @pytest.mark.parametrize("n_shards", [1, 4])
 def test_sharded_serve_matches_exhaustive(tiny_corpus, bm25_collection, bm25_index, bm25_queries, n_shards):
     """Doc-sharded SAAT with k-merge == global exhaustive oracle (1-dev mesh)."""
@@ -79,6 +109,48 @@ def test_sharded_serve_matches_exhaustive(tiny_corpus, bm25_collection, bm25_ind
     ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
     np.testing.assert_allclose(np.asarray(ss), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
     assert (np.asarray(si) == np.asarray(ex.doc_ids)).mean() > 0.95  # ties may permute
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_sharded_daat_serve_matches_exhaustive(
+    tiny_corpus, bm25_collection, bm25_index, bm25_queries, n_shards
+):
+    """Doc-sharded batched DAAT with k-merge == global exhaustive oracle."""
+    enc = bm25_collection
+    qt, qw = bm25_queries
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards, dps = shard_corpus(
+        enc.doc_idx, enc.term_idx, enc.weights, tiny_corpus.n_docs, enc.n_terms, n_shards
+    )
+    stacked = stack_indexes(shards)
+    assert stacked.max_bm == max(s.max_bm for s in shards)  # build-time bound survives stacking
+    serve, _, _ = make_sharded_serve_step(
+        mesh,
+        k=10,
+        rho_per_shard=0,  # unused by the daat engine
+        max_segs_per_term=0,
+        docs_per_shard=dps,
+        engine="daat",
+        daat_est_blocks=2,
+        daat_block_budget=2,
+        max_bm_per_term=stacked.max_bm,
+    )
+    with mesh:
+        ss, si = serve(stacked, jnp.asarray(qt), jnp.asarray(qw))
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+    # DAAT's incremental merge permutes ties more than a single top-k pass,
+    # so demand only majority id agreement on top of the exact score parity
+    assert (np.asarray(si) == np.asarray(ex.doc_ids)).mean() > 0.8
+
+
+def test_sharded_daat_requires_static_bm_bound(bm25_index):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="max_bm_per_term"):
+        make_sharded_serve_step(
+            mesh, k=5, rho_per_shard=0, max_segs_per_term=0, docs_per_shard=100,
+            engine="daat",
+        )
 
 
 def test_sharded_rho_budget_is_per_shard(tiny_corpus, bm25_collection):
