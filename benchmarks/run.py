@@ -16,6 +16,8 @@ def main() -> None:
         roofline,
         side_batched_vs_vmap,
         side_blockmax_vs_exhaustive,
+        side_daat_vs_saat_batched,
+        side_fused_vs_unfused,
         table1_models_systems,
         table2_term_stats,
     )
@@ -28,6 +30,8 @@ def main() -> None:
         ("fig3_pareto", fig3_pareto.main),
         ("side_blockmax_vs_exhaustive", side_blockmax_vs_exhaustive.main),
         ("side_batched_vs_vmap", side_batched_vs_vmap.main),
+        ("side_daat_vs_saat_batched", side_daat_vs_saat_batched.main),
+        ("side_fused_vs_unfused", side_fused_vs_unfused.main),
         ("roofline", roofline.main),
     ]
     t_all = time.time()

@@ -1,0 +1,122 @@
+"""Side experiment: fused vs unfused hot paths at the Fig. 2 batch shapes.
+
+Two fusions land in PR 3, both changing what crosses the HBM boundary on the
+hottest path in the repo:
+
+  * SAAT ``fused_topk``: ``impact_scatter_topk`` emits per-block top-k
+    candidates straight from the VMEM accumulator blocks — ``[B, blocks*k]``
+    leaves the kernel instead of the ``[B, n_docs]`` accumulator (which the
+    unfused path writes out and immediately reads back for ``top_k``);
+  * DAAT ``use_kernels``: phase 2 routes through ``block_prune_batched`` +
+    ``block_topk_batched`` + ``sparse_score_batched`` instead of the jnp
+    scatter/top_k/gather-reduce formulation.
+
+Every config is ONE executable over the whole ``[B, Lq]`` batch, timed at
+B ∈ {1, 8, 32}. On CPU the Pallas kernels run in interpret mode, so absolute
+times favor the jnp/unfused paths — what is faithful here is the shape of the
+comparison harness and the parity of the work metrics; the HBM-traffic win is
+a TPU property (see the roofline bench). Both engines' fused/unfused variants
+must agree on doc ids — the run asserts it before timing.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import daat_search_batched, saat_search
+from repro.core.daat import max_blocks_per_term
+from repro.core.saat import max_segments_per_term
+
+K = 100
+RHO = 20_000
+MODELS = ("bm25", "spladev2")
+BATCH_SIZES = (1, 8, 32)
+SCATTER = "pallas"  # unfused baseline with the same (Pallas) scatter kernel
+EST_BLOCKS = 8
+BLOCK_BUDGET = 16
+# interpret-mode kernels on CPU run seconds per call for the wacky models
+# (skipping collapses -> long while_loop of interpreted launches), so keep
+# the sample count small; on TPU raise this freely
+REPEATS = 5
+
+
+def _timed_samples(fn, qt, qw, repeats: int) -> np.ndarray:
+    jax.block_until_ready(fn(qt, qw))  # compile
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(qt, qw))
+        out.append((time.perf_counter() - t0) * 1e3)
+    return np.asarray(out)
+
+
+def _stats(samples: np.ndarray) -> tuple[float, float]:
+    return round(float(samples.mean()), 3), round(float(np.percentile(samples, 99)), 3)
+
+
+def run() -> list[dict]:
+    rows = []
+    for model in MODELS:
+        idx = C.index_for(model)
+        qt_all, qw_all = C.queries_for(model)
+        ms = max_segments_per_term(idx)
+        mb = max_blocks_per_term(idx)
+        rho = min(RHO, idx.n_postings)
+        for bs in BATCH_SIZES:
+            reps = -(-bs // qt_all.shape[0])
+            qt = np.tile(np.asarray(qt_all), (reps, 1))[:bs]
+            qw = np.tile(np.asarray(qw_all), (reps, 1))[:bs]
+            qt, qw = jax.numpy.asarray(qt), jax.numpy.asarray(qw)
+
+            def saat(q, w, fused):
+                return saat_search(
+                    idx, q, w, k=K, rho=rho, max_segs_per_term=ms,
+                    scatter_impl=SCATTER, fused_topk=fused,
+                )
+
+            def daat(q, w, kernels):
+                return daat_search_batched(
+                    idx, q, w, k=K, est_blocks=EST_BLOCKS, block_budget=BLOCK_BUDGET,
+                    max_bm_per_term=mb, exact=True, use_kernels=kernels,
+                )
+
+            # the fusion must be invisible in results before it is timed
+            su, sf = saat(qt, qw, False), saat(qt, qw, True)
+            assert (np.asarray(su.doc_ids) == np.asarray(sf.doc_ids)).all()
+            du, dk = daat(qt, qw, False), daat(qt, qw, True)
+            assert (np.asarray(du.doc_ids) == np.asarray(dk.doc_ids)).all()
+
+            t_su = _stats(_timed_samples(lambda q, w: saat(q, w, False), qt, qw, REPEATS))
+            t_sf = _stats(_timed_samples(lambda q, w: saat(q, w, True), qt, qw, REPEATS))
+            t_du = _stats(_timed_samples(lambda q, w: daat(q, w, False), qt, qw, REPEATS))
+            t_dk = _stats(_timed_samples(lambda q, w: daat(q, w, True), qt, qw, REPEATS))
+            n_blocks_scatter = -(-idx.doc_terms.shape[0] // 512)  # fused block_d
+            rows.append(
+                {
+                    "model": model,
+                    "batch": bs,
+                    "saat_unfused_mean_ms": t_su[0],
+                    "saat_unfused_p99_ms": t_su[1],
+                    "saat_fused_mean_ms": t_sf[0],
+                    "saat_fused_p99_ms": t_sf[1],
+                    "daat_jnp_mean_ms": t_du[0],
+                    "daat_jnp_p99_ms": t_du[1],
+                    "daat_kernels_mean_ms": t_dk[0],
+                    "daat_kernels_p99_ms": t_dk[1],
+                    # HBM-boundary accounting for the SAAT fusion
+                    "hbm_floats_unfused": int(bs * idx.doc_terms.shape[0]),
+                    "hbm_floats_fused": int(bs * n_blocks_scatter * min(K, 512)),
+                }
+            )
+    return rows
+
+
+def main():
+    C.print_csv("Side experiment: fused vs unfused (SAAT scatter-topk, DAAT kernels)", run())
+
+
+if __name__ == "__main__":
+    main()

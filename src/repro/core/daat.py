@@ -51,6 +51,23 @@ flags are carried through the masked loop unchanged.
 ``daat_search_vmap`` (the historical ``blockmax_search``, kept as an alias)
 remains the parity oracle and benchmark baseline
 (``benchmarks/side_daat_vs_saat_batched.py``).
+
+Kernel-backed phase 2 (``use_kernels=True``)
+--------------------------------------------
+The batched engine can route its hot inner ops through the batch-gridded
+Pallas kernels instead of jnp:
+
+  * block upper bounds — ``block_prune_batched`` contracts per-query dense
+    block-max rows with the query weights on the MXU (one launch, phase 0);
+  * chunk selection — ``block_topk_batched`` replaces ``lax.top_k`` over the
+    remaining-ub vector (phase 1 seeding and every phase-2 iteration);
+  * chunk scoring — ``sparse_score_batched`` match-and-accumulate replaces
+    the jnp gather-reduce ``score_blocks``.
+
+The jnp path is kept verbatim as the parity oracle: doc ids and ``WorkStats``
+must match exactly, scores to fp32 tolerance (the kernels reassociate the
+same sums). All threshold/merge/masking logic is shared between the modes —
+``use_kernels`` swaps only HOW the same numbers are produced.
 """
 from __future__ import annotations
 
@@ -126,6 +143,29 @@ def query_vectors(index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array) 
     return qvec.at[..., n_terms].set(0.0)
 
 
+def _gather_blockmax_lists(
+    index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array, max_bm_per_term: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Clamp-and-gather the per-slot block-max lists (shared by the jnp and
+    kernel phase-0 paths — ONE copy of the sentinel/clamp logic).
+
+    Returns ``(blocks i32[..., Lq, M], w f32[..., Lq, M])`` with raw block
+    maxima (query weight NOT applied) and invalid slots zeroed; pad /
+    zero-weight query slots map to the sentinel term's empty list.
+    """
+    n_terms = index.n_terms
+    t = jnp.where(q_weights > 0, q_terms, n_terms)
+    base = index.term_bm_start[t]
+    cnt = jnp.minimum(index.term_bm_count[t], max_bm_per_term)
+    offs = jnp.arange(max_bm_per_term, dtype=jnp.int32)
+    idx = base[..., :, None] + offs
+    valid = offs < cnt[..., :, None]
+    idx = jnp.where(valid, idx, 0)
+    blocks = jnp.where(valid, index.bm_block[idx], 0)
+    w = jnp.where(valid, index.bm_weight[idx], 0.0)
+    return blocks, w
+
+
 def block_upper_bounds(
     index: ImpactIndex,
     q_terms: jax.Array,
@@ -139,16 +179,8 @@ def block_upper_bounds(
     per-term block-max lists (``ub[b_q, blk] = sum_t qw * blockmax``).
     Ranks above 2 are not supported (the row-index scatter is rank-2).
     """
-    n_terms = index.n_terms
-    t = jnp.where(q_weights > 0, q_terms, n_terms)
-    base = index.term_bm_start[t]
-    cnt = jnp.minimum(index.term_bm_count[t], max_bm_per_term)
-    offs = jnp.arange(max_bm_per_term, dtype=jnp.int32)
-    idx = base[..., :, None] + offs
-    valid = offs < cnt[..., :, None]
-    idx = jnp.where(valid, idx, 0)
-    blocks = jnp.where(valid, index.bm_block[idx], 0)
-    w = jnp.where(valid, index.bm_weight[idx] * q_weights[..., :, None].astype(jnp.float32), 0.0)
+    blocks, w = _gather_blockmax_lists(index, q_terms, q_weights, max_bm_per_term)
+    w = w * q_weights[..., :, None].astype(jnp.float32)
     flat = blocks.shape[:-2] + (blocks.shape[-2] * blocks.shape[-1],)
     blocks, w = blocks.reshape(flat), w.reshape(flat)
     ub = jnp.zeros(blocks.shape[:-1] + (index.n_blocks,), jnp.float32)
@@ -195,6 +227,54 @@ def score_blocks(
     scores = jnp.sum(qv * w, axis=-1)
     scores = jnp.where(docs < index.n_docs, scores, -jnp.inf)
     return scores, docs
+
+
+def _dense_blockmax_rows(
+    index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array, max_bm_per_term: int
+) -> jax.Array:
+    """Densify the per-(query, slot) block-max lists: ``f32[B, Lq, n_blocks]``.
+
+    Raw block maxima (query weight NOT applied) — the ``[Lq, NB]`` layout the
+    ``block_prune`` kernel contracts against ``q_weights`` on the MXU.
+    Pad / zero-weight slots densify to empty rows, so they contribute exactly
+    0 to the bound, mirroring :func:`block_upper_bounds`.
+
+    Cost note: the dense layout is ``Lq`` x larger than the CSR lists it
+    expands (that IS the prune kernel's input contract), so phase 0 of the
+    kernel mode trades one-off HBM traffic here for the fused bound+threshold
+    pass; a CSR-native prune kernel is a ROADMAP item.
+    """
+    blocks, w = _gather_blockmax_lists(index, q_terms, q_weights, max_bm_per_term)
+    B, Lq = q_terms.shape
+    rows = jnp.zeros((B, Lq, index.n_blocks), jnp.float32)
+    b_ix = jnp.arange(B, dtype=jnp.int32)[:, None, None]
+    l_ix = jnp.arange(Lq, dtype=jnp.int32)[None, :, None]
+    return rows.at[b_ix, l_ix, blocks].add(w)
+
+
+def _score_blocks_kernel_batched(
+    index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array, block_ids: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Kernel-backed :func:`score_blocks`: one ``sparse_score_batched`` launch.
+
+    Gathers the selected blocks' doc-major rows (exactly as the jnp scorer
+    does) and hands the ``[B, nb * block_size, Tmax]`` tile to the
+    match-and-accumulate kernel; padded documents mask to ``-inf`` outside
+    the kernel, matching the jnp path.
+    """
+    from repro.kernels.sparse_score import ops as score_ops
+
+    bs = index.block_size
+    docs = block_ids[..., :, None] * bs + jnp.arange(bs, dtype=jnp.int32)  # [B, nb, bs]
+    B = docs.shape[0]
+    flat = docs.reshape(B, -1)
+    dt = index.doc_terms[flat]  # [B, nb*bs, Tmax]
+    dw = index.doc_weights[flat]
+    # the engine defines qw <= 0 slots as padding; the kernel sums raw weights
+    qw = jnp.where(q_weights > 0, q_weights.astype(jnp.float32), 0.0)
+    scores = score_ops.sparse_score_batched(dt, dw, q_terms, qw)
+    scores = jnp.where(flat < index.n_docs, scores, -jnp.inf)
+    return scores.reshape(docs.shape), docs
 
 
 def _resolve_daat_shapes(
@@ -296,7 +376,10 @@ blockmax_search = daat_search_vmap
 
 @partial(
     jax.jit,
-    static_argnames=("k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks"),
+    static_argnames=(
+        "k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks",
+        "use_kernels",
+    ),
 )
 def daat_search_batched(
     index: ImpactIndex,
@@ -309,6 +392,7 @@ def daat_search_batched(
     max_bm_per_term: int,
     exact: bool = True,
     max_chunks: int | None = None,
+    use_kernels: bool = False,
 ) -> DaatResult:
     """Natively batched block-max DAAT top-k. ``q_terms/q_weights: [B, Lq]``.
 
@@ -317,6 +401,11 @@ def daat_search_batched(
     and a single ``lax.while_loop`` with per-query masked state (see module
     docstring for the batched-loop semantics). Bit-identical doc ids and
     :class:`WorkStats` to :func:`daat_search_vmap`.
+
+    ``use_kernels=True`` routes phase 0's upper bounds through
+    ``block_prune_batched``, chunk selection through ``block_topk_batched``,
+    and chunk scoring through ``sparse_score_batched`` (see module
+    docstring); the jnp formulation stays the parity oracle.
     """
     if q_terms.ndim != 2:
         raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
@@ -327,12 +416,36 @@ def daat_search_batched(
     B = q_terms.shape[0]
     rows = jnp.arange(B, dtype=jnp.int32)[:, None]
 
-    plan = daat_plan(index, q_terms, q_weights, max_bm_per_term)
-    ub, qvec = plan.ub, plan.qvec  # [B, n_blocks], [B, V+1]
+    if use_kernels:
+        from repro.kernels.block_prune import ops as prune_ops
+        from repro.kernels.block_topk import ops as topk_ops
+
+        bm_rows = _dense_blockmax_rows(index, q_terms, q_weights, max_bm_per_term)
+        ub, _ = prune_ops.block_prune_batched(
+            bm_rows, q_weights.astype(jnp.float32),
+            jnp.full((B,), -jnp.inf, jnp.float32),  # no threshold yet: pure ub pass
+        )
+        qvec = None  # the kernel scorer consumes (q_terms, q_weights) directly
+
+        def _select(scores_vec, n):  # noqa: ANN001 — chunk/phase-1 block select
+            return topk_ops.block_topk_batched(scores_vec, n)
+
+        def _score(block_ids):
+            return _score_blocks_kernel_batched(index, q_terms, q_weights, block_ids)
+
+    else:
+        plan = daat_plan(index, q_terms, q_weights, max_bm_per_term)
+        ub, qvec = plan.ub, plan.qvec  # [B, n_blocks], [B, V+1]
+
+        def _select(scores_vec, n):
+            return topk(scores_vec, n)
+
+        def _score(block_ids):
+            return score_blocks(index, qvec, block_ids)
 
     # ---- phase 1: seed every query's top-k pool in one batched pass ----
-    _, b1 = topk(ub, est_blocks)  # [B, est_blocks]
-    s1, d1 = score_blocks(index, qvec, b1)  # [B, est_blocks, bs]
+    _, b1 = _select(ub, est_blocks)  # [B, est_blocks]
+    s1, d1 = _score(b1)  # [B, est_blocks, bs]
     pool_s, pool_i = topk(s1.reshape(B, -1), k)
     pool_i = jnp.take_along_axis(d1.reshape(B, -1), pool_i, axis=-1).astype(jnp.int32)
     theta = pool_s[:, k - 1]  # [B]
@@ -355,9 +468,9 @@ def daat_search_batched(
         pool_s, pool_i, processed, theta, chunks = state
         act = active_rows(state)  # finished queries idle below
         rub = remaining_ub(processed)
-        ub_c, b_c = topk(rub, block_budget)  # [B, budget]
+        ub_c, b_c = _select(rub, block_budget)  # [B, budget]
         live = ub_c > theta[:, None]  # only these can change the top-k
-        s_c, d_c = score_blocks(index, qvec, b_c)  # [B, budget, bs]
+        s_c, d_c = _score(b_c)  # [B, budget, bs]
         s_c = jnp.where(live[..., None], s_c, -jnp.inf)
         new_s, new_i = merge_topk(
             pool_s, pool_i, s_c.reshape(B, -1), d_c.reshape(B, -1).astype(jnp.int32), k

@@ -24,6 +24,16 @@ posting gather, and one batch-aware scatter — a single executable per
 The scatter is the hot loop; ``scatter_impl='pallas'`` routes it to the
 one-hot-matmul Pallas kernel (``repro.kernels.impact_scatter``), which for the
 batched engine grids over (query, doc-block, posting-tile).
+
+``fused_topk=True`` goes one step further and fuses the top-k selection INTO
+the scatter kernel (``repro.kernels.impact_scatter_topk``): each accumulator
+block's revisiting loop ends by emitting its per-block top-k candidates, so
+only the ``[B, n_blocks * k]`` candidate pool — never the ``[B, n_docs]``
+accumulator — crosses the HBM boundary; a final ``tiled_topk`` merge over the
+pool recovers the exact global top-k. The fused path is rank-safe by
+construction (a block contributes at most ``min(k, block_d)`` finalists) and
+bit-identical in doc ids to the unfused engine; ``scatter_impl`` is ignored
+when it is set (the fused kernel IS the scatter).
 """
 from __future__ import annotations
 
@@ -223,7 +233,22 @@ def _mask_pad_docs(index: ImpactIndex, acc: jax.Array) -> jax.Array:
     return jnp.where(live, acc, -jnp.inf)
 
 
-@partial(jax.jit, static_argnames=("k", "rho", "max_segs_per_term", "scatter_impl"))
+def _fused_scatter_topk_batched(
+    index: ImpactIndex, docs: jax.Array, contribs: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Scatter + pad-mask + top-k in ONE kernel: HBM sees only candidates."""
+    from repro.kernels.impact_scatter_topk import ops as fused_ops
+
+    n_docs_pad = index.doc_terms.shape[0]
+    return fused_ops.impact_scatter_topk_batched(
+        docs, contribs, n_docs_pad, k, n_live=index.n_docs
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("k", "rho", "max_segs_per_term", "scatter_impl", "fused_topk"),
+)
 def saat_search(
     index: ImpactIndex,
     q_terms: jax.Array,
@@ -233,6 +258,7 @@ def saat_search(
     rho: int,
     max_segs_per_term: int,
     scatter_impl: str = "jnp",
+    fused_topk: bool = False,
 ) -> SaatResult:
     """Natively batched anytime SAAT top-k. ``q_terms/q_weights: [B, Lq]``.
 
@@ -242,13 +268,21 @@ def saat_search(
     The whole batch is one executable per (k, rho, scatter_impl): the planner
     runs one batched argsort, the gather one batched binary search, and the
     scatter one batch-aware kernel launch — no per-query vmapped programs.
+
+    ``fused_topk=True`` replaces scatter-then-select with the fused
+    ``impact_scatter_topk`` kernel: the accumulator never materializes in HBM
+    and doc ids stay bit-identical to the unfused path. ``scatter_impl`` is
+    ignored in that mode (the fused Pallas kernel IS the scatter).
     """
     if q_terms.ndim != 2:
         raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
     plan = saat_plan(index, q_terms, q_weights, max_segs_per_term)
     docs, contribs, n_proc = _gather_postings_batched(index, plan, rho)
-    acc = _accumulate_batched(index, docs, contribs, scatter_impl)
-    scores, ids = topk(_mask_pad_docs(index, acc), k)
+    if fused_topk:
+        scores, ids = _fused_scatter_topk_batched(index, docs, contribs, k)
+    else:
+        acc = _accumulate_batched(index, docs, contribs, scatter_impl)
+        scores, ids = topk(_mask_pad_docs(index, acc), k)
     return SaatResult(scores, ids.astype(jnp.int32), n_proc, plan.total_postings)
 
 

@@ -26,21 +26,32 @@ def tiled_topk(scores: jax.Array, k: int, num_tiles: int) -> Tuple[jax.Array, ja
 
     For ``n`` candidates this reduces the sort working set from ``n`` to
     ``num_tiles * k`` — the pattern used for the recsys ``retrieval_cand``
-    shape (1M candidates) and for sharded document scoring.
+    shape (1M candidates), for sharded document scoring, and for merging the
+    fused scatter→top-k kernel's per-block candidate pools.
+
+    Ragged inputs are handled rather than rejected: when ``n`` is not a
+    multiple of ``num_tiles`` the tail tile is padded with ``NEG_INF`` (pad
+    slots sort behind every real entry, including real ``-inf`` ties, because
+    they sit at the highest flat positions), and ``k`` larger than the tile
+    size is clamped per tile. Both cases stay rank-safe: a tile can contribute
+    at most ``min(k, tile)`` entries to the global top-k, and a clamped ``k``
+    keeps whole tiles. Like :func:`topk`, the output width is ``min(k, n)``.
     """
     n = scores.shape[-1]
-    if n % num_tiles != 0:
-        raise ValueError(f"{n=} not divisible by {num_tiles=}")
-    tile = n // num_tiles
-    if k > tile:
-        raise ValueError(f"{k=} must be <= tile size {tile}")
+    tile = -(-n // num_tiles)  # ceil: tail tile may be partial
+    n_pad = tile * num_tiles
+    if n_pad != n:
+        pad = jnp.full(scores.shape[:-1] + (n_pad - n,), NEG_INF, scores.dtype)
+        scores = jnp.concatenate([scores, pad], axis=-1)
+    k_out = min(k, n)
+    k_tile = min(k_out, tile)  # clamped k keeps whole tiles -> merge stays exact
     tiles = scores.reshape(scores.shape[:-1] + (num_tiles, tile))
-    s, i = jax.lax.top_k(tiles, k)  # [..., num_tiles, k]
+    s, i = jax.lax.top_k(tiles, k_tile)  # [..., num_tiles, k_tile]
     base = (jnp.arange(num_tiles, dtype=jnp.int32) * tile)[:, None]
     gids = i.astype(jnp.int32) + base
-    flat_s = s.reshape(scores.shape[:-1] + (num_tiles * k,))
-    flat_i = gids.reshape(scores.shape[:-1] + (num_tiles * k,))
-    ms, mi = jax.lax.top_k(flat_s, k)
+    flat_s = s.reshape(scores.shape[:-1] + (num_tiles * k_tile,))
+    flat_i = gids.reshape(scores.shape[:-1] + (num_tiles * k_tile,))
+    ms, mi = jax.lax.top_k(flat_s, k_out)
     return ms, jnp.take_along_axis(flat_i, mi, axis=-1)
 
 

@@ -28,3 +28,39 @@ def pad_axis(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
     pads = [(0, 0)] * x.ndim
     pads[axis] = (0, target - n)
     return jnp.pad(x, pads, constant_values=fill)
+
+
+def sorted_posting_tiles(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs_pad: int,
+    tile_p: int,
+    sort_by_doc: bool,
+) -> tuple[jax.Array, jax.Array, jax.Array, int]:
+    """Shared preprocessing for the scatter-family kernels.
+
+    Optional doc-sort (ONE multi-operand ``lax.sort`` — the same primitive for
+    every wrapper, so the fused and unfused kernels see postings in the
+    identical order and their f32 accumulation is bit-identical by
+    construction, not by copy-paste), padding to the posting-tile multiple,
+    and the per-tile [min_doc, max_doc+1) skip ranges. Handles both the
+    single-query ``[P]`` and batched ``[B, P]`` layouts.
+
+    Returns ``(docs, contribs, tile_ranges, n_tiles)``.
+    """
+    docs = doc_ids.astype(jnp.int32)
+    c = contribs.astype(jnp.float32)
+    if sort_by_doc:
+        # docs key, contribs payload: one fused pass, no argsort + gathers
+        docs, c = jax.lax.sort((docs, c), dimension=-1, num_keys=1)
+    axis = docs.ndim - 1
+    docs = pad_axis(docs, axis, tile_p, fill=0)
+    c = pad_axis(c, axis, tile_p, fill=0.0)
+    n_tiles = docs.shape[axis] // tile_p
+    tiles = docs.reshape(docs.shape[:-1] + (n_tiles, tile_p))
+    if sort_by_doc:
+        ranges = jnp.stack([tiles.min(axis=-1), tiles.max(axis=-1) + 1], axis=-1)
+    else:
+        lo = jnp.zeros(tiles.shape[:-1], jnp.int32)
+        ranges = jnp.stack([lo, jnp.full_like(lo, n_docs_pad)], axis=-1)
+    return docs, c, ranges.astype(jnp.int32), n_tiles

@@ -9,9 +9,8 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.common import interpret_default, pad_axis, round_up
+from repro.kernels.common import interpret_default, round_up, sorted_posting_tiles
 from repro.kernels.impact_scatter.kernel import (
     impact_scatter_batched_kernel,
     impact_scatter_kernel,
@@ -42,26 +41,11 @@ def impact_scatter(
     if interpret is None:
         interpret = interpret_default()
     n_docs_pad = round_up(max(n_docs, block_d), block_d)
-    docs = doc_ids.astype(jnp.int32)
-    c = contribs.astype(jnp.float32)
-    if sort_by_doc:
-        order = jnp.argsort(docs)
-        docs, c = docs[order], c[order]
-    docs = pad_axis(docs, 0, tile_p, fill=0)
-    c = pad_axis(c, 0, tile_p, fill=0.0)
-    n_tiles = docs.shape[0] // tile_p
-    tiles = docs.reshape(n_tiles, tile_p)
-    if sort_by_doc:
-        ranges = jnp.stack([tiles.min(axis=1), tiles.max(axis=1) + 1], axis=1)
-    else:
-        ranges = jnp.stack(
-            [jnp.zeros((n_tiles,), jnp.int32), jnp.full((n_tiles,), n_docs_pad, jnp.int32)],
-            axis=1,
-        )
+    docs, c, ranges, _ = sorted_posting_tiles(doc_ids, contribs, n_docs_pad, tile_p, sort_by_doc)
     acc = impact_scatter_kernel(
         docs,
         c,
-        ranges.astype(jnp.int32),
+        ranges,
         n_docs=n_docs_pad,
         block_d=block_d,
         tile_p=tile_p,
@@ -95,31 +79,11 @@ def impact_scatter_batched(
     if interpret is None:
         interpret = interpret_default()
     n_docs_pad = round_up(max(n_docs, block_d), block_d)
-    docs = doc_ids.astype(jnp.int32)
-    c = contribs.astype(jnp.float32)
-    if sort_by_doc:
-        # multi-operand sort: docs key, contribs payload (one fused pass
-        # instead of argsort + two gathers)
-        docs, c = jax.lax.sort((docs, c), dimension=-1, num_keys=1)
-    docs = pad_axis(docs, 1, tile_p, fill=0)
-    c = pad_axis(c, 1, tile_p, fill=0.0)
-    B = docs.shape[0]
-    n_tiles = docs.shape[1] // tile_p
-    tiles = docs.reshape(B, n_tiles, tile_p)
-    if sort_by_doc:
-        ranges = jnp.stack([tiles.min(axis=2), tiles.max(axis=2) + 1], axis=2)
-    else:
-        ranges = jnp.stack(
-            [
-                jnp.zeros((B, n_tiles), jnp.int32),
-                jnp.full((B, n_tiles), n_docs_pad, jnp.int32),
-            ],
-            axis=2,
-        )
+    docs, c, ranges, _ = sorted_posting_tiles(doc_ids, contribs, n_docs_pad, tile_p, sort_by_doc)
     acc = impact_scatter_batched_kernel(
         docs,
         c,
-        ranges.astype(jnp.int32),
+        ranges,
         n_docs=n_docs_pad,
         block_d=block_d,
         tile_p=tile_p,

@@ -1,0 +1,253 @@
+"""Pallas TPU kernel: fused SAAT scatter-add → per-block top-k selection.
+
+The unfused SAAT pipeline writes the full ``[B, n_docs]`` accumulator to HBM
+(``impact_scatter_batched``) and immediately reads it back for top-k — twice
+the accumulator's worth of HBM traffic for a result that is only ``k`` entries
+wide. This kernel fuses the selection into the scatter's output-revisiting
+loop: the accumulator *block* lives in VMEM scratch, is revisited across the
+posting-tile grid axis exactly as in ``impact_scatter``, and at the LAST tile
+the kernel runs ``jax.lax.top_k`` over the finished block and emits only that
+block's ``k`` best candidates (ids globalized to document space, scores f32).
+What crosses the HBM boundary is the candidate pool ``[B, n_blocks * k]`` —
+never the accumulator.
+
+Rank safety of the two-stage select: a block of ``block_d`` documents can
+contribute at most ``min(k, block_d)`` entries to the global top-k, so keeping
+``min(k, block_d)`` candidates per block loses nothing; the caller's merge
+pass over the pool (``repro.core.topk.tiled_topk``) recovers the exact global
+top-k, bit-identical in ids to ``lax.top_k`` over the dense accumulator
+(ties resolve block-major → ascending doc id, the same order).
+
+Padded documents (``gid >= n_live``) are masked to ``-inf`` *inside* the
+kernel, before selection, so the candidate pool replicates the unfused
+engine's ``_mask_pad_docs`` + ``topk`` semantics.
+
+The skip-range optimization carries over unchanged from ``impact_scatter``:
+per-(query, tile) [min_doc, max_doc+1) bounds let non-overlapping (block,
+tile) cells skip the one-hot matmul; the t==last selection step still runs so
+every block emits its candidates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_topk_kernel(
+    ranges_ref,
+    docs_ref,
+    contribs_ref,
+    out_s_ref,
+    out_i_ref,
+    acc_ref,
+    *,
+    block_d: int,
+    n_tiles: int,
+    n_live: int,
+):
+    d = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    block_start = d * block_d
+    tile_lo = ranges_ref[0, 0]
+    tile_hi = ranges_ref[0, 1]
+    overlaps = (tile_lo < block_start + block_d) & (tile_hi > block_start)
+
+    @pl.when(overlaps)
+    def _accumulate():
+        docs = docs_ref[0, :]  # i32[TP]
+        c = contribs_ref[0, :]  # f32[TP]
+        local = docs - block_start
+        bd = acc_ref.shape[1]
+        tp = docs.shape[0]
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, (bd, tp), 0)
+        onehot = (row_ids == local[None, :]).astype(jnp.float32)
+        partial = jnp.dot(onehot, c[:, None], preferred_element_type=jnp.float32)
+        acc_ref[0, :] += partial[:, 0]
+
+    @pl.when(t == n_tiles - 1)
+    def _select():
+        k = out_s_ref.shape[1]
+        # 2-D iota: Mosaic rejects 1-D iota on real TPUs (same convention as
+        # the scatter kernels' broadcasted_iota row ids)
+        gid = block_start + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
+        scores = jnp.where(gid < n_live, acc_ref[...], -jnp.inf)
+        s, i = jax.lax.top_k(scores[0], k)
+        out_s_ref[0, :] = s
+        out_i_ref[0, :] = i.astype(jnp.int32) + block_start
+
+
+def _scatter_topk_kernel_batched(
+    ranges_ref,
+    docs_ref,
+    contribs_ref,
+    out_s_ref,
+    out_i_ref,
+    acc_ref,
+    *,
+    block_d: int,
+    n_tiles: int,
+    n_live: int,
+):
+    d = pl.program_id(1)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    block_start = d * block_d
+    tile_lo = ranges_ref[0, 0, 0]
+    tile_hi = ranges_ref[0, 0, 1]
+    overlaps = (tile_lo < block_start + block_d) & (tile_hi > block_start)
+
+    @pl.when(overlaps)
+    def _accumulate():
+        docs = docs_ref[0, 0, :]  # i32[TP]
+        c = contribs_ref[0, 0, :]  # f32[TP]
+        local = docs - block_start
+        bd = acc_ref.shape[1]
+        tp = docs.shape[0]
+        row_ids = jax.lax.broadcasted_iota(jnp.int32, (bd, tp), 0)
+        onehot = (row_ids == local[None, :]).astype(jnp.float32)
+        partial = jnp.dot(onehot, c[:, None], preferred_element_type=jnp.float32)
+        acc_ref[0, :] += partial[:, 0]
+
+    @pl.when(t == n_tiles - 1)
+    def _select():
+        k = out_s_ref.shape[2]
+        # 2-D iota: Mosaic rejects 1-D iota on real TPUs
+        gid = block_start + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
+        scores = jnp.where(gid < n_live, acc_ref[...], -jnp.inf)
+        s, i = jax.lax.top_k(scores[0], k)
+        out_s_ref[0, 0, :] = s
+        out_i_ref[0, 0, :] = i.astype(jnp.int32) + block_start
+
+
+def impact_scatter_topk_kernel(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    tile_ranges: jax.Array,
+    *,
+    n_docs: int,
+    n_live: int,
+    k: int,
+    block_d: int = 512,
+    tile_p: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused scatter → per-block top-k for one query. See module docstring.
+
+    Args:
+      doc_ids: i32[P], P % tile_p == 0, values in [0, n_docs).
+      contribs: f32[P].
+      tile_ranges: i32[P // tile_p, 2] per-tile [min_doc, max_doc+1) bounds.
+      n_docs: accumulator length; must be % block_d == 0.
+      n_live: real document count; ids >= n_live are masked to -inf.
+      k: candidates kept per accumulator block; must be <= block_d.
+
+    Returns:
+      (cand_scores f32[n_blocks, k], cand_ids i32[n_blocks, k]) — the only
+      arrays that leave VMEM; the accumulator never reaches HBM.
+    """
+    P = doc_ids.shape[0]
+    assert P % tile_p == 0, (P, tile_p)
+    assert n_docs % block_d == 0, (n_docs, block_d)
+    assert 0 < k <= block_d, (k, block_d)
+    n_tiles = P // tile_p
+    n_blocks = n_docs // block_d
+
+    grid = (n_blocks, n_tiles)
+    docs2d = doc_ids.reshape(n_tiles, tile_p)
+    c2d = contribs.astype(jnp.float32).reshape(n_tiles, tile_p)
+
+    out_s, out_i = pl.pallas_call(
+        functools.partial(
+            _scatter_topk_kernel, block_d=block_d, n_tiles=n_tiles, n_live=n_live
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda d, t: (t, 0)),
+            pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
+            pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda d, t: (d, 0)),
+            pl.BlockSpec((1, k), lambda d, t: (d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(tile_ranges, docs2d, c2d)
+    return out_s, out_i
+
+
+def impact_scatter_topk_batched_kernel(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    tile_ranges: jax.Array,
+    *,
+    n_docs: int,
+    n_live: int,
+    k: int,
+    block_d: int = 512,
+    tile_p: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched fused scatter → per-block top-k: grid over (query, block, tile).
+
+    Args:
+      doc_ids: i32[B, P], P % tile_p == 0, values in [0, n_docs).
+      contribs: f32[B, P].
+      tile_ranges: i32[B, P // tile_p, 2] per-(query, tile) doc-id bounds.
+      n_docs: accumulator length; must be % block_d == 0.
+      n_live: real document count; ids >= n_live are masked to -inf.
+      k: candidates kept per accumulator block; must be <= block_d.
+
+    Returns:
+      (cand_scores f32[B, n_blocks, k], cand_ids i32[B, n_blocks, k]).
+    """
+    B, P = doc_ids.shape
+    assert P % tile_p == 0, (P, tile_p)
+    assert n_docs % block_d == 0, (n_docs, block_d)
+    assert 0 < k <= block_d, (k, block_d)
+    n_tiles = P // tile_p
+    n_blocks = n_docs // block_d
+
+    grid = (B, n_blocks, n_tiles)
+    docs3d = doc_ids.reshape(B, n_tiles, tile_p)
+    c3d = contribs.astype(jnp.float32).reshape(B, n_tiles, tile_p)
+
+    out_s, out_i = pl.pallas_call(
+        functools.partial(
+            _scatter_topk_kernel_batched, block_d=block_d, n_tiles=n_tiles, n_live=n_live
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 2), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda b, d, t: (b, d, 0)),
+            pl.BlockSpec((1, 1, k), lambda b, d, t: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_blocks, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_blocks, k), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(tile_ranges, docs3d, c3d)
+    return out_s, out_i

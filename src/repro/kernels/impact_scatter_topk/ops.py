@@ -1,0 +1,132 @@
+"""jit'd wrappers around the fused scatter→top-k Pallas kernel.
+
+The full fused SAAT selection is kernel + merge: the kernel emits per-block
+candidate pools ``[B, n_blocks * k]`` (the only arrays that touch HBM), the
+merge pass (``repro.core.topk.tiled_topk`` over the pool) recovers the exact
+global top-k. Results are bit-identical in doc ids — including ``-inf`` tie
+order — to ``top_k`` over the dense ``impact_scatter`` accumulator, and
+bit-identical in scores to the unfused Pallas scatter (same accumulation
+order per block).
+
+Like ``impact_scatter``'s wrappers: padding, the optional doc-sort feeding the
+kernel's (block x tile) skip ranges, and interpret-mode selection are handled
+here so one call site serves CPU tests and TPU deployments.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import tiled_topk
+from repro.kernels.common import interpret_default, round_up, sorted_posting_tiles
+from repro.kernels.impact_scatter_topk.kernel import (
+    impact_scatter_topk_batched_kernel,
+    impact_scatter_topk_kernel,
+)
+
+
+def _merge_pool(
+    cand_s: jax.Array, cand_i: jax.Array, k_out: int
+) -> tuple[jax.Array, jax.Array]:
+    """Exact global top-k over per-block candidate pools ``[..., nb, kb]``.
+
+    ``tiled_topk`` with one tile per block is rank-safe here by construction
+    (each tile IS a block's full candidate set), and its flat positional ids
+    map back through ``cand_i`` to document ids.
+    """
+    nb, kb = cand_s.shape[-2:]
+    flat_s = cand_s.reshape(cand_s.shape[:-2] + (nb * kb,))
+    flat_i = cand_i.reshape(cand_i.shape[:-2] + (nb * kb,))
+    ms, mpos = tiled_topk(flat_s, k_out, num_tiles=nb)
+    return ms, jnp.take_along_axis(flat_i, mpos, axis=-1)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_docs", "k", "n_live", "block_d", "tile_p", "sort_by_doc", "interpret"),
+)
+def impact_scatter_topk(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    k: int,
+    *,
+    n_live: int | None = None,
+    block_d: int = 512,
+    tile_p: int = 512,
+    sort_by_doc: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused top-k of the scatter accumulator for one query.
+
+    Equivalent to ``top_k(mask(impact_scatter(doc_ids, contribs, n_docs)), k)``
+    with ids >= ``n_live`` masked to ``-inf`` — but the dense accumulator
+    never leaves VMEM. Returns ``(scores, ids)`` of width ``min(k, n_docs)``
+    (the same clamp as ``repro.core.topk.topk``).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if n_live is None:
+        n_live = n_docs
+    n_docs_pad = round_up(max(n_docs, block_d), block_d)
+    k_out = min(k, n_docs)
+    k_blk = min(k_out, block_d)  # a block holds at most block_d of the top-k
+    docs, c, ranges, _ = sorted_posting_tiles(doc_ids, contribs, n_docs_pad, tile_p, sort_by_doc)
+    cand_s, cand_i = impact_scatter_topk_kernel(
+        docs,
+        c,
+        ranges,
+        n_docs=n_docs_pad,
+        n_live=min(n_live, n_docs),
+        k=k_blk,
+        block_d=block_d,
+        tile_p=tile_p,
+        interpret=interpret,
+    )
+    return _merge_pool(cand_s, cand_i, k_out)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_docs", "k", "n_live", "block_d", "tile_p", "sort_by_doc", "interpret"),
+)
+def impact_scatter_topk_batched(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    k: int,
+    *,
+    n_live: int | None = None,
+    block_d: int = 512,
+    tile_p: int = 512,
+    sort_by_doc: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched fused top-k: the batched SAAT engine's ``fused_topk`` hot path.
+
+    One kernel launch grids over (query, block, tile); per-query accumulator
+    blocks live in VMEM scratch and only the ``[B, n_blocks * k]`` candidate
+    pool reaches HBM. Returns ``([B, min(k, n_docs)]`` score/id pairs.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if n_live is None:
+        n_live = n_docs
+    n_docs_pad = round_up(max(n_docs, block_d), block_d)
+    k_out = min(k, n_docs)
+    k_blk = min(k_out, block_d)
+    docs, c, ranges, _ = sorted_posting_tiles(doc_ids, contribs, n_docs_pad, tile_p, sort_by_doc)
+    cand_s, cand_i = impact_scatter_topk_batched_kernel(
+        docs,
+        c,
+        ranges,
+        n_docs=n_docs_pad,
+        n_live=min(n_live, n_docs),
+        k=k_blk,
+        block_d=block_d,
+        tile_p=tile_p,
+        interpret=interpret,
+    )
+    return _merge_pool(cand_s, cand_i, k_out)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the fused scatter → top-k pipeline.
+
+Two levels: the *block-candidate* refs mirror what the kernel emits (per-block
+candidate pools), the *fused* refs mirror the whole pipeline (scatter + pad
+mask + global top-k over the dense accumulator) — i.e. exactly what the
+unfused SAAT engine computes, which is the golden parity target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.impact_scatter.ref import (
+    impact_scatter_batched_ref,
+    impact_scatter_ref,
+)
+
+
+def _mask_live(acc: jax.Array, n_live: int) -> jax.Array:
+    live = jnp.arange(acc.shape[-1], dtype=jnp.int32) < n_live
+    return jnp.where(live, acc, -jnp.inf)
+
+
+def impact_scatter_topk_block_ref(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    n_live: int,
+    k: int,
+    block_d: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-block candidates the kernel should emit. n_docs % block_d == 0."""
+    acc = _mask_live(impact_scatter_ref(doc_ids, contribs, n_docs), n_live)
+    blocks = acc.reshape(n_docs // block_d, block_d)
+    s, i = jax.lax.top_k(blocks, k)
+    base = (jnp.arange(n_docs // block_d, dtype=jnp.int32) * block_d)[:, None]
+    return s, i.astype(jnp.int32) + base
+
+
+def impact_scatter_topk_block_batched_ref(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    n_live: int,
+    k: int,
+    block_d: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched per-block candidate oracle: [B, n_blocks, k] pairs."""
+    B = doc_ids.shape[0]
+    acc = _mask_live(impact_scatter_batched_ref(doc_ids, contribs, n_docs), n_live)
+    blocks = acc.reshape(B, n_docs // block_d, block_d)
+    s, i = jax.lax.top_k(blocks, k)
+    base = (jnp.arange(n_docs // block_d, dtype=jnp.int32) * block_d)[None, :, None]
+    return s, i.astype(jnp.int32) + base
+
+
+def impact_scatter_topk_ref(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    n_live: int,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """End-to-end oracle: dense scatter, pad mask, global top-k."""
+    acc = _mask_live(impact_scatter_ref(doc_ids, contribs, n_docs), n_live)
+    s, i = jax.lax.top_k(acc, min(k, n_docs))
+    return s, i.astype(jnp.int32)
+
+
+def impact_scatter_topk_batched_ref(
+    doc_ids: jax.Array,
+    contribs: jax.Array,
+    n_docs: int,
+    n_live: int,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched end-to-end oracle: [B, min(k, n_docs)] pairs."""
+    acc = _mask_live(impact_scatter_batched_ref(doc_ids, contribs, n_docs), n_live)
+    s, i = jax.lax.top_k(acc, min(k, n_docs))
+    return s, i.astype(jnp.int32)

@@ -1,1 +1,1 @@
-from repro.kernels.sparse_score.ops import sparse_score  # noqa: F401
+from repro.kernels.sparse_score.ops import sparse_score, sparse_score_batched  # noqa: F401

@@ -27,6 +27,54 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _score_kernel_batched(dt_ref, dw_ref, qt_ref, qw_ref, out_ref):
+    terms = dt_ref[0]  # i32[BD, Tmax] — one (query, doc-block) cell
+    w = dw_ref[0].astype(jnp.float32)
+    qt = qt_ref[0, 0, :]  # i32[Lq]
+    qw = qw_ref[0, 0, :].astype(jnp.float32)
+    bd, tmax = terms.shape
+    onehot = (terms.reshape(bd * tmax, 1) == qt[None, :]).astype(jnp.float32)
+    qv = jnp.dot(onehot, qw[:, None], preferred_element_type=jnp.float32)
+    scores = jnp.sum(qv.reshape(bd, tmax) * w, axis=-1, keepdims=True)
+    out_ref[0] = scores
+
+
+def sparse_score_batched_kernel(
+    doc_terms: jax.Array,  # i32[B, N, Tmax]
+    doc_weights: jax.Array,  # f32[B, N, Tmax]
+    q_terms: jax.Array,  # i32[B, Lq]
+    q_weights: jax.Array,  # f32[B, Lq]
+    *,
+    block_d: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-query document scores for a whole batch: grid over (query, block).
+
+    Each query scores its OWN doc tile (the DAAT phase-2 chunks differ per
+    query); the tiny (q_terms, q_weights) rows ride along per grid cell, so
+    the batch is one launch — the scoring analogue of
+    ``impact_scatter_batched`` / ``block_topk_batched``. Returns f32[B, N].
+    """
+    b, n, tmax = doc_terms.shape
+    assert n % block_d == 0, (n, block_d)
+    lq = q_terms.shape[-1]
+    grid = (b, n // block_d)
+    out = pl.pallas_call(
+        _score_kernel_batched,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d, tmax), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, block_d, tmax), lambda q, i: (q, i, 0)),
+            pl.BlockSpec((1, 1, lq), lambda q, i: (q, 0, 0)),
+            pl.BlockSpec((1, 1, lq), lambda q, i: (q, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d, 1), lambda q, i: (q, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, 1), jnp.float32),
+        interpret=interpret,
+    )(doc_terms, doc_weights, q_terms.reshape(b, 1, lq), q_weights.reshape(b, 1, lq))
+    return out[:, :, 0]
+
+
 def _score_kernel(dt_ref, dw_ref, qt_ref, qw_ref, out_ref):
     terms = dt_ref[...]  # i32[BD, Tmax]
     w = dw_ref[...].astype(jnp.float32)  # [BD, Tmax]

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import interpret_default, pad_axis
-from repro.kernels.sparse_score.kernel import sparse_score_kernel
+from repro.kernels.sparse_score.kernel import (
+    sparse_score_batched_kernel,
+    sparse_score_kernel,
+)
 
 
 @partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -36,3 +39,32 @@ def sparse_score(
     qw = jnp.where(qt == -2, 0.0, qw)
     scores = sparse_score_kernel(dt, dw, qt, qw, block_d=block_d, interpret=interpret)
     return scores[:n]
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sparse_score_batched(
+    doc_terms: jax.Array,
+    doc_weights: jax.Array,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    block_d: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Per-query scores for ``doc_terms [B, N, Tmax]`` vs queries ``[B, Lq]``.
+
+    One (query, doc-block)-gridded launch — the DAAT phase-2 chunk scorer.
+    Padding mirrors the single-query wrapper: doc rows to the block multiple
+    with sentinel term -1, query slots to the lane width with sentinel -2 and
+    weight forced to 0. f32[B, N].
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n = doc_terms.shape[1]
+    dt = pad_axis(doc_terms.astype(jnp.int32), 1, block_d, fill=-1)
+    dw = pad_axis(doc_weights.astype(jnp.float32), 1, block_d, fill=0.0)
+    qt = pad_axis(q_terms.astype(jnp.int32), 1, 128, fill=-2)
+    qw = pad_axis(q_weights.astype(jnp.float32), 1, 128, fill=0.0)
+    qw = jnp.where(qt == -2, 0.0, qw)
+    scores = sparse_score_batched_kernel(dt, dw, qt, qw, block_d=block_d, interpret=interpret)
+    return scores[:, :n]

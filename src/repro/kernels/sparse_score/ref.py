@@ -15,3 +15,15 @@ def sparse_score_ref(
     eq = doc_terms[:, :, None] == q_terms[None, None, :]
     qv = jnp.sum(jnp.where(eq, q_weights[None, None, :].astype(jnp.float32), 0.0), axis=-1)
     return jnp.sum(qv * doc_weights.astype(jnp.float32), axis=-1)
+
+
+def sparse_score_batched_ref(
+    doc_terms: jax.Array,  # i32[B, N, Tmax]
+    doc_weights: jax.Array,  # f32[B, N, Tmax]
+    q_terms: jax.Array,  # i32[B, Lq]
+    q_weights: jax.Array,  # f32[B, Lq] (0 for padding slots)
+) -> jax.Array:
+    """Batched oracle: each query scores its own doc rows. f32[B, N]."""
+    eq = doc_terms[..., None] == q_terms[:, None, None, :]
+    qv = jnp.sum(jnp.where(eq, q_weights[:, None, None, :].astype(jnp.float32), 0.0), axis=-1)
+    return jnp.sum(qv * doc_weights.astype(jnp.float32), axis=-1)

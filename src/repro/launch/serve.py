@@ -35,7 +35,19 @@ def main() -> None:
     )
     ap.add_argument("--daat-est-blocks", type=int, default=8)
     ap.add_argument("--daat-block-budget", type=int, default=16)
+    ap.add_argument(
+        "--fused-topk", action="store_true",
+        help="SAAT: fuse top-k into the scatter kernel (accumulator never hits HBM)",
+    )
+    ap.add_argument(
+        "--daat-use-kernels", action="store_true",
+        help="DAAT: route phase 2 through the batched Pallas kernels",
+    )
     args = ap.parse_args()
+    if args.fused_topk and args.engine != "saat":
+        ap.error("--fused-topk is a SAAT scatter fusion; use --engine saat")
+    if args.daat_use_kernels and args.engine != "daat":
+        ap.error("--daat-use-kernels selects DAAT kernels; use --engine daat")
     if args.engine == "daat" and (args.deadline_ms is not None or args.rho is not None):
         ap.error("--deadline-ms/--rho are SAAT budgets; the daat engine cannot honor them")
 
@@ -53,7 +65,9 @@ def main() -> None:
         ServingConfig(
             k=args.k, rho_ladder=ladder, batch_size=args.batch,
             deadline_ms=args.deadline_ms, engine=args.engine,
+            fused_topk=args.fused_topk,
             daat_est_blocks=args.daat_est_blocks, daat_block_budget=args.daat_block_budget,
+            daat_use_kernels=args.daat_use_kernels,
         ),
     )
     server.warmup(jnp.asarray(qt[: args.batch]), jnp.asarray(qw[: args.batch]))

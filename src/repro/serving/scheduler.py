@@ -45,6 +45,9 @@ class ServingConfig:
     batch_size: int = 32
     deadline_ms: Optional[float] = None  # None = always use max rho
     scatter_impl: str = "sort"
+    # fuse SAAT's top-k into the scatter kernel (impact_scatter_topk): the
+    # [B, n_docs] accumulator never reaches HBM; scatter_impl is then ignored
+    fused_topk: bool = False
     ema_alpha: float = 0.2  # cost-model smoothing
     # engine selection: "saat" (anytime, rho ladder) or "daat" (block-max
     # pruning; data-dependent cost, no rho control)
@@ -52,6 +55,9 @@ class ServingConfig:
     daat_est_blocks: int = 8
     daat_block_budget: int = 16
     daat_exact: bool = True
+    # route DAAT phase 2 through the batched Pallas kernels (block_prune /
+    # block_topk / sparse_score); False keeps the jnp oracle formulation
+    daat_use_kernels: bool = False
 
 
 @dataclasses.dataclass
@@ -124,6 +130,7 @@ class AnytimeServer:
             block_budget=self.cfg.daat_block_budget,
             max_bm_per_term=self.max_bm,
             exact=self.cfg.daat_exact,
+            use_kernels=self.cfg.daat_use_kernels,
         )
 
     def search_batch(self, q_terms: jax.Array, q_weights: jax.Array, rho: Optional[int] = None):
@@ -150,6 +157,7 @@ class AnytimeServer:
             rho=rho,
             max_segs_per_term=self.max_segs,
             scatter_impl=self.cfg.scatter_impl,
+            fused_topk=self.cfg.fused_topk,
         )
         jax.block_until_ready(res.scores)
         elapsed = (time.perf_counter() - t0) * 1e3
@@ -177,6 +185,7 @@ class AnytimeServer:
                     rho=rho,
                     max_segs_per_term=self.max_segs,
                     scatter_impl=self.cfg.scatter_impl,
+                    fused_topk=self.cfg.fused_topk,
                 )
                 jax.block_until_ready(res.scores)
                 per_query_us = (time.perf_counter() - t0) * 1e6 / q_terms.shape[0]

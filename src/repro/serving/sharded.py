@@ -176,11 +176,13 @@ def make_sharded_serve_step(
     max_segs_per_term: int,
     docs_per_shard: int,
     scatter_impl: str = "sort",
+    fused_topk: bool = False,
     engine: str = "saat",
     daat_est_blocks: int = 8,
     daat_block_budget: int = 16,
     max_bm_per_term: int = 0,
     daat_exact: bool = True,
+    daat_use_kernels: bool = False,
 ):
     """Builds ``serve(index_stack, q_terms, q_weights) -> (scores, ids)``.
 
@@ -198,6 +200,11 @@ def make_sharded_serve_step(
     Per-chip work becomes data-dependent — each rank loops until its own
     local batch is rank-safe — so corpus skew CAN create stragglers, which
     is exactly the contrast with SAAT the paper draws.
+
+    ``fused_topk=True`` makes every rank's SAAT scan emit only its
+    ``[B, blocks * k]`` candidate pool from VMEM (the per-shard accumulator
+    never reaches HBM) before the cross-shard k-merge; ``daat_use_kernels``
+    routes each rank's DAAT phase 2 through the batched Pallas kernels.
     """
     if engine not in ("saat", "daat"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -229,6 +236,7 @@ def make_sharded_serve_step(
                     block_budget=daat_block_budget,
                     max_bm_per_term=max_bm_per_term,
                     exact=daat_exact,
+                    use_kernels=daat_use_kernels,
                 )
             else:
                 res = saat_search(
@@ -239,6 +247,7 @@ def make_sharded_serve_step(
                     rho=rho_per_shard,
                     max_segs_per_term=max_segs_per_term,
                     scatter_impl=scatter_impl,
+                    fused_topk=fused_topk,
                 )
             gids = res.doc_ids + (rank * n_local + j) * docs_per_shard
             if pool_s is None:

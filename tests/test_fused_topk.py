@@ -1,0 +1,335 @@
+"""Cross-engine golden parity for PR 3's two fusions.
+
+SAAT: ``fused_topk=True`` (scatter→top-k fused in one Pallas kernel, only
+``[B, blocks * k]`` candidates ever reach HBM) must be indistinguishable from
+the unfused engine and the ``saat_search_vmap`` oracle — BIT-identical doc
+ids (including ``-inf`` tie order on padded ranks), scores bit-identical to
+the unfused Pallas scatter (same per-block accumulation order) and fp32-close
+to the jnp scatters — across ragged batches, duplicate / zero-weight terms,
+``k > n_docs``, and every rho on the serving ladder.
+
+DAAT: ``use_kernels=True`` (phase 2 through ``block_prune_batched`` +
+``block_topk_batched`` + ``sparse_score_batched``) must match the jnp
+formulation on doc ids AND per-query :class:`WorkStats` exactly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_impact_index,
+    daat_search_batched,
+    exact_rho,
+    exhaustive_search,
+    saat_search,
+    saat_search_vmap,
+)
+from repro.core.daat import max_blocks_per_term
+from repro.core.saat import max_segments_per_term
+
+RHO_LADDER = (100, 500, 2000, "exact", "beyond")
+
+
+def _resolve_rho(index, rho):
+    if rho == "exact":
+        return exact_rho(index)
+    if rho == "beyond":
+        return exact_rho(index) * 2
+    return rho
+
+
+def _assert_fused_saat_parity(index, qt, qw, *, k, rho):
+    """fused == unfused-pallas (bit) == unfused-jnp == vmap oracle (ids)."""
+    ms = max_segments_per_term(index)
+    f = saat_search(index, qt, qw, k=k, rho=rho, max_segs_per_term=ms, fused_topk=True)
+    up = saat_search(index, qt, qw, k=k, rho=rho, max_segs_per_term=ms, scatter_impl="pallas")
+    uj = saat_search(index, qt, qw, k=k, rho=rho, max_segs_per_term=ms, scatter_impl="jnp")
+    v = saat_search_vmap(index, qt, qw, k=k, rho=rho, max_segs_per_term=ms, scatter_impl="jnp")
+    # same accumulation kernel per block -> the fusion is bit-invisible
+    np.testing.assert_array_equal(np.asarray(f.doc_ids), np.asarray(up.doc_ids))
+    np.testing.assert_array_equal(np.asarray(f.scores), np.asarray(up.scores))
+    # jnp scatters reassociate the same sums -> ids exact, scores fp32-close
+    for other in (uj, v):
+        np.testing.assert_array_equal(np.asarray(f.doc_ids), np.asarray(other.doc_ids))
+        np.testing.assert_allclose(
+            np.asarray(f.scores), np.asarray(other.scores), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_array_equal(
+            np.asarray(f.postings_processed), np.asarray(other.postings_processed)
+        )
+    return f
+
+
+def _assert_daat_kernel_parity(index, qt, qw, **kw):
+    """use_kernels=True vs the jnp formulation: ids + WorkStats exact."""
+    kw.setdefault("max_bm_per_term", max_blocks_per_term(index))
+    kj = daat_search_batched(index, qt, qw, use_kernels=False, **kw)
+    kk = daat_search_batched(index, qt, qw, use_kernels=True, **kw)
+    np.testing.assert_array_equal(np.asarray(kj.doc_ids), np.asarray(kk.doc_ids))
+    np.testing.assert_allclose(
+        np.asarray(kj.scores), np.asarray(kk.scores), rtol=1e-5, atol=1e-6
+    )
+    for field in ("n_survivors", "blocks_scored", "chunks", "rank_safe"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(kj.stats, field)),
+            np.asarray(getattr(kk.stats, field)),
+            err_msg=f"WorkStats.{field} diverged between kernel and jnp phase 2",
+        )
+    return kk
+
+
+# --------------------------------------------------------------------------
+# SAAT: fused scatter→top-k
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rho", RHO_LADDER)
+def test_fused_saat_parity_across_rho_ladder(bm25_index, bm25_queries, rho):
+    qt, qw = bm25_queries
+    _assert_fused_saat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, rho=_resolve_rho(bm25_index, rho),
+    )
+
+
+def test_fused_saat_ragged_batch_with_pad_terms(bm25_index, bm25_queries):
+    """Rows with progressively more zero-weight pad terms ride one executable."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:8]), np.array(qw[:8])
+    for i in range(qt.shape[0]):
+        keep = max(1, qt.shape[1] - i)
+        qw[i, keep:] = 0.0
+        qt[i, keep:] = bm25_index.n_terms  # pad slot
+    f = _assert_fused_saat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, rho=2000
+    )
+    totals = np.asarray(f.total_postings)
+    assert totals[-1] <= totals[0]  # shorter queries have fewer candidates
+
+
+def test_fused_saat_duplicate_query_terms(bm25_index, bm25_queries):
+    """Duplicate terms contribute per slot, identically to the unfused path."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:4]), np.array(qw[:4])
+    qt[:, 1] = qt[:, 0]
+    _assert_fused_saat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, rho=1000
+    )
+
+
+def test_fused_saat_all_pad_query_row(bm25_index, bm25_queries):
+    """An all-zero-weight row yields empty results without poisoning others."""
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:4]), np.array(qw[:4])
+    qw[2] = 0.0
+    qt[2] = bm25_index.n_terms
+    f = _assert_fused_saat_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10, rho=1000
+    )
+    assert int(np.asarray(f.total_postings)[2]) == 0
+
+
+def test_fused_saat_k_exceeds_n_docs():
+    """k past the corpus clamps and pads with -inf ranks, exactly as unfused."""
+    rng = np.random.default_rng(5)
+    n_docs, n_terms = 50, 30
+    d = rng.integers(0, n_docs, 400)
+    t = rng.integers(0, n_terms, 400)
+    w = rng.gamma(2.0, 1.0, 400)
+    idx = build_impact_index(d, t, w, n_docs, n_terms)
+    qt = jnp.asarray(rng.integers(0, n_terms, (3, 4)).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (3, 4)).astype(np.float32))
+    f = _assert_fused_saat_parity(idx, qt, qw, k=n_docs + 10, rho=exact_rho(idx))
+    # padded ranks hold -inf, never fabricated scores
+    assert bool(np.isneginf(np.asarray(f.scores)[:, n_docs:]).all())
+
+
+def test_fused_saat_batch_of_one(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    _assert_fused_saat_parity(
+        bm25_index, jnp.asarray(qt[:1]), jnp.asarray(qw[:1]), k=5, rho=300
+    )
+
+
+def test_fused_saat_exact_rho_matches_exhaustive(bm25_index, bm25_queries):
+    """The fused path at a rank-safe rho is exact end to end."""
+    qt, qw = bm25_queries
+    qt, qw = jnp.asarray(qt), jnp.asarray(qw)
+    f = saat_search(
+        bm25_index, qt, qw, k=10, rho=exact_rho(bm25_index),
+        max_segs_per_term=max_segments_per_term(bm25_index), fused_topk=True,
+    )
+    ex = exhaustive_search(bm25_index, qt, qw, k=10)
+    np.testing.assert_allclose(
+        np.asarray(f.scores), np.asarray(ex.scores), rtol=1e-3, atol=1e-3
+    )
+
+
+# --------------------------------------------------------------------------
+# DAAT: kernel-backed phase 2
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exact", [True, False])
+def test_daat_kernels_match_jnp(bm25_index, bm25_queries, exact):
+    qt, qw = bm25_queries
+    _assert_daat_kernel_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=2, exact=exact,
+    )
+
+
+def test_daat_kernels_ragged_batch(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:8]), np.array(qw[:8])
+    for i in range(qt.shape[0]):
+        keep = max(1, qt.shape[1] - i)
+        qw[i, keep:] = 0.0
+        qt[i, keep:] = bm25_index.n_terms
+    _assert_daat_kernel_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=1, exact=True,
+    )
+
+
+def test_daat_kernels_duplicate_and_zero_weight_terms(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    qt, qw = np.array(qt[:4]), np.array(qw[:4])
+    qt[:, 1] = qt[:, 0]  # duplicate the heaviest term
+    qw[:, 2] = 0.0  # and kill one real term
+    _assert_daat_kernel_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=2, block_budget=2, exact=True,
+    )
+
+
+def test_daat_kernels_k_exceeds_n_docs():
+    rng = np.random.default_rng(5)
+    n_docs, n_terms = 50, 30
+    d = rng.integers(0, n_docs, 400)
+    t = rng.integers(0, n_terms, 400)
+    w = rng.gamma(2.0, 1.0, 400)
+    idx = build_impact_index(d, t, w, n_docs, n_terms)
+    qt = jnp.asarray(rng.integers(0, n_terms, (3, 4)).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (3, 4)).astype(np.float32))
+    b = _assert_daat_kernel_parity(
+        idx, qt, qw, k=n_docs + 10, est_blocks=idx.n_blocks, block_budget=1, exact=True,
+    )
+    assert bool(np.isneginf(np.asarray(b.scores)[:, n_docs:]).all())
+
+
+def test_daat_kernels_max_chunks_cap(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    b = _assert_daat_kernel_parity(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        k=10, est_blocks=1, block_budget=1, exact=True, max_chunks=1,
+    )
+    assert int(np.asarray(b.chunks).max()) <= 1
+
+
+def test_daat_kernels_batch_of_one(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    _assert_daat_kernel_parity(
+        bm25_index, jnp.asarray(qt[:1]), jnp.asarray(qw[:1]),
+        k=5, est_blocks=1, block_budget=1, exact=True,
+    )
+
+
+# --------------------------------------------------------------------------
+# serving integration: the flags must be end-to-end invisible in results
+# --------------------------------------------------------------------------
+
+
+def test_server_fused_topk_matches_exhaustive(bm25_index, bm25_queries):
+    from repro.serving import AnytimeServer, ServingConfig, run_query_stream
+
+    qt, qw = bm25_queries
+    srv = AnytimeServer(
+        bm25_index,
+        ServingConfig(k=10, rho_ladder=(10**9,), batch_size=8, fused_topk=True),
+    )
+    scores, ids = run_query_stream(srv, qt, qw)
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(scores, np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+
+
+def test_server_daat_kernels_matches_exhaustive(bm25_index, bm25_queries):
+    from repro.serving import AnytimeServer, ServingConfig, run_query_stream
+
+    qt, qw = bm25_queries
+    srv = AnytimeServer(
+        bm25_index,
+        ServingConfig(
+            k=10, batch_size=8, engine="daat",
+            daat_est_blocks=2, daat_block_budget=2, daat_use_kernels=True,
+        ),
+    )
+    scores, ids = run_query_stream(srv, qt, qw)
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(scores, np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_sharded_fused_topk_matches_exhaustive(
+    tiny_corpus, bm25_collection, bm25_index, bm25_queries, n_shards
+):
+    """Per-shard fused scatter→top-k + id globalization + k-merge == oracle."""
+    import jax
+
+    from repro.serving import make_sharded_serve_step, shard_corpus, stack_indexes
+
+    enc = bm25_collection
+    qt, qw = bm25_queries
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards, dps = shard_corpus(
+        enc.doc_idx, enc.term_idx, enc.weights, tiny_corpus.n_docs, enc.n_terms, n_shards
+    )
+    stacked = stack_indexes(shards)
+    serve, _, _ = make_sharded_serve_step(
+        mesh,
+        k=10,
+        rho_per_shard=max(s.n_postings for s in shards),
+        max_segs_per_term=max(int(s.max_segs) for s in shards),
+        docs_per_shard=dps,
+        fused_topk=True,
+    )
+    with mesh:
+        ss, si = serve(stacked, jnp.asarray(qt), jnp.asarray(qw))
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+    assert (np.asarray(si) == np.asarray(ex.doc_ids)).mean() > 0.95  # ties may permute
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_sharded_daat_kernels_matches_exhaustive(
+    tiny_corpus, bm25_collection, bm25_index, bm25_queries, n_shards
+):
+    """Per-shard kernel-backed DAAT phase 2 under shard_map == oracle."""
+    import jax
+
+    from repro.serving import make_sharded_serve_step, shard_corpus, stack_indexes
+
+    enc = bm25_collection
+    qt, qw = bm25_queries
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards, dps = shard_corpus(
+        enc.doc_idx, enc.term_idx, enc.weights, tiny_corpus.n_docs, enc.n_terms, n_shards
+    )
+    stacked = stack_indexes(shards)
+    serve, _, _ = make_sharded_serve_step(
+        mesh,
+        k=10,
+        rho_per_shard=0,  # unused by the daat engine
+        max_segs_per_term=0,
+        docs_per_shard=dps,
+        engine="daat",
+        daat_est_blocks=2,
+        daat_block_budget=2,
+        max_bm_per_term=stacked.max_bm,
+        daat_use_kernels=True,
+    )
+    with mesh:
+        ss, si = serve(stacked, jnp.asarray(qt), jnp.asarray(qw))
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+    assert (np.asarray(si) == np.asarray(ex.doc_ids)).mean() > 0.8

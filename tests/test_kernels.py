@@ -1,4 +1,9 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle.
+
+The whole module carries the ``kernels`` marker so CI can run the
+interpret-mode sweeps as a standalone matrix entry — a kernel regression
+fails in an attributable job instead of somewhere inside the full tier-1 run.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,8 +15,18 @@ from repro.kernels.block_topk.ops import block_topk, block_topk_batched
 from repro.kernels.block_topk.ref import block_topk_batched_ref, block_topk_ref
 from repro.kernels.impact_scatter.ops import impact_scatter, impact_scatter_batched
 from repro.kernels.impact_scatter.ref import impact_scatter_batched_ref, impact_scatter_ref
-from repro.kernels.sparse_score.ops import sparse_score
-from repro.kernels.sparse_score.ref import sparse_score_ref
+from repro.kernels.impact_scatter_topk.ops import (
+    impact_scatter_topk,
+    impact_scatter_topk_batched,
+)
+from repro.kernels.impact_scatter_topk.ref import (
+    impact_scatter_topk_batched_ref,
+    impact_scatter_topk_ref,
+)
+from repro.kernels.sparse_score.ops import sparse_score, sparse_score_batched
+from repro.kernels.sparse_score.ref import sparse_score_batched_ref, sparse_score_ref
+
+pytestmark = pytest.mark.kernels
 
 
 @pytest.mark.parametrize("n_postings", [128, 1000, 4096])
@@ -79,6 +94,147 @@ def test_impact_scatter_batched_rows_independent():
     got = impact_scatter_batched(docs, contribs, D, block_d=256, tile_p=128, interpret=True)
     assert float(jnp.abs(got[0]).max()) == 0.0 and float(jnp.abs(got[2]).max()) == 0.0
     assert float(got[1, 0]) == float(P)
+
+
+# ---------------------------------------------------------------------------
+# impact_scatter_topk: fused scatter → per-block top-k
+# ---------------------------------------------------------------------------
+
+
+def _fused_parity(docs, contribs, n_docs, k, *, n_live=None, block_d=256, tile_p=128):
+    """Fused op (interpret) vs the dense scatter+mask+topk oracle."""
+    n_live = n_docs if n_live is None else n_live
+    if docs.ndim == 1:
+        got = impact_scatter_topk(
+            docs, contribs, n_docs, k, n_live=n_live,
+            block_d=block_d, tile_p=tile_p, interpret=True,
+        )
+        want = impact_scatter_topk_ref(docs, contribs, n_docs, n_live, k)
+    else:
+        got = impact_scatter_topk_batched(
+            docs, contribs, n_docs, k, n_live=n_live,
+            block_d=block_d, tile_p=tile_p, interpret=True,
+        )
+        want = impact_scatter_topk_batched_ref(docs, contribs, n_docs, n_live, k)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-5, atol=1e-5)
+    return got
+
+
+@pytest.mark.parametrize("n_postings", [128, 1000, 4096])
+@pytest.mark.parametrize("n_docs", [512, 1000])
+@pytest.mark.parametrize("k", [1, 10, 300])
+def test_impact_scatter_topk_sweep(n_postings, n_docs, k):
+    rng = np.random.default_rng(n_postings + n_docs + k)
+    docs = jnp.asarray(rng.integers(0, n_docs, n_postings), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, n_postings), jnp.float32)
+    _fused_parity(docs, contribs, n_docs, k)
+
+
+@pytest.mark.parametrize("batch", [1, 3, 8])
+@pytest.mark.parametrize("sort_by_doc", [True, False])
+def test_impact_scatter_topk_batched_sweep(batch, sort_by_doc):
+    """Non-divisible n_docs/tile_p shapes, with and without skip ranges."""
+    n_docs, n_postings = 700, 1000  # 700 % 256 != 0, 1000 % 128 != 0
+    rng = np.random.default_rng(batch * 1000)
+    docs = jnp.asarray(rng.integers(0, n_docs, (batch, n_postings)), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, (batch, n_postings)), jnp.float32)
+    got = impact_scatter_topk_batched(
+        docs, contribs, n_docs, 13, block_d=256, tile_p=128,
+        sort_by_doc=sort_by_doc, interpret=True,
+    )
+    want = impact_scatter_topk_batched_ref(docs, contribs, n_docs, n_docs, 13)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-5, atol=1e-5)
+
+
+def test_impact_scatter_topk_all_postings_one_doc():
+    """Degenerate hot doc: every posting lands on doc 7 of one block."""
+    P, D = 512, 640
+    docs = jnp.full((P,), 7, jnp.int32)
+    contribs = jnp.asarray(np.random.default_rng(0).gamma(2.0, 1.0, P), jnp.float32)
+    s, i = _fused_parity(docs, contribs, D, 5)
+    assert int(np.asarray(i)[0]) == 7
+    np.testing.assert_allclose(float(np.asarray(s)[0]), float(contribs.sum()), rtol=1e-5)
+
+
+def test_impact_scatter_topk_all_zero_contribs():
+    """All-zero contributions: ties resolve to ascending doc ids, scores 0."""
+    docs = jnp.asarray(np.random.default_rng(1).integers(0, 500, 256), jnp.int32)
+    contribs = jnp.zeros((256,), jnp.float32)
+    s, i = _fused_parity(docs, contribs, 500, 8)
+    np.testing.assert_allclose(np.asarray(s), 0.0)
+    np.testing.assert_array_equal(np.asarray(i), np.arange(8))
+
+
+def test_impact_scatter_topk_k_exceeds_block_survivors():
+    """k larger than a block's surviving (live) candidates: -inf fill ranks.
+
+    n_live=40 leaves one partial block of live docs; k=64 must surface all 40
+    live docs then ascending masked ids, bit-identical to the dense oracle.
+    """
+    rng = np.random.default_rng(2)
+    docs = jnp.asarray(rng.integers(0, 40, 256), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, 256), jnp.float32)
+    s, i = _fused_parity(docs, contribs, 512, 64, n_live=40)
+    assert bool(np.isfinite(np.asarray(s)[:40]).all())
+    assert bool(np.isneginf(np.asarray(s)[40:]).all())
+
+
+def test_impact_scatter_topk_batch_of_one():
+    rng = np.random.default_rng(3)
+    docs = jnp.asarray(rng.integers(0, 300, (1, 384)), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, (1, 384)), jnp.float32)
+    got = _fused_parity(docs, contribs, 300, 9)
+    assert got[0].shape == (1, 9)
+
+
+def test_impact_scatter_topk_batched_matches_per_query_kernel():
+    """Batched kernel rows == the single-query fused kernel run row by row."""
+    rng = np.random.default_rng(7)
+    B, P, D = 4, 512, 600
+    docs = jnp.asarray(rng.integers(0, D, (B, P)), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, (B, P)), jnp.float32)
+    gs, gi = impact_scatter_topk_batched(
+        docs, contribs, D, 11, block_d=256, tile_p=128, interpret=True
+    )
+    for b in range(B):
+        rs, ri = impact_scatter_topk(
+            docs[b], contribs[b], D, 11, block_d=256, tile_p=128, interpret=True
+        )
+        np.testing.assert_array_equal(np.asarray(gi[b]), np.asarray(ri))
+        np.testing.assert_allclose(np.asarray(gs[b]), np.asarray(rs), rtol=1e-5, atol=1e-5)
+
+
+def test_impact_scatter_topk_matches_unfused_pallas_bitwise():
+    """Same accumulation kernel -> fused scores are BIT-equal to unfused."""
+    rng = np.random.default_rng(11)
+    docs = jnp.asarray(rng.integers(0, 700, (2, 512)), jnp.int32)
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, (2, 512)), jnp.float32)
+    acc = impact_scatter_batched(docs, contribs, 700, block_d=256, tile_p=128, interpret=True)
+    ds, di = jax.lax.top_k(acc, 15)
+    fs, fi = impact_scatter_topk_batched(
+        docs, contribs, 700, 15, block_d=256, tile_p=128, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(fs), np.asarray(ds))
+
+
+def test_impact_scatter_topk_single_query_bitwise_with_duplicate_docs():
+    """Fused and unfused single-query wrappers share ONE sort primitive
+    (``sorted_posting_tiles``), so heavy doc-id duplication — where an
+    unstable vs stable sort would permute equal-key payloads and reorder the
+    f32 accumulation — still yields BIT-equal scores."""
+    rng = np.random.default_rng(17)
+    docs = jnp.asarray(rng.integers(0, 10, 512), jnp.int32)  # ~51 postings/doc
+    contribs = jnp.asarray(rng.gamma(2.0, 1.0, 512), jnp.float32)
+    acc = impact_scatter(docs, contribs, 300, block_d=256, tile_p=128, interpret=True)
+    ds, di = jax.lax.top_k(acc, 12)
+    fs, fi = impact_scatter_topk(
+        docs, contribs, 300, 12, block_d=256, tile_p=128, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(fs), np.asarray(ds))
 
 
 @pytest.mark.parametrize("n,k,tile", [(1000, 10, 256), (8192, 100, 1024), (100, 100, 128), (5000, 7, 512)])
@@ -222,3 +378,41 @@ def test_sparse_score_duplicate_query_terms():
     want = sparse_score_ref(dt, dw, qt, qw)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
     np.testing.assert_allclose(np.asarray(got), [3.0])
+
+
+@pytest.mark.parametrize("batch,n,tmax,lq", [(1, 100, 16, 8), (3, 130, 7, 3), (4, 512, 64, 32)])
+def test_sparse_score_batched_sweep(batch, n, tmax, lq):
+    """Each query scores its own doc rows; non-divisible doc counts pad."""
+    rng = np.random.default_rng(batch + n + tmax + lq)
+    V = 500
+    dt = jnp.asarray(rng.integers(0, V, (batch, n, tmax)), jnp.int32)
+    dw = jnp.asarray(rng.gamma(1.0, 1.0, (batch, n, tmax)), jnp.float32)
+    qt = jnp.asarray(rng.integers(0, V, (batch, lq)), jnp.int32)
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (batch, lq)), jnp.float32)
+    got = sparse_score_batched(dt, dw, qt, qw, block_d=128, interpret=True)
+    want = sparse_score_batched_ref(dt, dw, qt, qw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_score_batched_matches_per_query_kernel():
+    rng = np.random.default_rng(13)
+    B, n, tmax, lq = 3, 200, 9, 5
+    dt = jnp.asarray(rng.integers(0, 300, (B, n, tmax)), jnp.int32)
+    dw = jnp.asarray(rng.gamma(1.0, 1.0, (B, n, tmax)), jnp.float32)
+    qt = jnp.asarray(rng.integers(0, 300, (B, lq)), jnp.int32)
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (B, lq)), jnp.float32)
+    got = sparse_score_batched(dt, dw, qt, qw, block_d=64, interpret=True)
+    for b in range(B):
+        row = sparse_score(dt[b], dw[b], qt[b], qw[b], block_d=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(row), rtol=1e-5, atol=1e-5)
+
+
+def test_sparse_score_batched_rows_independent():
+    """Query b must never score with query c's weights."""
+    dt = jnp.asarray(np.full((2, 64, 2), 3), jnp.int32)
+    dw = jnp.asarray(np.ones((2, 64, 2)), jnp.float32)
+    qt = jnp.asarray([[3, 4], [9, 9]], jnp.int32)  # row 1 matches nothing
+    qw = jnp.asarray([[1.0, 1.0], [1.0, 1.0]], jnp.float32)
+    got = np.asarray(sparse_score_batched(dt, dw, qt, qw, block_d=64, interpret=True))
+    np.testing.assert_allclose(got[0], 2.0)  # two slots of term 3, weight 1 each
+    np.testing.assert_allclose(got[1], 0.0)

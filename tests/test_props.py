@@ -193,6 +193,54 @@ def test_daat_rank_safe_monotone_in_est_blocks(seed, scale):
 
 
 @_settings
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 400),
+    st.integers(1, 64),
+    st.integers(1, 16),
+)
+def test_block_candidate_topk_equals_global_topk(seed, n, k, num_tiles):
+    """Rank-safety of the fused selection: per-block (tile) candidate pools
+    merged with ``tiled_topk`` equal global ``lax.top_k`` — scores AND tie
+    order — whenever k <= the per-block candidate count (which ``tiled_topk``
+    guarantees by clamping k to the tile size: clamped tiles survive whole).
+    Covers ragged n (auto-padded with NEG_INF) and k > n (clamped like topk).
+    """
+    from repro.core.topk import tiled_topk
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    x[rng.random(n) < 0.2] = -np.inf  # masked docs: exercise -inf tie order
+    ts, ti = tiled_topk(jnp.asarray(x), k, num_tiles)
+    gs, gi = jax.lax.top_k(jnp.asarray(x), min(k, n))
+    np.testing.assert_array_equal(np.asarray(ts), np.asarray(gs))
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(gi))
+    assert (np.asarray(ti) < n).all()  # pad slots never surface
+
+
+@_settings
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_fused_saat_rank_safe_rho_equals_exhaustive(seed, scale):
+    """Fused scatter→top-k SAAT at a rank-safe rho == exhaustive scoring."""
+    from repro.core import exact_rho, exhaustive_search, saat_search
+    from repro.core.saat import max_segments_per_term
+
+    idx, rng = _random_wacky_index(seed, scale)
+    B, n_q = 2, min(4, idx.n_terms)
+    qt = jnp.asarray(rng.integers(0, idx.n_terms, (B, n_q)).astype(np.int32))
+    qw = jnp.asarray(rng.gamma(1.0, 1.0, (B, n_q)).astype(np.float32))
+    k = 5
+    f = saat_search(
+        idx, qt, qw, k=k, rho=exact_rho(idx),
+        max_segs_per_term=max_segments_per_term(idx), fused_topk=True,
+    )
+    ex = exhaustive_search(idx, qt, qw, k=k)
+    np.testing.assert_allclose(
+        np.asarray(f.scores), np.asarray(ex.scores), rtol=1e-4, atol=1e-4
+    )
+
+
+@_settings
 @given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
 def test_saat_plan_contribution_order(seed, scale):
     """Plans always process segments in non-increasing contribution order."""
