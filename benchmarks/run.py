@@ -16,6 +16,7 @@ def main() -> None:
         roofline,
         side_batched_vs_vmap,
         side_blockmax_vs_exhaustive,
+        side_bucketed_vs_padded,
         side_daat_vs_saat_batched,
         side_fused_vs_unfused,
         table1_models_systems,
@@ -32,6 +33,7 @@ def main() -> None:
         ("side_batched_vs_vmap", side_batched_vs_vmap.main),
         ("side_daat_vs_saat_batched", side_daat_vs_saat_batched.main),
         ("side_fused_vs_unfused", side_fused_vs_unfused.main),
+        ("side_bucketed_vs_padded", side_bucketed_vs_padded.main),
         ("roofline", roofline.main),
     ]
     t_all = time.time()

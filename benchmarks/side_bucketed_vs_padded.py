@@ -1,0 +1,129 @@
+"""Side experiment: Lq-bucketed vs max-Lq-padded serving.
+
+Both engines pad a ``[B, Lq]`` batch to one width and run one executable, so
+a stream whose longest query has 40 terms makes a 4-term query pay a 10x
+wider plan sort + posting gather. ``ServingConfig.lq_buckets`` pads each
+batch only to the smallest bucket covering its live terms instead.
+
+This bench serves three traffic mixes at B in {8, 32}:
+
+  * ``short``  — every request truncated to 4 live terms: bucketing should
+    win by roughly the width ratio on the plan/gather stages;
+  * ``long``   — full-width requests: bucketing must cost ~nothing (same
+    executable as the padded baseline);
+  * ``mixed``  — short and long requests interleaved *in one batch*: the
+    batch's widest member drags everyone to the wide bucket, so bucketing
+    alone barely helps — this is exactly the traffic the admission queue
+    (``repro.serving.queue``) fixes by partitioning requests into per-bucket
+    lanes before batching.
+
+Doc-id parity between the two servers is asserted on every batch BEFORE any
+timing (bucketing is bit-identity-preserving; see tests/test_queue.py for
+the score-level property). CPU wall times are relative, as everywhere in
+benchmarks/ — the faithful signal is the bucketed/padded ratio per mix.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.serving import AnytimeServer, ServingConfig
+from repro.serving.bucketing import pad_to_width
+
+K = 100
+MODELS = ("bm25", "spladev2")
+BATCH_SIZES = (8, 32)
+MIXES = ("short", "long", "mixed")
+SHORT_W = 4
+N_BATCHES = 4
+REPEATS = 5
+
+
+def _batches(qt: np.ndarray, qw: np.ndarray, B: int, mix: str):
+    """Deterministic request batches for one traffic mix (host arrays)."""
+    L = qt.shape[1]
+    out = []
+    for i in range(N_BATCHES):
+        rows = (np.arange(B) + i * B) % qt.shape[0]
+        bt, bw = qt[rows], qw[rows]
+        if mix == "short":
+            bt, bw = bt[:, :SHORT_W], bw[:, :SHORT_W]
+        elif mix == "mixed":
+            # half the batch truncated short, half full width: the wide half
+            # drags the whole batch to the wide bucket
+            bt = bt.copy()
+            bw = bw.copy()
+            half = B // 2
+            bw[:half, SHORT_W:] = 0.0  # zero weight = dead slot in both engines
+        out.append((np.ascontiguousarray(bt), np.ascontiguousarray(bw)))
+    return out
+
+
+def _per_query_samples(server: AnytimeServer, batches, rho: int) -> np.ndarray:
+    for bt, bw in batches:  # compile every shape first
+        server.search_batch(jnp.asarray(bt), jnp.asarray(bw), rho=rho)
+    samples = []
+    for _ in range(REPEATS):
+        for bt, bw in batches:
+            t0 = time.perf_counter()
+            res = server.search_batch(jnp.asarray(bt), jnp.asarray(bw), rho=rho)
+            jax.block_until_ready(res.scores)
+            samples.append((time.perf_counter() - t0) * 1e3 / bt.shape[0])
+    return np.asarray(samples)
+
+
+def run() -> list[dict]:
+    rows = []
+    for model in MODELS:
+        index = C.index_for(model)
+        qt, qw = C.queries_for(model)
+        qt, qw = np.asarray(qt), np.asarray(qw)
+        L = qt.shape[1]
+        buckets = tuple(sorted({SHORT_W, max(2 * SHORT_W, SHORT_W + 1), L}))
+        padded = AnytimeServer(index, ServingConfig(k=K, rho_ladder=(20_000,)))
+        bucketed = AnytimeServer(
+            index, ServingConfig(k=K, rho_ladder=(20_000,), lq_buckets=buckets)
+        )
+        rho = padded.rho_ladder[0]
+        for B in BATCH_SIZES:
+            for mix in MIXES:
+                batches = _batches(qt, qw, B, mix)
+                # ---- id parity BEFORE timing: bucketing must be invisible
+                for bt, bw in batches:
+                    pt, pw = pad_to_width(bt, bw, L, index.n_terms)
+                    r_pad = padded.search_batch(jnp.asarray(pt), jnp.asarray(pw), rho=rho)
+                    r_buk = bucketed.search_batch(jnp.asarray(bt), jnp.asarray(bw), rho=rho)
+                    assert np.array_equal(
+                        np.asarray(r_pad.doc_ids), np.asarray(r_buk.doc_ids)
+                    ), f"bucketed ids diverged ({model}, B={B}, mix={mix})"
+                padded_batches = [pad_to_width(bt, bw, L, index.n_terms) for bt, bw in batches]
+                s_pad = _per_query_samples(padded, padded_batches, rho)
+                s_buk = _per_query_samples(bucketed, batches, rho)
+                rows.append(
+                    {
+                        "model": model,
+                        "B": B,
+                        "mix": mix,
+                        "max_lq": L,
+                        "buckets": "/".join(map(str, buckets)),
+                        "padded_mean_ms": round(float(s_pad.mean()), 3),
+                        "padded_p99_ms": round(float(np.percentile(s_pad, 99)), 3),
+                        "bucketed_mean_ms": round(float(s_buk.mean()), 3),
+                        "bucketed_p99_ms": round(float(np.percentile(s_buk, 99)), 3),
+                        "speedup_mean": round(float(s_pad.mean() / s_buk.mean()), 2),
+                    }
+                )
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    C.print_csv("side: Lq-bucketed vs max-Lq-padded serving (id parity asserted)", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,16 @@ End-to-end anytime retrieval: synthetic corpus -> retrieval-model treatment
 -> impact index -> batched SAAT serving with the deadline->rho controller.
 Prints effectiveness (RR@10) + the full latency distribution (tail latency is
 the paper's headline serving metric).
+
+``--queue`` switches from pre-formed batches to arrival-driven serving: a
+seeded Poisson request stream (``--arrival-qps``) flows through the
+continuous-batching ``AdmissionQueue`` on a ``HybridClock`` (scripted
+arrivals + real measured service times), and the report adds queue-wait
+percentiles, per-bucket flush counts, and the deadline-policy violation
+count — which is falsifiable here, since service time genuinely consumes
+deadline budget. ``--lq-buckets`` turns on Lq-bucketed executables in
+either mode. (The fully deterministic SimulatedClock variant of this loop
+lives in tests/test_queue.py.)
 """
 from __future__ import annotations
 
@@ -16,8 +26,17 @@ import numpy as np
 from repro.core import build_impact_index, pad_queries
 from repro.data.synthetic import CorpusConfig, generate_corpus
 from repro.metrics.ir_metrics import mrr_at_k
+from repro.metrics.latency import HybridClock, summarize_latencies
 from repro.models.treatments import MODEL_NAMES, apply_treatment
 from repro.serving import AnytimeServer, ServingConfig, run_query_stream
+from repro.serving.queue import AdmissionQueue, replay_arrivals
+
+
+def _csv_ints(text: str) -> tuple[int, ...]:
+    try:
+        return tuple(int(x) for x in text.split(",") if x.strip())
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(f"expected comma-separated ints, got {text!r}") from e
 
 
 def main() -> None:
@@ -43,7 +62,33 @@ def main() -> None:
         "--daat-use-kernels", action="store_true",
         help="DAAT: route phase 2 through the batched Pallas kernels",
     )
+    ap.add_argument(
+        "--lq-buckets", type=_csv_ints, default=None, metavar="W1,W2,...",
+        help="Lq bucket widths: pad each batch to the smallest covering "
+        "bucket (one executable per (config, bucket); bit-identical results)",
+    )
+    ap.add_argument(
+        "--queue", action="store_true",
+        help="serve a Poisson arrival stream through the continuous-batching "
+        "AdmissionQueue (scripted arrivals, real measured service times)",
+    )
+    ap.add_argument("--arrival-qps", type=float, default=2000.0, help="Poisson arrival rate")
+    ap.add_argument(
+        "--request-deadline-ms", type=float, default=25.0,
+        help="per-request completion deadline for the admission queue",
+    )
+    ap.add_argument(
+        "--queue-shapes", type=_csv_ints, default=(8, 32), metavar="B1,B2,...",
+        help="allowed flush batch shapes for the admission queue",
+    )
+    ap.add_argument(
+        "--queue-safety-ms", type=float, default=2.0,
+        help="flush headroom before each due instant (absorbs host dispatch cost)",
+    )
+    ap.add_argument("--seed", type=int, default=0, help="arrival-schedule RNG seed")
     args = ap.parse_args()
+    if args.queue and args.lq_buckets is None:
+        ap.error("--queue needs --lq-buckets (the queue coalesces onto the bucket grid)")
     if args.fused_topk and args.engine != "saat":
         ap.error("--fused-topk is a SAAT scatter fusion; use --engine saat")
     if args.daat_use_kernels and args.engine != "daat":
@@ -60,16 +105,18 @@ def main() -> None:
     qt, qw = pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)
 
     ladder = (args.rho,) if args.rho else (100_000, 500_000, 1_000_000, 5_000_000)
-    server = AnytimeServer(
-        index,
-        ServingConfig(
-            k=args.k, rho_ladder=ladder, batch_size=args.batch,
-            deadline_ms=args.deadline_ms, engine=args.engine,
-            fused_topk=args.fused_topk,
-            daat_est_blocks=args.daat_est_blocks, daat_block_budget=args.daat_block_budget,
-            daat_use_kernels=args.daat_use_kernels,
-        ),
+    cfg = ServingConfig(
+        k=args.k, rho_ladder=ladder, batch_size=args.batch,
+        deadline_ms=args.deadline_ms, engine=args.engine,
+        fused_topk=args.fused_topk,
+        daat_est_blocks=args.daat_est_blocks, daat_block_budget=args.daat_block_budget,
+        daat_use_kernels=args.daat_use_kernels,
+        lq_buckets=args.lq_buckets,
     )
+    if args.queue:
+        _serve_queue(args, corpus, index, enc, cfg, qt, qw)
+        return
+    server = AnytimeServer(index, cfg)
     server.warmup(jnp.asarray(qt[: args.batch]), jnp.asarray(qw[: args.batch]))
     server.reset_stats()
     scores, ids = run_query_stream(server, qt, qw)
@@ -83,6 +130,71 @@ def main() -> None:
                 "rr@10": round(mrr_at_k(ids, corpus.qrels, 10), 4),
                 "latency": {k: round(v, 3) for k, v in stats.row().items()},
                 "tail_ratio_p99_p50": round(stats.tail_ratio, 2),
+            },
+            indent=1,
+        )
+    )
+
+
+def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
+    """Arrival-driven serving: scripted Poisson arrivals, real service times.
+
+    The HybridClock accrues measured wall time between events, so the cost
+    model calibrates on real service cost and the reported
+    deadline_policy_violations count is falsifiable (a slow flush really
+    shows up); arrivals follow the seeded schedule, so the *load shape* is
+    reproducible even though wall times are not.
+    """
+    clock = HybridClock()
+    server = AnytimeServer(index, cfg, clock=clock)
+    server.warmup(
+        jnp.asarray(qt[: min(8, qt.shape[0])]),
+        jnp.asarray(qw[: min(8, qw.shape[0])]),
+        batch_sizes=args.queue_shapes,
+    )
+    server.reset_stats()
+    queue = AdmissionQueue(
+        server,
+        batch_shapes=args.queue_shapes,
+        clock=clock,
+        safety_ms=args.queue_safety_ms,
+    )
+    rng = np.random.default_rng(args.seed)
+    n = args.queries
+    gaps = rng.exponential(1.0 / args.arrival_qps, size=n)
+    arrivals = np.cumsum(gaps)
+    order = rng.integers(0, qt.shape[0], size=n)
+    completions = replay_arrivals(
+        queue,
+        arrivals.tolist(),
+        [qt[i] for i in order],
+        [qw[i] for i in order],
+        [args.request_deadline_ms] * n,
+    )
+    waits = summarize_latencies([c.wait_ms for c in completions])
+    by_rid = sorted(completions, key=lambda c: c.rid)
+    ids = np.stack([c.doc_ids for c in by_rid])
+    qrels = np.asarray(corpus.qrels)[order]
+    flush_counts: dict = {}
+    for f in queue.flush_log:
+        key = f"b{f.bucket}xB{f.batch_shape}"
+        flush_counts[key] = flush_counts.get(key, 0) + 1
+    print(
+        json.dumps(
+            {
+                "model": args.model,
+                "mode": "admission-queue",
+                "requests": n,
+                "completed": queue.n_completed,
+                "deadline_policy_violations": queue.n_violations,
+                "infeasible_on_arrival": queue.n_infeasible,
+                "rr@10": round(mrr_at_k(ids, qrels, 10), 4),
+                "queue_wait_ms": {k: round(v, 3) for k, v in waits.row().items()},
+                "flushes": dict(sorted(flush_counts.items())),
+                "flush_reasons": {
+                    r: sum(1 for f in queue.flush_log if f.reason == r)
+                    for r in ("full", "deadline", "drain")
+                },
             },
             indent=1,
         )

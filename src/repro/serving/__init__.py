@@ -1,7 +1,22 @@
-"""Anytime serving: deadline->rho control, batched streams, doc sharding."""
+"""Anytime serving: deadline->rho control, batched streams, doc sharding,
+Lq-bucketed executables, and the continuous-batching admission queue."""
+from repro.serving.bucketing import (  # noqa: F401
+    bucket_for,
+    bucketize_batch,
+    effective_lq,
+    normalize_buckets,
+    pad_to_width,
+)
+from repro.serving.queue import (  # noqa: F401
+    AdmissionQueue,
+    Completion,
+    FlushRecord,
+    SurvivorPredictor,
+)
 from repro.serving.scheduler import AnytimeServer, ServingConfig, run_query_stream  # noqa: F401
 from repro.serving.sharded import (  # noqa: F401
     abstract_stacked_index,
+    make_bucketed_serve_step,
     make_sharded_serve_step,
     shard_corpus,
     stack_indexes,

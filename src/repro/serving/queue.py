@@ -1,0 +1,401 @@
+"""Continuous-batching admission queue over the anytime server.
+
+The paper's latency story is about *arrival-driven* traffic: SAAT's rho
+budget makes per-query cost predictable while DAAT's tail is data-dependent.
+``run_query_stream`` serves fixed pre-formed batches, which never exercises
+that story. This module adds the missing serving front end: an
+:class:`AdmissionQueue` accepts ``(q_terms, q_weights, deadline)`` requests
+one at a time, coalesces them into the pre-compiled ``(B, Lq-bucket)``
+executable grid of an :class:`~repro.serving.scheduler.AnytimeServer`, and
+flushes a batch when it fills — or when waiting any longer would make the
+oldest request miss its deadline given the cost model's predicted service
+time.
+
+Coalescing policy
+-----------------
+  * Requests are partitioned by **Lq bucket** (``repro.serving.bucketing``):
+    a short query never pays a long query's gather cost, and every flush
+    lands on a pre-compiled ``(B, bucket)`` shape (pad-to-shape is free by
+    construction — trailing pad slots are bit-identity-preserving).
+  * Within a bucket, admission order is FIFO. For the SAAT engine, flush
+    order equals admission order. For the **DAAT engine**, the batch drawn
+    from the FIFO prefix is re-ordered by *predicted survivor count*
+    (:class:`SurvivorPredictor`, an EMA over observed ``WorkStats`` history):
+    the batched ``while_loop`` runs until the slowest query is rank-safe, so
+    co-scheduling requests with similar predicted work trims the batch tail.
+    Completions may therefore permute *within one flush* — never across
+    flushes. This is the "reordered-beyond-policy" boundary the tests pin.
+  * A flush uses the smallest allowed batch shape that covers the pending
+    prefix; missing rows are padded by repeating the last request (row
+    results for real requests are independent of pad rows in both engines).
+
+Flush-time policy
+-----------------
+A bucket is *due* at ``oldest.deadline - predicted_service(B, bucket) -
+safety``. ``poll()`` flushes every due bucket; ``next_due()`` exposes the
+earliest such instant so a driver (or a simulated-clock test harness) can
+sleep exactly until the next decision point instead of busy-polling. A
+flush that happens later than its due instant is recorded as a policy
+violation in ``flush_log`` — the serving suite asserts there are none.
+
+The ``Clock`` injection point
+-----------------------------
+All time in this subsystem flows through one injectable
+:class:`repro.metrics.latency.Clock`: the queue's arrival stamps, deadline
+arithmetic, and due-time computation, *and* the server's latency/cost-model
+measurements (the server shares the same clock instance by default). Pass a
+:class:`repro.metrics.latency.SimulatedClock` and the whole admission →
+coalesce → flush → complete pipeline becomes a deterministic function of
+the arrival schedule: tests advance time explicitly (``clock.advance_to``)
+between ``submit``/``poll`` calls and can replay hundreds of Poisson
+arrivals with zero flakiness. Production constructs the queue with the
+default :class:`~repro.metrics.latency.SystemClock`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.metrics.latency import Clock, SimulatedClock, SystemClock  # noqa: F401  (re-export)
+from repro.serving.bucketing import bucket_for, effective_lq, normalize_buckets, pad_to_width
+from repro.serving.scheduler import AnytimeServer
+
+_EPS_S = 1e-9  # float tolerance when judging "flushed after its due instant"
+
+
+class SurvivorPredictor:
+    """EMA of observed DAAT survivor counts, keyed by effective query length.
+
+    ``WorkStats.n_survivors`` is the paper's per-query work metric: the
+    number of blocks that outlive phase-1 pruning, which is what the batched
+    while_loop's trip count — and therefore the batch tail — tracks. Queries
+    with the same effective Lq tend to have similar survivor counts, so the
+    EMA is keyed by ``lq_eff`` with a global EMA as cold-start fallback.
+    """
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = alpha
+        self._by_lq: dict[int, float] = {}
+        self._global: Optional[float] = None
+
+    def observe(self, lq_eff: int, survivors: float):
+        s = float(survivors)
+        a = self.alpha
+        old = self._by_lq.get(lq_eff)
+        self._by_lq[lq_eff] = s if old is None else (1 - a) * old + a * s
+        self._global = s if self._global is None else (1 - a) * self._global + a * s
+
+    def predict(self, lq_eff: int) -> float:
+        v = self._by_lq.get(lq_eff)
+        if v is not None:
+            return v
+        return self._global if self._global is not None else 0.0
+
+
+@dataclasses.dataclass
+class _Request:
+    rid: int
+    q_terms: np.ndarray  # [lq_eff] trimmed to live width
+    q_weights: np.ndarray
+    arrival_s: float
+    deadline_s: float  # absolute, clock domain
+    lq_eff: int
+    bucket: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    scores: np.ndarray  # f32[k]
+    doc_ids: np.ndarray  # i32[k]
+    arrival_s: float
+    flush_s: float
+    deadline_s: float
+    bucket: int
+    batch_shape: int
+    rho: Optional[int]  # ladder level actually served; None for the daat engine
+
+    @property
+    def wait_ms(self) -> float:
+        return (self.flush_s - self.arrival_s) * 1e3
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushRecord:
+    flush_s: float
+    bucket: int
+    batch_shape: int
+    n_real: int
+    rids: tuple[int, ...]
+    rho: Optional[int]
+    predicted_ms: float
+    oldest_deadline_s: float
+    reason: str  # "full" | "deadline" | "drain"
+    # flushed too late for the predicted service to finish by the oldest
+    # deadline (safety_ms is headroom BEFORE this boundary, not part of it:
+    # a flush inside its safety margin is early, not violating)
+    violation: bool
+    # the oldest request's deadline was unmeetable the moment it ARRIVED
+    # (deadline - predicted service < arrival): the queue flushes best-effort
+    # immediately, and the miss is admission infeasibility, not a scheduling
+    # failure — counted separately from `violation`
+    infeasible: bool
+
+
+class AdmissionQueue:
+    """Deadline-aware request coalescing onto the (B, Lq-bucket) grid.
+
+    Parameters
+    ----------
+    server: the engine + executable grid; its ``lq_buckets`` (or ``max_lq``)
+        define the width grid, ``batch_shapes`` the allowed B values.
+    batch_shapes: allowed flush batch sizes, ascending. A bucket flushes as
+        "full" at the largest shape; a deadline flush uses the smallest
+        shape covering the pending prefix.
+    clock: defaults to the *server's* clock so queue wait and service cost
+        share one time domain.
+    safety_ms: subtracted from every due instant (headroom for dispatch
+        overhead the cost model cannot see).
+    dynamic_rho: when True (SAAT only), each flush re-picks rho against the
+        oldest request's *remaining* budget instead of the server default.
+    """
+
+    def __init__(
+        self,
+        server: AnytimeServer,
+        *,
+        batch_shapes: Sequence[int] = (8, 32),
+        clock: Optional[Clock] = None,
+        safety_ms: float = 0.0,
+        dynamic_rho: bool = False,
+        max_lq: Optional[int] = None,
+        survivor_alpha: float = 0.2,
+    ):
+        self.server = server
+        self.clock: Clock = clock if clock is not None else server.clock
+        self.batch_shapes = tuple(sorted(set(int(b) for b in batch_shapes)))
+        if not self.batch_shapes or self.batch_shapes[0] <= 0:
+            raise ValueError(f"batch_shapes must be positive, got {batch_shapes!r}")
+        if server.lq_buckets is not None:
+            self.buckets = server.lq_buckets
+        elif max_lq is not None:
+            self.buckets = normalize_buckets((max_lq,))
+        else:
+            raise ValueError(
+                "server has no lq_buckets; pass max_lq= so the queue has a width grid"
+            )
+        self.safety_s = safety_ms / 1e3
+        self.dynamic_rho = dynamic_rho
+        self.survivors = SurvivorPredictor(alpha=survivor_alpha)
+        self._pending: dict[int, deque[_Request]] = {b: deque() for b in self.buckets}
+        self._completions: list[Completion] = []
+        self._next_rid = 0
+        self.flush_log: list[FlushRecord] = []
+        self.n_submitted = 0
+        self.n_completed = 0
+
+    # ------------------------------ admission ------------------------------
+
+    def submit(self, q_terms, q_weights, deadline_ms: float) -> int:
+        """Admit one request; returns its rid. May flush a now-full bucket."""
+        if deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be positive, got {deadline_ms}")
+        qt = np.asarray(q_terms, dtype=np.int32).reshape(-1)
+        qw = np.asarray(q_weights, dtype=np.float32).reshape(-1)
+        if qt.shape != qw.shape:
+            raise ValueError(f"terms/weights shape mismatch: {qt.shape} vs {qw.shape}")
+        n_terms = self.server.index.n_terms
+        eff = effective_lq(qt[None, :], qw[None, :], n_terms)
+        bucket = bucket_for(eff, self.buckets)
+        if bucket not in self._pending:  # overflow width: own lane, compiled on demand
+            self._pending[bucket] = deque()
+        now = self.clock.now()
+        rid = self._next_rid
+        self._next_rid += 1
+        self.n_submitted += 1
+        self._pending[bucket].append(
+            _Request(
+                rid=rid,
+                q_terms=qt[:eff].copy(),
+                q_weights=qw[:eff].copy(),
+                arrival_s=now,
+                deadline_s=now + deadline_ms / 1e3,
+                lq_eff=eff,
+                bucket=bucket,
+            )
+        )
+        while len(self._pending[bucket]) >= self.batch_shapes[-1]:
+            self._flush(bucket, reason="full")
+        return rid
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._pending.values())
+
+    # ----------------------------- flush policy ----------------------------
+
+    def _shape_for(self, n: int) -> int:
+        for b in self.batch_shapes:
+            if b >= n:
+                return b
+        return self.batch_shapes[-1]
+
+    def _due_instant(self, bucket: int) -> Optional[float]:
+        q = self._pending[bucket]
+        if not q:
+            return None
+        shape = self._shape_for(len(q))
+        predicted_ms = self.server.predict_service_ms(shape, bucket)
+        oldest = min(r.deadline_s for r in q)
+        return oldest - predicted_ms / 1e3 - self.safety_s
+
+    def next_due(self) -> Optional[float]:
+        """Earliest instant at which some bucket must flush (None if empty)."""
+        dues = [d for b in self._pending for d in [self._due_instant(b)] if d is not None]
+        return min(dues) if dues else None
+
+    def poll(self) -> list[Completion]:
+        """Flush every due bucket, then hand back (and clear) completions."""
+        now = self.clock.now()
+        for bucket in sorted(self._pending):
+            while True:
+                due = self._due_instant(bucket)
+                if due is None or now < due - _EPS_S:
+                    break
+                self._flush(bucket, reason="deadline")
+        return self.take_completions()
+
+    def drain(self) -> list[Completion]:
+        """Flush everything pending regardless of deadlines (end of stream)."""
+        for bucket in sorted(self._pending):
+            while self._pending[bucket]:
+                self._flush(bucket, reason="drain")
+        return self.take_completions()
+
+    def take_completions(self) -> list[Completion]:
+        out = self._completions
+        self._completions = []
+        return out
+
+    # ------------------------------- flushing ------------------------------
+
+    def _flush(self, bucket: int, reason: str):
+        q = self._pending[bucket]
+        if not q:
+            return
+        now = self.clock.now()
+        n = min(len(q), self.batch_shapes[-1])
+        shape = self._shape_for(n)
+        batch = [q.popleft() for _ in range(n)]
+        daat = self.server.cfg.engine == "daat"
+        if daat:
+            # straggler-aware composition: similar predicted survivor counts
+            # sit in one batch so the while_loop tail tracks the batch, not
+            # the stream (stable sort: FIFO among equal predictions)
+            batch.sort(key=lambda r: self.survivors.predict(r.lq_eff))
+        rows = batch + [batch[-1]] * (shape - n)  # pad rows: repeat last request
+        qt = np.full((shape, bucket), self.server.index.n_terms, dtype=np.int32)
+        qw = np.zeros((shape, bucket), dtype=np.float32)
+        for i, r in enumerate(rows):
+            t, w = pad_to_width(r.q_terms, r.q_weights, bucket, self.server.index.n_terms)
+            qt[i], qw[i] = t, w
+        r_oldest = min(batch, key=lambda r: r.deadline_s)
+        oldest = r_oldest.deadline_s
+        predicted_ms = self.server.predict_service_ms(shape, bucket)
+        rho: Optional[int] = None
+        if not daat:
+            # pick the level here (identically to what search_batch would do)
+            # so completions/flush_log record the budget actually served
+            if self.dynamic_rho:
+                remaining_ms = max((oldest - now) * 1e3, 0.0)
+                rho = self.server.pick_rho(deadline_ms=remaining_ms)
+            else:
+                rho = self.server.pick_rho()
+        res = self.server.search_batch(qt, qw, rho=rho)
+        scores = np.asarray(jax.device_get(res.scores))
+        ids = np.asarray(jax.device_get(res.doc_ids))
+        if daat:
+            survivors = np.asarray(jax.device_get(res.stats.n_survivors))
+            for i, r in enumerate(batch):
+                self.survivors.observe(r.lq_eff, float(survivors[i]))
+        for i, r in enumerate(batch):
+            self._completions.append(
+                Completion(
+                    rid=r.rid,
+                    scores=scores[i],
+                    doc_ids=ids[i],
+                    arrival_s=r.arrival_s,
+                    flush_s=now,
+                    deadline_s=r.deadline_s,
+                    bucket=bucket,
+                    batch_shape=shape,
+                    rho=rho,
+                )
+            )
+        self.n_completed += n
+        due = oldest - predicted_ms / 1e3  # violation boundary excludes safety headroom
+        infeasible = due <= r_oldest.arrival_s + _EPS_S  # unmeetable at admission
+        self.flush_log.append(
+            FlushRecord(
+                flush_s=now,
+                bucket=bucket,
+                batch_shape=shape,
+                n_real=n,
+                rids=tuple(r.rid for r in batch),
+                rho=rho,
+                predicted_ms=predicted_ms,
+                oldest_deadline_s=oldest,
+                reason=reason,
+                violation=bool(now > due + _EPS_S) and not infeasible and reason != "drain",
+                infeasible=infeasible,
+            )
+        )
+
+    # ------------------------------ reporting ------------------------------
+
+    @property
+    def n_violations(self) -> int:
+        return sum(1 for f in self.flush_log if f.violation)
+
+    @property
+    def n_infeasible(self) -> int:
+        return sum(1 for f in self.flush_log if f.infeasible)
+
+
+def replay_arrivals(
+    queue: AdmissionQueue,
+    arrivals_s: Sequence[float],
+    q_terms_list: Sequence[np.ndarray],
+    q_weights_list: Sequence[np.ndarray],
+    deadlines_ms: Sequence[float],
+) -> list[Completion]:
+    """Deterministically replay an arrival schedule on a simulated clock.
+
+    The event loop advances the queue's :class:`SimulatedClock` to the next
+    event — an arrival or ``next_due()`` — and polls at exactly that
+    instant, so no flush can ever be observed late for lack of a wakeup.
+    rids are assigned in arrival order (rid ``i`` is request ``i``).
+    """
+    clock = queue.clock
+    if not isinstance(clock, SimulatedClock):
+        raise TypeError("replay_arrivals drives time itself; queue needs a SimulatedClock")
+    if not (len(arrivals_s) == len(q_terms_list) == len(q_weights_list) == len(deadlines_ms)):
+        raise ValueError("arrival schedule fields must have equal length")
+    inf = float("inf")
+    completions: list[Completion] = []
+    i, n = 0, len(arrivals_s)
+    while i < n or queue.pending():
+        t_arr = arrivals_s[i] if i < n else inf
+        due = queue.next_due()
+        t_due = due if due is not None else inf
+        if t_arr <= t_due:
+            clock.advance_to(t_arr)
+            queue.submit(q_terms_list[i], q_weights_list[i], deadlines_ms[i])
+            i += 1
+        else:
+            clock.advance_to(t_due)
+        completions.extend(queue.poll())
+    return completions

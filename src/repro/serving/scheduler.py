@@ -21,11 +21,22 @@ served by one batched executable each. DAAT has no rho knob: its cost is
 data-dependent (the while_loop runs until the slowest query in the batch is
 rank-safe), which is exactly the tail-latency contrast the benchmarks
 measure.
+
+Two serving-layer properties make the continuous-batching admission queue
+(``repro.serving.queue``) possible:
+
+  * **Lq bucketing** (``ServingConfig.lq_buckets``): each batch is padded to
+    the smallest bucket width covering its live terms instead of the stream's
+    max Lq, so the executable grid is (rho-or-engine-config) x (Lq bucket)
+    and short-query traffic stops paying long-query gather cost. Results are
+    bit-identical to the max-Lq pad (see ``repro.serving.bucketing``).
+  * **Injectable time** (``clock=``): every latency measurement and the cost
+    model's calibration read a :class:`repro.metrics.latency.Clock`, so the
+    queue's deadline-driven flush policy can be tested on a simulated clock.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import jax
@@ -35,7 +46,10 @@ import numpy as np
 from repro.core.daat import daat_search_batched, max_blocks_per_term
 from repro.core.impact_index import ImpactIndex
 from repro.core.saat import max_segments_per_term, saat_search
-from repro.metrics.latency import LatencyStats, summarize_latencies
+from repro.metrics.latency import Clock, LatencyStats, SystemClock, summarize_latencies
+from repro.serving.bucketing import bucketize_batch, normalize_buckets, pad_to_width
+
+_UNSET = object()  # pick_rho sentinel: "use cfg.deadline_ms"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,23 +72,41 @@ class ServingConfig:
     # route DAAT phase 2 through the batched Pallas kernels (block_prune /
     # block_topk / sparse_score); False keeps the jnp oracle formulation
     daat_use_kernels: bool = False
+    # Lq bucket widths: each batch is padded to the smallest bucket covering
+    # its live terms (one executable per (config, bucket) pair, bit-identical
+    # results); None pads to whatever width the caller sends
+    lq_buckets: Optional[tuple[int, ...]] = None
 
 
 @dataclasses.dataclass
 class _CostModel:
-    """us per million postings, learned online per rho level."""
+    """us per million postings, learned online per rho level.
+
+    ``clock`` stamps each level's last calibration time so staleness is
+    observable (and so calibration itself is testable on a simulated clock).
+    A level is *calibrated* once it has been directly measured; predictions
+    for unmeasured levels extrapolate from the nearest measured one and
+    ``predict_us`` returns ``None`` only when nothing has been measured at
+    all — callers must treat that as "unknown", never as "free".
+    """
 
     us_per_mpost: dict
     alpha: float
+    clock: Clock = dataclasses.field(default_factory=SystemClock)
+    last_update_s: dict = dataclasses.field(default_factory=dict)
 
     def update(self, rho: int, elapsed_us: float):
         per = elapsed_us / max(rho / 1e6, 1e-9)
         old = self.us_per_mpost.get(rho)
         self.us_per_mpost[rho] = per if old is None else (1 - self.alpha) * old + self.alpha * per
+        self.last_update_s[rho] = self.clock.now()
 
-    def predict_us(self, rho: int) -> float:
+    def is_calibrated(self, rho: int) -> bool:
+        return rho in self.us_per_mpost
+
+    def predict_us(self, rho: int) -> Optional[float]:
         if not self.us_per_mpost:
-            return 0.0
+            return None
         # nearest calibrated level
         lvl = min(self.us_per_mpost, key=lambda r: abs(r - rho))
         return self.us_per_mpost[lvl] * rho / 1e6
@@ -89,17 +121,25 @@ class AnytimeServer:
     a server never blocks on a device sync.
     """
 
-    def __init__(self, index: ImpactIndex, cfg: ServingConfig):
+    def __init__(self, index: ImpactIndex, cfg: ServingConfig, clock: Optional[Clock] = None):
         if cfg.engine not in ("saat", "daat"):
             raise ValueError(f"unknown engine {cfg.engine!r}")
         self.index = index
         self.cfg = cfg
+        self.clock: Clock = clock if clock is not None else SystemClock()
         # both bounds come from index build-time metadata — no device sync
         self.max_segs = max_segments_per_term(index)
         self.max_bm = max_blocks_per_term(index)
         self._latencies_ms: list[float] = []
         self._rhos: list[int] = []
-        self._cost = _CostModel({}, cfg.ema_alpha)
+        self._cost = _CostModel({}, cfg.ema_alpha, clock=self.clock)
+        # per-query-ms EMA keyed by (engine, Lq bucket): the admission
+        # queue's service-time estimate for flush scheduling (DAAT has no rho
+        # to hang a cost model on; SAAT falls back to the rho model)
+        self._bucket_ms: dict[tuple[str, int], float] = {}
+        self.lq_buckets = (
+            normalize_buckets(cfg.lq_buckets) if cfg.lq_buckets is not None else None
+        )
         # cap the ladder at the index's own posting count (exact level)
         exact = index.n_postings
         ladder = sorted({min(r, exact) for r in cfg.rho_ladder} | {exact})
@@ -107,16 +147,55 @@ class AnytimeServer:
 
     # -------------------------- rho selection -----------------------------
 
-    def pick_rho(self) -> int:
-        if self.cfg.deadline_ms is None:
+    def pick_rho(self, deadline_ms=_UNSET) -> int:
+        """Largest *calibrated* ladder level whose predicted cost fits.
+
+        ``deadline_ms`` overrides ``cfg.deadline_ms`` (the admission queue
+        passes each batch's remaining time budget); ``None`` means no
+        deadline -> max rho. An uncalibrated level is never treated as free:
+        when no calibrated level fits we fall back to the *smallest*
+        uncalibrated one (measure it cheaply, let the EMA learn), and only
+        then to the smallest level outright.
+        """
+        deadline = self.cfg.deadline_ms if deadline_ms is _UNSET else deadline_ms
+        if deadline is None:
             return self.rho_ladder[-1]
-        budget_us = self.cfg.deadline_ms * 1e3
-        best = self.rho_ladder[0]
-        for rho in self.rho_ladder:
-            pred = self._cost.predict_us(rho)
-            if pred == 0.0 or pred <= budget_us:
-                best = rho
-        return best
+        budget_us = deadline * 1e3
+        calibrated_fit = [
+            rho
+            for rho in self.rho_ladder
+            if self._cost.is_calibrated(rho) and self._cost.predict_us(rho) <= budget_us
+        ]
+        if calibrated_fit:
+            return calibrated_fit[-1]  # ladder is sorted ascending
+        uncalibrated = [r for r in self.rho_ladder if not self._cost.is_calibrated(r)]
+        if uncalibrated:
+            return uncalibrated[0]
+        return self.rho_ladder[0]
+
+    # ------------------------ queue-facing predictions ---------------------
+
+    def predict_service_ms(self, n_queries: int, lq_bucket: int, rho: Optional[int] = None) -> float:
+        """Predicted wall time to serve an ``[n_queries, lq_bucket]`` batch.
+
+        Prefers the per-(engine, bucket) EMA (observed whole-batch behavior,
+        including bucket-dependent gather cost); falls back to the rho cost
+        model for SAAT. Returns 0.0 when nothing is calibrated yet — the
+        admission queue then flushes exactly at the deadline, which is the
+        conservative policy for an unknown service time.
+        """
+        key = (self.cfg.engine, int(lq_bucket))
+        per_query_ms = self._bucket_ms.get(key)
+        if per_query_ms is None and self.cfg.engine == "saat":
+            pred_us = self._cost.predict_us(rho if rho is not None else self.pick_rho())
+            per_query_ms = None if pred_us is None else pred_us / 1e3
+        return 0.0 if per_query_ms is None else per_query_ms * n_queries
+
+    def _observe_bucket_ms(self, lq_bucket: int, per_query_ms: float):
+        key = (self.cfg.engine, int(lq_bucket))
+        old = self._bucket_ms.get(key)
+        a = self.cfg.ema_alpha
+        self._bucket_ms[key] = per_query_ms if old is None else (1 - a) * old + a * per_query_ms
 
     # ----------------------------- serving --------------------------------
 
@@ -133,6 +212,15 @@ class AnytimeServer:
             use_kernels=self.cfg.daat_use_kernels,
         )
 
+    def _bucketize(self, q_terms, q_weights) -> tuple[jax.Array, jax.Array, int]:
+        """Pad the batch to its Lq bucket (identity when bucketing is off)."""
+        if self.lq_buckets is None:
+            return q_terms, q_weights, int(q_terms.shape[-1])
+        qt, qw, bucket = bucketize_batch(
+            np.asarray(q_terms), np.asarray(q_weights), self.lq_buckets, self.index.n_terms
+        )
+        return jnp.asarray(qt), jnp.asarray(qw), bucket
+
     def search_batch(self, q_terms: jax.Array, q_weights: jax.Array, rho: Optional[int] = None):
         if self.cfg.engine == "daat":
             if rho is not None:
@@ -140,15 +228,26 @@ class AnytimeServer:
                     "rho is a SAAT posting budget; the daat engine's cost is "
                     "data-dependent and cannot honor it"
                 )
-            t0 = time.perf_counter()
+            t0 = self.clock.now()  # bucketize is service cost: keep it timed
+            q_terms, q_weights, bucket = self._bucketize(q_terms, q_weights)
             res = self._daat_search(q_terms, q_weights)
             jax.block_until_ready(res.scores)
-            per_query = (time.perf_counter() - t0) * 1e3 / q_terms.shape[0]
+            per_query = (self.clock.now() - t0) * 1e3 / q_terms.shape[0]
             self._latencies_ms.extend([per_query] * q_terms.shape[0])
             self._rhos.extend([0] * q_terms.shape[0])
+            self._observe_bucket_ms(bucket, per_query)
             return res
-        rho = rho or self.pick_rho()
-        t0 = time.perf_counter()
+        # an explicit rho must be a real ladder level: `rho or pick_rho()`
+        # silently routed rho=0 (any falsy budget) to the controller
+        if rho is None:
+            rho = self.pick_rho()
+        elif rho not in self.rho_ladder:
+            raise ValueError(
+                f"rho={rho!r} is not a ladder level {self.rho_ladder}; explicit "
+                "budgets must hit a pre-compiled executable"
+            )
+        t0 = self.clock.now()  # bucketize is service cost: keep it timed
+        q_terms, q_weights, bucket = self._bucketize(q_terms, q_weights)
         res = saat_search(
             self.index,
             q_terms,
@@ -160,36 +259,66 @@ class AnytimeServer:
             fused_topk=self.cfg.fused_topk,
         )
         jax.block_until_ready(res.scores)
-        elapsed = (time.perf_counter() - t0) * 1e3
+        elapsed = (self.clock.now() - t0) * 1e3
         per_query = elapsed / q_terms.shape[0]
         for _ in range(q_terms.shape[0]):
             self._latencies_ms.append(per_query)
             self._rhos.append(rho)
         self._cost.update(rho, per_query * 1e3)
+        self._observe_bucket_ms(bucket, per_query)
         return res
 
-    def warmup(self, q_terms: jax.Array, q_weights: jax.Array, repeats: int = 2):
-        """Compile + calibrate every rho level (excluded from stats)."""
-        if self.cfg.engine == "daat":
-            for _ in range(repeats):
-                jax.block_until_ready(self._daat_search(q_terms, q_weights).scores)
-            return
-        for rho in self.rho_ladder:
-            for _ in range(repeats):
-                t0 = time.perf_counter()
-                res = saat_search(
-                    self.index,
-                    q_terms,
-                    q_weights,
-                    k=self.cfg.k,
-                    rho=rho,
-                    max_segs_per_term=self.max_segs,
-                    scatter_impl=self.cfg.scatter_impl,
-                    fused_topk=self.cfg.fused_topk,
-                )
-                jax.block_until_ready(res.scores)
-                per_query_us = (time.perf_counter() - t0) * 1e6 / q_terms.shape[0]
-            self._cost.update(rho, per_query_us)
+    def warmup(
+        self,
+        q_terms: jax.Array,
+        q_weights: jax.Array,
+        repeats: int = 2,
+        batch_sizes: Optional[Sequence[int]] = None,
+    ):
+        """Compile + calibrate the executable grid (excluded from stats).
+
+        The grid is (rho-or-engine-config) x (Lq bucket) x (batch size):
+        every shape the admission queue can flush is compiled here, so
+        serve-time never recompiles. ``batch_sizes`` defaults to the sample's
+        own B; the queue passes its flushable shapes.
+        """
+        sizes = [int(q_terms.shape[0])] if batch_sizes is None else sorted(set(batch_sizes))
+        buckets = [int(q_terms.shape[-1])] if self.lq_buckets is None else list(self.lq_buckets)
+        qt_np, qw_np = np.asarray(q_terms), np.asarray(q_weights)
+        for bucket in buckets:
+            if bucket >= qt_np.shape[-1]:
+                bt, bw = pad_to_width(qt_np, qw_np, bucket, self.index.n_terms)
+            else:
+                # slice regardless of live terms: warmup only needs the SHAPE
+                # compiled and timed; which terms survive is irrelevant
+                bt, bw = qt_np[:, :bucket], qw_np[:, :bucket]
+            for B in sizes:
+                reps = np.resize(np.arange(qt_np.shape[0]), B)
+                qt, qw = jnp.asarray(bt[reps]), jnp.asarray(bw[reps])
+                if self.cfg.engine == "daat":
+                    for _ in range(repeats):
+                        t0 = self.clock.now()
+                        jax.block_until_ready(self._daat_search(qt, qw).scores)
+                        per_query_ms = (self.clock.now() - t0) * 1e3 / B
+                    self._observe_bucket_ms(bucket, per_query_ms)
+                    continue
+                for rho in self.rho_ladder:
+                    for _ in range(repeats):
+                        t0 = self.clock.now()
+                        res = saat_search(
+                            self.index,
+                            qt,
+                            qw,
+                            k=self.cfg.k,
+                            rho=rho,
+                            max_segs_per_term=self.max_segs,
+                            scatter_impl=self.cfg.scatter_impl,
+                            fused_topk=self.cfg.fused_topk,
+                        )
+                        jax.block_until_ready(res.scores)
+                        per_query_us = (self.clock.now() - t0) * 1e6 / B
+                    self._cost.update(rho, per_query_us)
+                    self._observe_bucket_ms(bucket, per_query_us / 1e3)
 
     def stats(self) -> LatencyStats:
         return summarize_latencies(self._latencies_ms)

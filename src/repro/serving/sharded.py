@@ -267,6 +267,39 @@ def make_sharded_serve_step(
     return serve, in_specs, out_specs
 
 
+def make_bucketed_serve_step(
+    mesh: Mesh,
+    *,
+    lq_buckets: Sequence[int],
+    n_terms: int,
+    **kwargs,
+):
+    """Lq-bucketed wrapper over :func:`make_sharded_serve_step`.
+
+    The underlying serve step is shape-polymorphic — one executable per
+    query-batch shape — so bucketing at pod scale is purely a host-side
+    dispatch: pad each incoming batch to the smallest bucket covering its
+    live terms and the ``(B, bucket)`` executable grid materializes lazily
+    under the same shard_map. Short-query traffic stops paying long-query
+    gather cost on *every rank at once*, and per-rank work stays identical
+    across ranks because all ranks see the same padded batch shape. Results
+    are bit-identical to padding at max Lq (trailing pad slots are inert in
+    both engines).
+    """
+    from repro.serving.bucketing import bucketize_batch, normalize_buckets
+
+    buckets = normalize_buckets(lq_buckets)
+    serve, in_specs, out_specs = make_sharded_serve_step(mesh, **kwargs)
+
+    def serve_bucketed(index_stack: ImpactIndex, q_terms, q_weights):
+        qt, qw, _ = bucketize_batch(
+            np.asarray(q_terms), np.asarray(q_weights), buckets, n_terms
+        )
+        return serve(index_stack, jnp.asarray(qt), jnp.asarray(qw))
+
+    return serve_bucketed, in_specs, out_specs
+
+
 def _index_data_dict(index: ImpactIndex) -> dict:
     return {
         f.name: getattr(index, f.name)

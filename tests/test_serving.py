@@ -53,6 +53,94 @@ def test_latency_stats():
     assert s.tail_ratio > 5
 
 
+@pytest.mark.serving
+def test_search_batch_rejects_off_ladder_rho(bm25_index, bm25_queries):
+    """rho=0 (or any off-ladder budget) must raise, not silently fall
+    through to the deadline controller (the old `rho or pick_rho()` bug)."""
+    qt, qw = bm25_queries
+    srv = AnytimeServer(bm25_index, ServingConfig(k=5, rho_ladder=(100, 1000)))
+    with pytest.raises(ValueError, match="ladder"):
+        srv.search_batch(jnp.asarray(qt[:2]), jnp.asarray(qw[:2]), rho=0)
+    with pytest.raises(ValueError, match="ladder"):
+        srv.search_batch(jnp.asarray(qt[:2]), jnp.asarray(qw[:2]), rho=777)
+    # a real ladder level is honored verbatim
+    srv.search_batch(jnp.asarray(qt[:2]), jnp.asarray(qw[:2]), rho=100)
+    assert srv._rhos[-2:] == [100, 100]
+
+
+@pytest.mark.serving
+def test_pick_rho_never_treats_uncalibrated_as_free(bm25_index):
+    """An unmeasured level must not look free under a tight deadline."""
+    srv = AnytimeServer(
+        bm25_index, ServingConfig(rho_ladder=(100, 1000, 10**9), deadline_ms=1.0)
+    )
+    # nothing calibrated: fall back to the SMALLEST uncalibrated level, never
+    # the 10M-posting one the old `pred == 0.0 -> fits` logic selected
+    assert srv.pick_rho() == srv.rho_ladder[0]
+    # calibrate only the smallest level, cheap enough to fit 1 ms
+    srv._cost.us_per_mpost[srv.rho_ladder[0]] = 1.0
+    srv._cost.last_update_s[srv.rho_ladder[0]] = 0.0
+    # largest CALIBRATED fitting level wins over larger uncalibrated ones
+    # (the never-measured exact level stays ineligible however cheap the
+    # nearest-level extrapolation makes it look)
+    assert srv.pick_rho() == srv.rho_ladder[0]
+    # once the big level is measured as cheap, it becomes eligible
+    srv._cost.us_per_mpost[srv.rho_ladder[-1]] = 1e-6
+    assert srv.pick_rho() == srv.rho_ladder[-1]
+
+
+@pytest.mark.serving
+def test_pick_rho_deadline_override(bm25_index, bm25_queries):
+    """The admission queue passes per-batch remaining budgets."""
+    qt, qw = bm25_queries
+    srv = AnytimeServer(bm25_index, ServingConfig(rho_ladder=(100, 1000, 10000)))
+    srv.warmup(jnp.asarray(qt[:4]), jnp.asarray(qw[:4]))
+    assert srv.pick_rho() == srv.rho_ladder[-1]  # cfg deadline None -> max
+    assert srv.pick_rho(deadline_ms=1e-12) == srv.rho_ladder[0]
+    assert srv.pick_rho(deadline_ms=1e9) == srv.rho_ladder[-1]
+    assert srv.pick_rho(deadline_ms=None) == srv.rho_ladder[-1]
+
+
+@pytest.mark.serving
+def test_run_query_stream_ragged_final_batch(bm25_index, bm25_queries):
+    """N % batch_size != 0: the padded-with-repeats tail must be dropped and
+    the kept rows must equal serving everything in one batch."""
+    qt, qw = bm25_queries
+    N, bs = 10, 4  # final batch holds 2 real + 2 repeated rows
+    srv = AnytimeServer(bm25_index, ServingConfig(k=10, rho_ladder=(10**9,), batch_size=bs))
+    scores, ids = run_query_stream(srv, qt[:N], qw[:N])
+    assert scores.shape == (N, 10) and ids.shape == (N, 10)
+    one = srv.search_batch(jnp.asarray(qt[:N]), jnp.asarray(qw[:N]))
+    np.testing.assert_array_equal(ids, np.asarray(one.doc_ids))
+    np.testing.assert_array_equal(scores, np.asarray(one.scores))
+    # the repeated pad rows were served but never reported
+    assert len(srv._latencies_ms) == 12 + N  # 3 batches of 4, then the direct call
+
+
+@pytest.mark.serving
+def test_cost_model_ema_convergence_and_nearest_level():
+    from repro.metrics.latency import SimulatedClock
+    from repro.serving.scheduler import _CostModel
+
+    clock = SimulatedClock()
+    m = _CostModel({}, alpha=0.5, clock=clock)
+    assert m.predict_us(1_000_000) is None and not m.is_calibrated(1_000_000)
+    # EMA converges to a shifted steady state
+    m.update(1_000_000, 100.0)  # 100 us / Mpost
+    assert m.predict_us(1_000_000) == pytest.approx(100.0)
+    for _ in range(40):
+        clock.advance(1.0)
+        m.update(1_000_000, 300.0)
+    assert m.predict_us(1_000_000) == pytest.approx(300.0, rel=1e-3)
+    assert m.last_update_s[1_000_000] == pytest.approx(40.0)
+    # nearest-level prediction: 2M extrapolates from the 1M measurement...
+    assert m.predict_us(2_000_000) == pytest.approx(600.0, rel=1e-3)
+    # ...until a closer level exists
+    m.update(10_000_000, 5000.0)  # 500 us / Mpost
+    assert m.predict_us(8_000_000) == pytest.approx(8 * 500.0, rel=1e-3)
+    assert m.predict_us(1_200_000) == pytest.approx(1.2 * 300.0, rel=1e-3)
+
+
 def test_server_daat_engine_matches_exhaustive(bm25_index, bm25_queries):
     """engine='daat' serves the batched Block-Max engine, rank-safe."""
     qt, qw = bm25_queries
