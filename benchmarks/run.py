@@ -18,6 +18,7 @@ def main() -> None:
         side_blockmax_vs_exhaustive,
         side_bucketed_vs_padded,
         side_daat_vs_saat_batched,
+        side_fused_chunk_vs_split,
         side_fused_vs_unfused,
         table1_models_systems,
         table2_term_stats,
@@ -33,6 +34,7 @@ def main() -> None:
         ("side_batched_vs_vmap", side_batched_vs_vmap.main),
         ("side_daat_vs_saat_batched", side_daat_vs_saat_batched.main),
         ("side_fused_vs_unfused", side_fused_vs_unfused.main),
+        ("side_fused_chunk_vs_split", side_fused_chunk_vs_split.main),
         ("side_bucketed_vs_padded", side_bucketed_vs_padded.main),
         ("roofline", roofline.main),
     ]

@@ -1,0 +1,134 @@
+"""Side experiment: fused vs split DAAT phase-2 chunk step (PR 5 tentpole).
+
+Both configs run ``daat_search_batched(use_kernels=True)``; what differs is
+what one while_loop trip does to the HBM boundary:
+
+  * **split** (``fused_chunk=False``): three launches per trip —
+    ``block_topk_batched`` selection, ``sparse_score_batched`` scoring, and
+    the jnp ``merge_topk`` — with the gathered ``[B, budget, bs, Tmax]`` doc
+    tiles, the ``[B, budget, bs]`` score tensor, and the selection finalists
+    all written to HBM by one stage and re-read by the next;
+  * **fused** (``fused_chunk=True``): ONE ``chunk_step`` launch per trip;
+    pool/theta/candidate-tile/processed-row state stays in VMEM scratch, the
+    selected doc blocks stream HBM->VMEM once via double-buffered async-copy
+    DMA, and only the updated per-query state (the candidate output) crosses
+    back.
+
+The paper's wacky-weight regime multiplies exactly this per-trip traffic:
+when skipping collapses, the trip count tracks the worst query in the batch
+(PAPER.md §4.2), so the split path's round-trips scale with the collapse.
+
+The ``hbm_roundtrip_floats_per_trip_*`` columns count f32-equivalents that
+are *written by one stage and re-read by another* inside a single trip
+(read-once streaming of the doc-major rows is excluded — both paths must
+read the postings): the split path pays the gathered doc tiles twice
+(gather write + kernel read), the score tensor twice (scorer write + merge
+read), and the remaining-ub vector once; the fused path pays only the
+per-query state output — pool scores/ids, theta, processed row. The run
+asserts doc-id AND WorkStats parity between the two configs before timing.
+
+On CPU the Pallas kernels run in interpret mode, so absolute times favor
+whichever path launches fewer interpreted kernels; what is faithful here is
+the harness shape and the parity/accounting — the HBM-traffic win is a TPU
+property (see the roofline bench).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import daat_search_batched
+from repro.core.daat import max_blocks_per_term
+
+K = 100
+MODELS = ("bm25", "spladev2")
+BATCH_SIZES = (1, 8, 32)
+EST_BLOCKS = 8
+BLOCK_BUDGET = 16
+# interpret-mode kernels on CPU run tens of seconds per call for the wacky
+# models at B=32 (skipping collapses -> long while_loop of interpreted
+# launches), so keep the sample count small; on TPU raise this freely
+REPEATS = 3
+
+
+def _timed_samples(fn, qt, qw, repeats: int) -> np.ndarray:
+    jax.block_until_ready(fn(qt, qw).scores)  # compile
+    out = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(qt, qw).scores)
+        out.append((time.perf_counter() - t0) * 1e3)
+    return np.asarray(out)
+
+
+def _stats(samples: np.ndarray) -> tuple[float, float]:
+    return round(float(samples.mean()), 3), round(float(np.percentile(samples, 99)), 3)
+
+
+def run() -> list[dict]:
+    rows = []
+    for model in MODELS:
+        idx = C.index_for(model)
+        qt_all, qw_all = C.queries_for(model)
+        mb = max_blocks_per_term(idx)
+        budget = min(BLOCK_BUDGET, idx.n_blocks)
+        bs = idx.block_size
+        tmax = idx.max_doc_terms
+        for n in BATCH_SIZES:
+            reps = -(-n // qt_all.shape[0])
+            qt = np.tile(np.asarray(qt_all), (reps, 1))[:n]
+            qw = np.tile(np.asarray(qw_all), (reps, 1))[:n]
+            qt, qw = jax.numpy.asarray(qt), jax.numpy.asarray(qw)
+
+            def daat(q, w, fused):
+                return daat_search_batched(
+                    idx, q, w, k=K, est_blocks=EST_BLOCKS, block_budget=BLOCK_BUDGET,
+                    max_bm_per_term=mb, exact=True,
+                    use_kernels=True, fused_chunk=fused,
+                )
+
+            # the fusion must be invisible in results before it is timed:
+            # ids bitwise AND the per-query work metrics (trip counts drive
+            # the comparison, so they must be identical by construction)
+            split, fused = daat(qt, qw, False), daat(qt, qw, True)
+            assert (np.asarray(split.doc_ids) == np.asarray(fused.doc_ids)).all()
+            for field in ("n_survivors", "blocks_scored", "chunks", "rank_safe"):
+                assert (
+                    np.asarray(getattr(split.stats, field))
+                    == np.asarray(getattr(fused.stats, field))
+                ).all(), f"WorkStats.{field} diverged"
+
+            t_split = _stats(_timed_samples(lambda q, w: daat(q, w, False), qt, qw, REPEATS))
+            t_fused = _stats(_timed_samples(lambda q, w: daat(q, w, True), qt, qw, REPEATS))
+            k_eff = min(K, idx.n_docs)
+            split_floats = n * (
+                2 * budget * bs * tmax  # gathered doc tiles: gather write + kernel read
+                + 2 * budget * bs  # score tensor: scorer write + merge read
+                + idx.n_blocks  # remaining-ub vector read by the select kernel
+            )
+            fused_floats = n * (2 * k_eff + 1 + idx.n_blocks)  # pool + theta + bitmap
+            rows.append(
+                {
+                    "model": model,
+                    "batch": n,
+                    "trips_max": int(np.asarray(fused.chunks).max()),
+                    "split_mean_ms": t_split[0],
+                    "split_p99_ms": t_split[1],
+                    "fused_mean_ms": t_fused[0],
+                    "fused_p99_ms": t_fused[1],
+                    "hbm_roundtrip_floats_per_trip_split": int(split_floats),
+                    "hbm_roundtrip_floats_per_trip_fused": int(fused_floats),
+                }
+            )
+    return rows
+
+
+def main():
+    C.print_csv("Side experiment: fused vs split DAAT chunk step", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -68,6 +68,29 @@ The jnp path is kept verbatim as the parity oracle: doc ids and ``WorkStats``
 must match exactly, scores to fp32 tolerance (the kernels reassociate the
 same sums). All threshold/merge/masking logic is shared between the modes —
 ``use_kernels`` swaps only HOW the same numbers are produced.
+
+Fused chunk step (``use_kernels=True, fused_chunk=True``)
+---------------------------------------------------------
+The split kernel mode still pays three launches per while_loop trip, with the
+``[B, budget, bs]`` chunk-score tensor and the selection finalists
+round-tripping HBM between them — exactly the per-trip traffic a
+skipping-hostile (wacky-weight) workload multiplies by its trip count.
+``fused_chunk=True`` routes the WHOLE phase-2 body through ONE batch-gridded
+Pallas kernel (``repro.kernels.chunk_step``):
+
+  * the chunk state — pool scores/ids, theta, the candidate score tile, and
+    the per-query processed-bitmap row — stays in VMEM scratch across the
+    doc-block revisiting loop;
+  * the selected blocks' doc-major rows are pulled from the HBM store with
+    double-buffered async-copy DMAs, so block ``j+1``'s ``[bs, Tmax]`` rows
+    prefetch while block ``j`` is being scored;
+  * only the updated per-query state (pool, theta, processed) crosses the
+    HBM boundary per trip — the candidate output.
+
+Phase 0/1 still run the split kernels (they execute once per query, not once
+per trip). The jnp body remains the parity oracle: the fused kernel evaluates
+the numerically identical expressions in the same order, so doc ids, theta,
+and ``WorkStats`` are bit-identical across all three modes.
 """
 from __future__ import annotations
 
@@ -378,7 +401,7 @@ blockmax_search = daat_search_vmap
     jax.jit,
     static_argnames=(
         "k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks",
-        "use_kernels",
+        "use_kernels", "fused_chunk",
     ),
 )
 def daat_search_batched(
@@ -393,6 +416,7 @@ def daat_search_batched(
     exact: bool = True,
     max_chunks: int | None = None,
     use_kernels: bool = False,
+    fused_chunk: bool = False,
 ) -> DaatResult:
     """Natively batched block-max DAAT top-k. ``q_terms/q_weights: [B, Lq]``.
 
@@ -404,11 +428,17 @@ def daat_search_batched(
 
     ``use_kernels=True`` routes phase 0's upper bounds through
     ``block_prune_batched``, chunk selection through ``block_topk_batched``,
-    and chunk scoring through ``sparse_score_batched`` (see module
-    docstring); the jnp formulation stays the parity oracle.
+    and chunk scoring through ``sparse_score_batched``; ``fused_chunk=True``
+    (kernel mode only) additionally collapses every phase-2 trip's
+    select+score+merge into the single VMEM-resident ``chunk_step`` kernel
+    (see module docstring); the jnp formulation stays the parity oracle.
     """
     if q_terms.ndim != 2:
         raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
+    if fused_chunk and not use_kernels:
+        raise ValueError(
+            "fused_chunk fuses the kernel-mode chunk step; pass use_kernels=True"
+        )
     n_blocks = index.n_blocks
     est_blocks, block_budget, max_chunks = _resolve_daat_shapes(
         index, k, est_blocks, block_budget, max_chunks
@@ -464,20 +494,46 @@ def daat_search_batched(
     def cond(state):
         return jnp.any(active_rows(state))
 
+    if fused_chunk:
+        from repro.kernels.chunk_step import ops as chunk_ops
+
+        # the engine defines qw <= 0 slots as padding; the kernel sums raw
+        # weights (same contract as _score_blocks_kernel_batched)
+        qw_raw = jnp.where(q_weights > 0, q_weights.astype(jnp.float32), 0.0)
+
+        def _chunk_step(pool_s, pool_i, processed, theta):
+            """ONE kernel launch: select+score+merge, state VMEM-resident."""
+            return chunk_ops.chunk_step_batched(
+                index.doc_terms, index.doc_weights, q_terms, qw_raw,
+                ub, processed, pool_s, pool_i, theta,
+                block_budget=block_budget,
+                block_size=index.block_size,
+                n_live=index.n_docs,
+            )
+
+    else:
+
+        def _chunk_step(pool_s, pool_i, processed, theta):
+            """Split chunk step: selection, scoring, and merge round-trip HBM."""
+            rub = remaining_ub(processed)
+            ub_c, b_c = _select(rub, block_budget)  # [B, budget]
+            live = ub_c > theta[:, None]  # only these can change the top-k
+            s_c, d_c = _score(b_c)  # [B, budget, bs]
+            s_c = jnp.where(live[..., None], s_c, -jnp.inf)
+            new_s, new_i = merge_topk(
+                pool_s, pool_i, s_c.reshape(B, -1), d_c.reshape(B, -1).astype(jnp.int32), k
+            )
+            new_theta = new_s[:, k - 1]
+            new_processed = processed.at[rows, b_c].set(
+                processed[rows, b_c] | live
+            )
+            return new_s, new_i, new_theta, new_processed
+
     def body(state):
         pool_s, pool_i, processed, theta, chunks = state
         act = active_rows(state)  # finished queries idle below
-        rub = remaining_ub(processed)
-        ub_c, b_c = _select(rub, block_budget)  # [B, budget]
-        live = ub_c > theta[:, None]  # only these can change the top-k
-        s_c, d_c = _score(b_c)  # [B, budget, bs]
-        s_c = jnp.where(live[..., None], s_c, -jnp.inf)
-        new_s, new_i = merge_topk(
-            pool_s, pool_i, s_c.reshape(B, -1), d_c.reshape(B, -1).astype(jnp.int32), k
-        )
-        new_theta = new_s[:, k - 1]
-        new_processed = processed.at[rows, b_c].set(
-            processed[rows, b_c] | live
+        new_s, new_i, new_theta, new_processed = _chunk_step(
+            pool_s, pool_i, processed, theta
         )
         # per-query masking: inactive rows keep their state bit-for-bit
         pool_s = jnp.where(act[:, None], new_s, pool_s)

@@ -1,0 +1,3 @@
+"""Fused DAAT phase-2 chunk step: select + score + merge in one VMEM pass."""
+from repro.kernels.chunk_step.ops import chunk_step_batched  # noqa: F401
+from repro.kernels.chunk_step.ref import chunk_step_batched_ref  # noqa: F401

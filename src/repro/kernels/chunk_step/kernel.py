@@ -1,0 +1,196 @@
+"""Pallas TPU kernel: fused DAAT phase-2 chunk step (select+score+merge).
+
+One while_loop trip of the batched Block-Max engine used to be THREE kernel
+launches (``block_topk_batched`` selection, ``sparse_score_batched`` scoring,
+then the jnp ``merge_topk``), with the ``[B, budget, bs]`` score tensor and
+the remaining-ub selection finalists round-tripping HBM between them — traffic
+a skipping-hostile (wacky-weight) workload multiplies by its trip count. This
+kernel fuses the whole chunk step into one batch-gridded pass:
+
+  * remaining-ub top-``budget`` block selection (``lax.top_k`` over the
+    per-query ub row, processed blocks masked to ``-inf``);
+  * live gating (``ub_c > theta`` — only these can change the top-k);
+  * sparse scoring of the selected doc blocks (the ``sparse_score``
+    match-and-accumulate contraction, vocabulary-free);
+  * candidate merge into the per-query top-k pool + the new threshold.
+
+Chunk state — the pool scores/ids, theta, the candidate tile, and the
+processed-bitmap row — lives in VMEM for the whole doc-block revisiting loop;
+only the updated state (pool, theta, processed) is written back. The selected
+blocks' doc-major rows are pulled from the HBM-resident store with
+double-buffered ``make_async_copy`` DMAs: while block ``j`` is being scored,
+block ``j+1``'s ``[bs, Tmax]`` term/weight rows are already in flight, so the
+gather latency hides behind the one-hot contraction.
+
+Parity contract (the engine's ``fused_chunk`` flag relies on it): the kernel
+evaluates the numerically identical expressions, in the same order, as the
+jnp while-body in ``repro.core.daat`` — selection tie order is ``lax.top_k``'s
+(ties resolve to the lowest block id; the ``-inf`` pad lanes the ops wrapper
+appends sit at the highest ids, so they never displace a real block while
+``budget <= n_blocks``), the merge concatenates pool-then-candidates exactly
+like ``merge_topk``, and non-live / padded-doc candidates mask to ``-inf``
+before the merge. Doc ids, theta, and the processed bitmap are bit-identical
+to the jnp body; scores agree to f32 reassociation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_step_kernel_batched(
+    ub_ref,
+    proc_ref,
+    pool_s_ref,
+    pool_i_ref,
+    theta_ref,
+    qt_ref,
+    qw_ref,
+    dt_hbm,
+    dw_hbm,
+    out_s_ref,
+    out_i_ref,
+    out_theta_ref,
+    out_proc_ref,
+    dt_buf,
+    dw_buf,
+    cand_ref,
+    sems,
+    *,
+    budget: int,
+    bs: int,
+    n_live: int,
+):
+    # ---- select: remaining-ub top-budget, entirely from the VMEM ub row ----
+    ub = ub_ref[0, :]  # f32[NBp]
+    proc = proc_ref[0, :]  # i32[NBp] (1 = processed / pad)
+    theta = theta_ref[0, 0]
+    rub = jnp.where(proc != 0, -jnp.inf, ub)
+    ub_c, b_c = jax.lax.top_k(rub, budget)  # [budget], ties -> lowest block id
+    live = ub_c > theta  # only these can change the top-k
+
+    qt = qt_ref[0, :]  # i32[Lq]
+    qw = qw_ref[0, :].astype(jnp.float32)
+
+    # ---- score: doc-block revisiting loop, double-buffered HBM prefetch ----
+    def doc_dma(slot, j):
+        row0 = b_c[j] * bs
+        return (
+            pltpu.make_async_copy(
+                dt_hbm.at[pl.ds(row0, bs), :], dt_buf.at[slot], sems.at[slot, 0]
+            ),
+            pltpu.make_async_copy(
+                dw_hbm.at[pl.ds(row0, bs), :], dw_buf.at[slot], sems.at[slot, 1]
+            ),
+        )
+
+    for c in doc_dma(0, 0):  # warm up the pipeline
+        c.start()
+    for j in range(budget):
+        slot = j % 2
+        if j + 1 < budget:  # prefetch the next block while scoring this one
+            for c in doc_dma((j + 1) % 2, j + 1):
+                c.start()
+        for c in doc_dma(slot, j):
+            c.wait()
+        terms = dt_buf[slot]  # i32[bs, Tmax]
+        w = dw_buf[slot].astype(jnp.float32)
+        tmax = terms.shape[-1]
+        # the sparse_score contraction: term match -> one-hot -> MXU
+        onehot = (terms.reshape(bs * tmax, 1) == qt[None, :]).astype(jnp.float32)
+        qv = jnp.dot(onehot, qw[:, None], preferred_element_type=jnp.float32)
+        s = jnp.sum(qv.reshape(bs, tmax) * w, axis=-1)  # f32[bs]
+        docs = b_c[j] * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+        s = jnp.where(docs < n_live, s, -jnp.inf)  # padded docs never rank
+        s = jnp.where(live[j], s, -jnp.inf)  # dead blocks contribute nothing
+        cand_ref[j, :] = s
+
+    # ---- merge: pool + candidates -> new pool/theta (merge_topk order) ----
+    k = pool_s_ref.shape[1]
+    d_flat = (
+        b_c[:, None] * bs + jax.lax.broadcasted_iota(jnp.int32, (budget, bs), 1)
+    ).reshape(-1)
+    all_s = jnp.concatenate([pool_s_ref[0, :], cand_ref[...].reshape(-1)])
+    all_i = jnp.concatenate([pool_i_ref[0, :], d_flat.astype(jnp.int32)])
+    ms, mpos = jax.lax.top_k(all_s, k)
+    out_s_ref[0, :] = ms
+    out_i_ref[0, :] = jnp.take(all_i, mpos)
+    out_theta_ref[0, 0] = ms[k - 1]
+
+    # ---- processed |= live-selected blocks (top_k ids are distinct) ----
+    nbp = proc.shape[0]
+    hit = (jax.lax.broadcasted_iota(jnp.int32, (budget, nbp), 1) == b_c[:, None]) & live[
+        :, None
+    ]
+    out_proc_ref[0, :] = jnp.maximum(proc, jnp.any(hit, axis=0).astype(proc.dtype))
+
+
+def chunk_step_batched_kernel(
+    ub: jax.Array,  # f32[B, NBp] (pad lanes = -inf)
+    processed: jax.Array,  # i32[B, NBp] (pad lanes = 1)
+    pool_s: jax.Array,  # f32[B, k]
+    pool_i: jax.Array,  # i32[B, k]
+    theta: jax.Array,  # f32[B, 1]
+    q_terms: jax.Array,  # i32[B, Lq]
+    q_weights: jax.Array,  # f32[B, Lq] (pad slots already zeroed)
+    doc_terms: jax.Array,  # i32[n_docs_pad, Tmax] — stays in HBM, DMA'd
+    doc_weights: jax.Array,  # f32[n_docs_pad, Tmax] — stays in HBM, DMA'd
+    *,
+    budget: int,
+    bs: int,
+    n_live: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused phase-2 chunk step for a whole query batch: grid over B.
+
+    Returns ``(pool_s, pool_i, theta, processed)`` — the only arrays that
+    cross the HBM boundary per trip. The ``[B, budget, bs]`` candidate score
+    tensor and the selection finalists never leave VMEM.
+    """
+    B, nbp = ub.shape
+    k = pool_s.shape[1]
+    lq = q_terms.shape[1]
+    tmax = doc_terms.shape[1]
+
+    row = lambda b: (b, 0)  # noqa: E731 — one query row per grid cell
+    out = pl.pallas_call(
+        functools.partial(
+            _chunk_step_kernel_batched, budget=budget, bs=bs, n_live=n_live
+        ),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, nbp), row),
+            pl.BlockSpec((1, nbp), row),
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, 1), row),
+            pl.BlockSpec((1, lq), row),
+            pl.BlockSpec((1, lq), row),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # doc-major store: DMA only
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, 1), row),
+            pl.BlockSpec((1, nbp), row),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, nbp), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bs, tmax), jnp.int32),  # double-buffered doc terms
+            pltpu.VMEM((2, bs, tmax), jnp.float32),  # double-buffered doc weights
+            pltpu.VMEM((budget, bs), jnp.float32),  # candidate score tile
+            pltpu.SemaphoreType.DMA((2, 2)),  # (slot, terms/weights)
+        ],
+        interpret=interpret,
+    )(ub, processed, pool_s, pool_i, theta, q_terms, q_weights, doc_terms, doc_weights)
+    return out[0], out[1], out[2], out[3]

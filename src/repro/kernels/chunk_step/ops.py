@@ -1,0 +1,82 @@
+"""jit'd wrapper around the fused DAAT chunk-step Pallas kernel.
+
+Handles the engine <-> kernel interface impedance: the processed set is a
+bool bitmap on the engine side but an i32 row inside the kernel (Mosaic has
+no bool VMEM tiles), the block axis is padded to the 128-lane multiple
+(pad lanes carry ``ub = -inf`` / ``processed = 1`` so they can never be
+selected ahead of a real block — ``lax.top_k`` breaks ``-inf`` ties toward
+the lowest id, and every real block id sorts before every pad id), and
+interpret-mode selection mirrors the other kernel packages so one call site
+serves CPU tests and TPU deployments.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_step.kernel import chunk_step_batched_kernel
+from repro.kernels.common import interpret_default, pad_axis
+
+
+@partial(
+    jax.jit,
+    static_argnames=("block_budget", "block_size", "n_live", "interpret"),
+)
+def chunk_step_batched(
+    doc_terms: jax.Array,
+    doc_weights: jax.Array,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    ub: jax.Array,
+    processed: jax.Array,
+    pool_s: jax.Array,
+    pool_i: jax.Array,
+    theta: jax.Array,
+    *,
+    block_budget: int,
+    block_size: int,
+    n_live: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused phase-2 chunk step over the whole ``[B, ...]`` state.
+
+    Args mirror the engine's while-loop state plus the phase-0 products:
+      doc_terms/doc_weights: the HBM doc-major store ``[n_docs_pad, Tmax]``.
+      q_terms/q_weights: ``[B, Lq]``; weight-``<=0`` slots must be zeroed.
+      ub: ``f32[B, n_blocks]`` additive block upper bounds (phase 0).
+      processed: ``bool[B, n_blocks]`` blocks already scored.
+      pool_s/pool_i: the current top-k pool ``[B, k]``.
+      theta: ``f32[B]`` current thresholds.
+
+    Returns ``(pool_s, pool_i, theta, processed)`` with identical shapes and
+    dtypes to the inputs — a drop-in replacement for the jnp while-body's
+    select+score+merge (see :mod:`repro.kernels.chunk_step.ref`).
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    B, nb = ub.shape
+    if block_budget > nb:
+        raise ValueError(
+            f"block_budget={block_budget} exceeds n_blocks={nb}; the engine "
+            "clamps budgets before the loop"
+        )
+    ubp = pad_axis(ub.astype(jnp.float32), 1, 128, fill=-jnp.inf)
+    procp = pad_axis(processed.astype(jnp.int32), 1, 128, fill=1)
+    ps, pi, th, pr = chunk_step_batched_kernel(
+        ubp,
+        procp,
+        pool_s.astype(jnp.float32),
+        pool_i.astype(jnp.int32),
+        theta.astype(jnp.float32).reshape(B, 1),
+        q_terms.astype(jnp.int32),
+        q_weights.astype(jnp.float32),
+        doc_terms,
+        doc_weights,
+        budget=block_budget,
+        bs=block_size,
+        n_live=n_live,
+        interpret=interpret,
+    )
+    return ps, pi, th[:, 0], pr[:, :nb].astype(jnp.bool_)

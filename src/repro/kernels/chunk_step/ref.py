@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the fused chunk-step kernel.
+
+This is the batched DAAT engine's phase-2 while-body, verbatim: the exact
+selection (``lax.top_k`` over the masked ub row), the exact ``score_blocks``
+gather-reduce through a dense query vector, and the exact ``merge_topk``
+pool+candidates concatenation. The fused kernel must be indistinguishable
+from this function in doc ids, theta, and the processed bitmap (bitwise),
+and in scores to f32 reassociation — which is exactly the engine-level
+``fused_chunk`` parity contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_step_batched_ref(
+    doc_terms: jax.Array,  # i32[n_docs_pad, Tmax] (pad slot term = n_terms)
+    doc_weights: jax.Array,  # f32[n_docs_pad, Tmax]
+    q_terms: jax.Array,  # i32[B, Lq]
+    q_weights: jax.Array,  # f32[B, Lq] (slots with weight <= 0 are padding)
+    ub: jax.Array,  # f32[B, n_blocks]
+    processed: jax.Array,  # bool[B, n_blocks]
+    pool_s: jax.Array,  # f32[B, k]
+    pool_i: jax.Array,  # i32[B, k]
+    theta: jax.Array,  # f32[B]
+    *,
+    block_budget: int,
+    block_size: int,
+    n_live: int,
+    n_terms: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One jnp chunk step; returns ``(pool_s, pool_i, theta, processed)``."""
+    B = q_terms.shape[0]
+    k = pool_s.shape[-1]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+
+    # dense query vectors over V+1 slots — repro.core.daat.query_vectors
+    safe = jnp.where(q_weights > 0, q_terms, n_terms)
+    qvec = jnp.zeros((B, n_terms + 1), jnp.float32)
+    qvec = qvec.at[rows, safe].add(q_weights.astype(jnp.float32))
+    qvec = qvec.at[:, n_terms].set(0.0)
+
+    rub = jnp.where(processed, -jnp.inf, ub)
+    ub_c, b_c = jax.lax.top_k(rub, block_budget)  # [B, budget]
+    live = ub_c > theta[:, None]
+
+    # score_blocks: gather the doc-major rows, reduce against qvec
+    docs = b_c[..., :, None] * block_size + jnp.arange(block_size, dtype=jnp.int32)
+    terms = doc_terms[docs]  # [B, budget, bs, Tmax]
+    w = doc_weights[docs]
+    qv = qvec[rows[..., None, None], terms]
+    s_c = jnp.sum(qv * w, axis=-1)
+    s_c = jnp.where(docs < n_live, s_c, -jnp.inf)
+    s_c = jnp.where(live[..., None], s_c, -jnp.inf)
+
+    # merge_topk: pool first, candidates after — the tie order the kernel keeps
+    all_s = jnp.concatenate([pool_s, s_c.reshape(B, -1)], axis=-1)
+    all_i = jnp.concatenate([pool_i, docs.reshape(B, -1).astype(jnp.int32)], axis=-1)
+    ms, mpos = jax.lax.top_k(all_s, k)
+    new_i = jnp.take_along_axis(all_i, mpos, axis=-1)
+    new_theta = ms[:, k - 1]
+    new_processed = processed.at[rows, b_c].set(processed[rows, b_c] | live)
+    return ms, new_i, new_theta, new_processed

@@ -63,6 +63,11 @@ def main() -> None:
         help="DAAT: route phase 2 through the batched Pallas kernels",
     )
     ap.add_argument(
+        "--daat-fused-chunk", action="store_true",
+        help="DAAT: fuse each phase-2 trip's select+score+merge into the "
+        "single VMEM-resident chunk_step kernel (needs --daat-use-kernels)",
+    )
+    ap.add_argument(
         "--lq-buckets", type=_csv_ints, default=None, metavar="W1,W2,...",
         help="Lq bucket widths: pad each batch to the smallest covering "
         "bucket (one executable per (config, bucket); bit-identical results)",
@@ -93,6 +98,8 @@ def main() -> None:
         ap.error("--fused-topk is a SAAT scatter fusion; use --engine saat")
     if args.daat_use_kernels and args.engine != "daat":
         ap.error("--daat-use-kernels selects DAAT kernels; use --engine daat")
+    if args.daat_fused_chunk and not args.daat_use_kernels:
+        ap.error("--daat-fused-chunk fuses the kernel chunk step; add --daat-use-kernels")
     if args.engine == "daat" and (args.deadline_ms is not None or args.rho is not None):
         ap.error("--deadline-ms/--rho are SAAT budgets; the daat engine cannot honor them")
 
@@ -111,6 +118,7 @@ def main() -> None:
         fused_topk=args.fused_topk,
         daat_est_blocks=args.daat_est_blocks, daat_block_budget=args.daat_block_budget,
         daat_use_kernels=args.daat_use_kernels,
+        daat_fused_chunk=args.daat_fused_chunk,
         lq_buckets=args.lq_buckets,
     )
     if args.queue:

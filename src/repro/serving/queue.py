@@ -26,8 +26,13 @@ Coalescing policy
     Completions may therefore permute *within one flush* — never across
     flushes. This is the "reordered-beyond-policy" boundary the tests pin.
   * A flush uses the smallest allowed batch shape that covers the pending
-    prefix; missing rows are padded by repeating the last request (row
-    results for real requests are independent of pad rows in both engines).
+    prefix; missing rows are *inert sentinel rows* (all pad term ids, zero
+    weights). A sentinel row has no survivors and idles after the first
+    trip, so a short DAAT flush never burns while_loop work re-scoring a
+    duplicated request; real-row results are independent of pad rows in
+    both engines, and only the ``n_real`` real rows ever reach the
+    ``SurvivorPredictor`` or the shape-keyed service-time EMA's per-request
+    accounting.
 
 Flush-time policy
 -----------------
@@ -296,10 +301,12 @@ class AdmissionQueue:
             # sit in one batch so the while_loop tail tracks the batch, not
             # the stream (stable sort: FIFO among equal predictions)
             batch.sort(key=lambda r: self.survivors.predict(r.lq_eff))
-        rows = batch + [batch[-1]] * (shape - n)  # pad rows: repeat last request
+        # rows [n:] stay inert sentinels (all pad ids, zero weights): cheaper
+        # than repeating the last request, which burned DAAT while_loop work
+        # on a duplicate's survivors
         qt = np.full((shape, bucket), self.server.index.n_terms, dtype=np.int32)
         qw = np.zeros((shape, bucket), dtype=np.float32)
-        for i, r in enumerate(rows):
+        for i, r in enumerate(batch):
             t, w = pad_to_width(r.q_terms, r.q_weights, bucket, self.server.index.n_terms)
             qt[i], qw[i] = t, w
         r_oldest = min(batch, key=lambda r: r.deadline_s)

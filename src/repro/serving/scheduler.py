@@ -36,6 +36,7 @@ Two serving-layer properties make the continuous-batching admission queue
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Optional, Sequence
 
@@ -72,6 +73,10 @@ class ServingConfig:
     # route DAAT phase 2 through the batched Pallas kernels (block_prune /
     # block_topk / sparse_score); False keeps the jnp oracle formulation
     daat_use_kernels: bool = False
+    # fuse every phase-2 trip's select+score+merge into the single
+    # VMEM-resident chunk_step kernel (requires daat_use_kernels=True);
+    # per-trip HBM traffic drops to the candidate/state output only
+    daat_fused_chunk: bool = False
     # Lq bucket widths: each batch is padded to the smallest bucket covering
     # its live terms (one executable per (config, bucket) pair, bit-identical
     # results); None pads to whatever width the caller sends
@@ -84,10 +89,16 @@ class _CostModel:
 
     ``clock`` stamps each level's last calibration time so staleness is
     observable (and so calibration itself is testable on a simulated clock).
-    A level is *calibrated* once it has been directly measured; predictions
-    for unmeasured levels extrapolate from the nearest measured one and
-    ``predict_us`` returns ``None`` only when nothing has been measured at
-    all — callers must treat that as "unknown", never as "free".
+    A level is *calibrated* once it has been directly measured. Predictions
+    for unmeasured levels interpolate piecewise-linearly in *total cost*
+    between the two bracketing calibrated levels; outside the calibrated
+    range the boundary level's per-Mpost rate extrapolates linearly (the
+    clamp). The old nearest-level-times-``rho/level`` rule mispredicted
+    wildly across the ladder whenever only a far level was calibrated — a
+    fixed per-call overhead measured at rho=100k, scaled x100, is not the
+    cost of rho=10M. ``predict_us`` returns ``None`` only when nothing has
+    been measured at all — callers must treat that as "unknown", never as
+    "free".
     """
 
     us_per_mpost: dict
@@ -107,9 +118,19 @@ class _CostModel:
     def predict_us(self, rho: int) -> Optional[float]:
         if not self.us_per_mpost:
             return None
-        # nearest calibrated level
-        lvl = min(self.us_per_mpost, key=lambda r: abs(r - rho))
-        return self.us_per_mpost[lvl] * rho / 1e6
+        levels = sorted(self.us_per_mpost)
+        # outside the calibrated range: clamp to the boundary level's RATE
+        # (linear in rho from the nearest end — there is nothing to bracket)
+        if rho <= levels[0]:
+            return self.us_per_mpost[levels[0]] * rho / 1e6
+        if rho >= levels[-1]:
+            return self.us_per_mpost[levels[-1]] * rho / 1e6
+        hi_ix = bisect.bisect_left(levels, rho)
+        lo, hi = levels[hi_ix - 1], levels[hi_ix]
+        total_lo = self.us_per_mpost[lo] * lo / 1e6
+        total_hi = self.us_per_mpost[hi] * hi / 1e6
+        frac = (rho - lo) / (hi - lo)
+        return total_lo + frac * (total_hi - total_lo)
 
 
 class AnytimeServer:
@@ -124,6 +145,11 @@ class AnytimeServer:
     def __init__(self, index: ImpactIndex, cfg: ServingConfig, clock: Optional[Clock] = None):
         if cfg.engine not in ("saat", "daat"):
             raise ValueError(f"unknown engine {cfg.engine!r}")
+        if cfg.daat_fused_chunk and not cfg.daat_use_kernels:
+            raise ValueError(
+                "daat_fused_chunk fuses the kernel-mode chunk step; set "
+                "daat_use_kernels=True"
+            )
         self.index = index
         self.cfg = cfg
         self.clock: Clock = clock if clock is not None else SystemClock()
@@ -133,10 +159,13 @@ class AnytimeServer:
         self._latencies_ms: list[float] = []
         self._rhos: list[int] = []
         self._cost = _CostModel({}, cfg.ema_alpha, clock=self.clock)
-        # per-query-ms EMA keyed by (engine, Lq bucket): the admission
-        # queue's service-time estimate for flush scheduling (DAAT has no rho
+        # whole-batch wall-ms EMA keyed by (engine, Lq bucket, batch shape):
+        # a batch runs as ONE executable whose wall time is far from linear
+        # in B (plan/gather amortize, the DAAT while_loop runs to the slowest
+        # row), so the admission queue's service-time estimate is learned per
+        # compiled shape — never extrapolated linearly in B (DAAT has no rho
         # to hang a cost model on; SAAT falls back to the rho model)
-        self._bucket_ms: dict[tuple[str, int], float] = {}
+        self._bucket_ms: dict[tuple[str, int, int], float] = {}
         self.lq_buckets = (
             normalize_buckets(cfg.lq_buckets) if cfg.lq_buckets is not None else None
         )
@@ -178,24 +207,44 @@ class AnytimeServer:
     def predict_service_ms(self, n_queries: int, lq_bucket: int, rho: Optional[int] = None) -> float:
         """Predicted wall time to serve an ``[n_queries, lq_bucket]`` batch.
 
-        Prefers the per-(engine, bucket) EMA (observed whole-batch behavior,
-        including bucket-dependent gather cost); falls back to the rho cost
-        model for SAAT. Returns 0.0 when nothing is calibrated yet — the
-        admission queue then flushes exactly at the deadline, which is the
-        conservative policy for an unknown service time.
+        Prefers the per-(engine, bucket, batch-shape) EMA of observed
+        whole-batch wall times: a batch is ONE executable, so its cost is far
+        from linear in B and the old per-query-EMA-times-``n_queries`` rule
+        systematically over-predicted large-shape flushes. When the exact
+        shape is uncalibrated, the nearest calibrated shape in the same
+        (engine, bucket) lane stands in: unscaled when predicting a smaller
+        shape (a smaller batch can only be cheaper — over-predicting is
+        safe), ratio-scaled upward when predicting a LARGER shape (flushing
+        early is safe; under-predicting an unmeasured big executable would
+        turn the cold start into deadline violations). Once a shape is
+        observed its exact key takes over. SAAT falls back
+        to the rho cost model only when no shape is calibrated at all, and
+        the result is 0.0 when nothing is known — the admission queue then
+        flushes exactly at the deadline, which is the conservative policy for
+        an unknown service time.
         """
-        key = (self.cfg.engine, int(lq_bucket))
-        per_query_ms = self._bucket_ms.get(key)
-        if per_query_ms is None and self.cfg.engine == "saat":
+        eng, bucket, shape = self.cfg.engine, int(lq_bucket), int(n_queries)
+        batch_ms = self._bucket_ms.get((eng, bucket, shape))
+        if batch_ms is not None:
+            return batch_ms
+        shapes = [b for (e, bk, b) in self._bucket_ms if e == eng and bk == bucket]
+        if shapes:
+            nearest = min(shapes, key=lambda b: (abs(b - shape), b))
+            batch_ms = self._bucket_ms[(eng, bucket, nearest)]
+            if shape > nearest:  # conservative upper bound, never a late flush
+                return batch_ms * shape / nearest
+            return batch_ms
+        if eng == "saat":
             pred_us = self._cost.predict_us(rho if rho is not None else self.pick_rho())
-            per_query_ms = None if pred_us is None else pred_us / 1e3
-        return 0.0 if per_query_ms is None else per_query_ms * n_queries
+            if pred_us is not None:
+                return pred_us / 1e3 * n_queries
+        return 0.0
 
-    def _observe_bucket_ms(self, lq_bucket: int, per_query_ms: float):
-        key = (self.cfg.engine, int(lq_bucket))
+    def _observe_bucket_ms(self, lq_bucket: int, batch_shape: int, batch_ms: float):
+        key = (self.cfg.engine, int(lq_bucket), int(batch_shape))
         old = self._bucket_ms.get(key)
         a = self.cfg.ema_alpha
-        self._bucket_ms[key] = per_query_ms if old is None else (1 - a) * old + a * per_query_ms
+        self._bucket_ms[key] = batch_ms if old is None else (1 - a) * old + a * batch_ms
 
     # ----------------------------- serving --------------------------------
 
@@ -210,6 +259,7 @@ class AnytimeServer:
             max_bm_per_term=self.max_bm,
             exact=self.cfg.daat_exact,
             use_kernels=self.cfg.daat_use_kernels,
+            fused_chunk=self.cfg.daat_fused_chunk,
         )
 
     def _bucketize(self, q_terms, q_weights) -> tuple[jax.Array, jax.Array, int]:
@@ -232,10 +282,11 @@ class AnytimeServer:
             q_terms, q_weights, bucket = self._bucketize(q_terms, q_weights)
             res = self._daat_search(q_terms, q_weights)
             jax.block_until_ready(res.scores)
-            per_query = (self.clock.now() - t0) * 1e3 / q_terms.shape[0]
+            elapsed = (self.clock.now() - t0) * 1e3
+            per_query = elapsed / q_terms.shape[0]
             self._latencies_ms.extend([per_query] * q_terms.shape[0])
             self._rhos.extend([0] * q_terms.shape[0])
-            self._observe_bucket_ms(bucket, per_query)
+            self._observe_bucket_ms(bucket, q_terms.shape[0], elapsed)
             return res
         # an explicit rho must be a real ladder level: `rho or pick_rho()`
         # silently routed rho=0 (any falsy budget) to the controller
@@ -265,7 +316,7 @@ class AnytimeServer:
             self._latencies_ms.append(per_query)
             self._rhos.append(rho)
         self._cost.update(rho, per_query * 1e3)
-        self._observe_bucket_ms(bucket, per_query)
+        self._observe_bucket_ms(bucket, q_terms.shape[0], elapsed)
         return res
 
     def warmup(
@@ -299,8 +350,8 @@ class AnytimeServer:
                     for _ in range(repeats):
                         t0 = self.clock.now()
                         jax.block_until_ready(self._daat_search(qt, qw).scores)
-                        per_query_ms = (self.clock.now() - t0) * 1e3 / B
-                    self._observe_bucket_ms(bucket, per_query_ms)
+                        batch_ms = (self.clock.now() - t0) * 1e3
+                    self._observe_bucket_ms(bucket, B, batch_ms)
                     continue
                 for rho in self.rho_ladder:
                     for _ in range(repeats):
@@ -316,9 +367,9 @@ class AnytimeServer:
                             fused_topk=self.cfg.fused_topk,
                         )
                         jax.block_until_ready(res.scores)
-                        per_query_us = (self.clock.now() - t0) * 1e6 / B
-                    self._cost.update(rho, per_query_us)
-                    self._observe_bucket_ms(bucket, per_query_us / 1e3)
+                        batch_ms = (self.clock.now() - t0) * 1e3
+                    self._cost.update(rho, batch_ms * 1e3 / B)
+                    self._observe_bucket_ms(bucket, B, batch_ms)
 
     def stats(self) -> LatencyStats:
         return summarize_latencies(self._latencies_ms)

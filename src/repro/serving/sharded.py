@@ -183,6 +183,7 @@ def make_sharded_serve_step(
     max_bm_per_term: int = 0,
     daat_exact: bool = True,
     daat_use_kernels: bool = False,
+    daat_fused_chunk: bool = False,
 ):
     """Builds ``serve(index_stack, q_terms, q_weights) -> (scores, ids)``.
 
@@ -204,12 +205,20 @@ def make_sharded_serve_step(
     ``fused_topk=True`` makes every rank's SAAT scan emit only its
     ``[B, blocks * k]`` candidate pool from VMEM (the per-shard accumulator
     never reaches HBM) before the cross-shard k-merge; ``daat_use_kernels``
-    routes each rank's DAAT phase 2 through the batched Pallas kernels.
+    routes each rank's DAAT phase 2 through the batched Pallas kernels, and
+    ``daat_fused_chunk`` collapses each rank's per-trip select+score+merge
+    into the single VMEM-resident ``chunk_step`` kernel (per-trip HBM traffic
+    on every rank drops to the candidate/state output only).
     """
     if engine not in ("saat", "daat"):
         raise ValueError(f"unknown engine {engine!r}")
     if engine == "daat" and max_bm_per_term <= 0:
         raise ValueError("engine='daat' needs the static max_bm_per_term bound")
+    if daat_fused_chunk and not daat_use_kernels:
+        raise ValueError(
+            "daat_fused_chunk fuses the kernel-mode chunk step; pass "
+            "daat_use_kernels=True"
+        )
     axes = mesh_axes(mesh)
     dp = axes.data if len(axes.data) > 1 else axes.data[0]
     idx_specs = jax.tree.map(lambda _: P("model"), _index_data_template())
@@ -237,6 +246,7 @@ def make_sharded_serve_step(
                     max_bm_per_term=max_bm_per_term,
                     exact=daat_exact,
                     use_kernels=daat_use_kernels,
+                    fused_chunk=daat_fused_chunk,
                 )
             else:
                 res = saat_search(

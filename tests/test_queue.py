@@ -125,9 +125,9 @@ def test_bucketed_server_serves_smaller_executables(bm25_index, bm25_queries):
         bm25_index, ServingConfig(k=5, rho_ladder=EXACT, lq_buckets=(2, qt.shape[1]))
     )
     srv.search_batch(jnp.asarray(qt[:4, :2]), jnp.asarray(qw[:4, :2]))
-    assert ("saat", 2) in srv._bucket_ms  # narrow bucket was exercised
+    assert ("saat", 2, 4) in srv._bucket_ms  # narrow bucket was exercised
     srv.search_batch(jnp.asarray(qt[:4]), jnp.asarray(qw[:4]))
-    assert ("saat", qt.shape[1]) in srv._bucket_ms
+    assert ("saat", qt.shape[1], 4) in srv._bucket_ms
 
 
 def test_warmup_calibrates_every_bucket_from_a_wide_sample(bm25_index, bm25_queries):
@@ -139,7 +139,7 @@ def test_warmup_calibrates_every_bucket_from_a_wide_sample(bm25_index, bm25_quer
         bm25_index, ServingConfig(k=5, rho_ladder=EXACT, lq_buckets=(2, 4, L))
     )
     srv.warmup(jnp.asarray(qt[:4]), jnp.asarray(qw[:4]), batch_sizes=(4,))
-    assert {b for (_, b) in srv._bucket_ms} == {2, 4, L}
+    assert {b for (_, b, _) in srv._bucket_ms} == {2, 4, L}
 
 
 def test_bucketed_sharded_serve_matches_exhaustive(tiny_corpus, bm25_collection, bm25_index, bm25_queries):
@@ -380,7 +380,7 @@ def test_queue_separates_infeasible_from_violation(bm25_index, bm25_queries):
     clock = SimulatedClock()
     srv = _queue_server(bm25_index, qt.shape[1], clock=clock)
     # make service expensive in the model's eyes: 50 ms predicted per flush
-    srv._bucket_ms[("saat", 4)] = 25.0  # x shape 2 = 50 ms
+    srv._bucket_ms[("saat", 4, 2)] = 50.0  # whole-batch wall ms at shape 2
     q = AdmissionQueue(srv, batch_shapes=(2,), clock=clock)
     t3, w3 = np.array([1, 2, 3], np.int32), np.ones(3, np.float32)
     # infeasible: 10 ms budget < 50 ms predicted -> due is before arrival
@@ -393,6 +393,48 @@ def test_queue_separates_infeasible_from_violation(bm25_index, bm25_queries):
     q.poll()
     assert q.flush_log[-1].violation and not q.flush_log[-1].infeasible
     assert q.n_violations == 1 and q.n_infeasible == 1
+
+
+def test_flush_pads_with_inert_sentinel_rows(bm25_index, bm25_queries):
+    """A short flush pads with all-sentinel rows (pad term ids, zero weights)
+    — never by repeating the last real request, which burned DAAT while_loop
+    work on a duplicate's survivors — and only the n_real rows ever reach the
+    SurvivorPredictor or the per-request accounting."""
+    qt, qw = bm25_queries
+    clock = SimulatedClock()
+    srv = _queue_server(bm25_index, qt.shape[1], engine="daat", clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(4,), clock=clock)
+    captured = {}
+    real_search = srv.search_batch
+
+    def spy(qt_, qw_, rho=None):
+        captured["qt"], captured["qw"] = np.asarray(qt_), np.asarray(qw_)
+        return real_search(qt_, qw_, rho=rho)
+
+    srv.search_batch = spy
+    observed: list = []
+    real_observe = q.survivors.observe
+    q.survivors.observe = lambda lq, s: (observed.append((lq, s)), real_observe(lq, s))[1]
+    t3, w3 = np.array([1, 2, 3], np.int32), np.ones(3, np.float32)
+    q.submit(t3, w3, deadline_ms=10.0)
+    comps = q.drain()
+    assert len(comps) == 1 and captured["qt"].shape[0] == 4
+    n_terms = bm25_index.n_terms
+    # rows past n_real are inert sentinels, not copies of the last request
+    assert np.all(captured["qt"][1:] == n_terms) and np.all(captured["qw"][1:] == 0.0)
+    # only the single real request reached the survivor predictor
+    assert len(observed) == 1 and q.flush_log[-1].n_real == 1
+    # the service-time EMA is keyed by the flushed executable shape
+    assert ("daat", 4, 4) in srv._bucket_ms
+    # and the real row's results are untouched by the sentinel pads
+    ref = AnytimeServer(
+        bm25_index,
+        ServingConfig(k=10, engine="daat", daat_est_blocks=2, daat_block_budget=2),
+    )
+    rt, rw = pad_to_width(t3[None, :], w3[None, :], 4, n_terms)
+    direct = ref.search_batch(jnp.asarray(rt), jnp.asarray(rw))
+    assert np.array_equal(comps[0].doc_ids, np.asarray(direct.doc_ids)[0])
+    assert np.array_equal(comps[0].scores, np.asarray(direct.scores)[0])
 
 
 def test_survivor_predictor_ema():

@@ -118,7 +118,7 @@ def test_run_query_stream_ragged_final_batch(bm25_index, bm25_queries):
 
 
 @pytest.mark.serving
-def test_cost_model_ema_convergence_and_nearest_level():
+def test_cost_model_ema_convergence_and_interpolation():
     from repro.metrics.latency import SimulatedClock
     from repro.serving.scheduler import _CostModel
 
@@ -133,12 +133,86 @@ def test_cost_model_ema_convergence_and_nearest_level():
         m.update(1_000_000, 300.0)
     assert m.predict_us(1_000_000) == pytest.approx(300.0, rel=1e-3)
     assert m.last_update_s[1_000_000] == pytest.approx(40.0)
-    # nearest-level prediction: 2M extrapolates from the 1M measurement...
+    # one calibrated level: rho outside it clamps to that level's RATE
     assert m.predict_us(2_000_000) == pytest.approx(600.0, rel=1e-3)
-    # ...until a closer level exists
-    m.update(10_000_000, 5000.0)  # 500 us / Mpost
-    assert m.predict_us(8_000_000) == pytest.approx(8 * 500.0, rel=1e-3)
-    assert m.predict_us(1_200_000) == pytest.approx(1.2 * 300.0, rel=1e-3)
+    assert m.predict_us(500_000) == pytest.approx(150.0, rel=1e-3)
+    # two calibrated levels: in-between rho interpolates TOTAL cost between
+    # the bracketing levels instead of scaling the nearest level's rate —
+    # the old rule predicted 8 * 500 = 4000 us for 8M, jumping wildly at the
+    # nearest-level boundary; the interpolant is continuous across the ladder
+    m.update(10_000_000, 5000.0)  # total 5000 us at 10M
+    lo, hi = 300.0, 5000.0  # calibrated totals at 1M and 10M
+    assert m.predict_us(8_000_000) == pytest.approx(lo + (hi - lo) * 7 / 9, rel=1e-3)
+    assert m.predict_us(1_200_000) == pytest.approx(lo + (hi - lo) * 0.2 / 9, rel=1e-3)
+    # calibrated levels predict exactly themselves (interpolant hits knots)
+    assert m.predict_us(10_000_000) == pytest.approx(5000.0, rel=1e-3)
+    # beyond the top level: clamp to the top level's rate
+    assert m.predict_us(20_000_000) == pytest.approx(10_000.0, rel=1e-3)
+
+
+class _ScriptedClock:
+    """Clock whose now() returns a scripted sequence (pads with the last)."""
+
+    def __init__(self, times):
+        self.times = list(times)
+        self.i = 0
+
+    def now(self) -> float:
+        t = self.times[min(self.i, len(self.times) - 1)]
+        self.i += 1
+        return t
+
+
+@pytest.mark.serving
+def test_predict_service_ms_is_shape_keyed_not_linear_in_b(bm25_index, bm25_queries):
+    """B=8 and B=32 flushes observing different wall times must produce
+    different, NON-linear-in-B predictions (a batch is one executable; the
+    old per-query EMA x n_queries over-predicted every large-shape flush)."""
+    qt, qw = bm25_queries
+    L = qt.shape[1]
+    # scripted service times: the B=8 batch takes 10 ms, the B=32 batch 16
+    # ms. A SAAT search_batch reads the clock exactly three times (start,
+    # stop, cost-model calibration stamp) — the script covers two calls.
+    clock = _ScriptedClock([0.0, 0.010, 0.010, 0.010, 0.026, 0.026])
+    srv = AnytimeServer(
+        bm25_index,
+        ServingConfig(k=5, rho_ladder=(10**9,), lq_buckets=(L,)),
+        clock=clock,
+    )
+    reps8 = np.resize(np.arange(qt.shape[0]), 8)
+    reps32 = np.resize(np.arange(qt.shape[0]), 32)
+    srv.search_batch(jnp.asarray(qt[reps8]), jnp.asarray(qw[reps8]))
+    srv.search_batch(jnp.asarray(qt[reps32]), jnp.asarray(qw[reps32]))
+    p8 = srv.predict_service_ms(8, L)
+    p32 = srv.predict_service_ms(32, L)
+    assert p8 == pytest.approx(10.0)
+    assert p32 == pytest.approx(16.0)  # observed, NOT 4 * p8 = 40 ms
+    assert p32 != pytest.approx(4 * p8)
+    # nearest-shape fallback: a smaller unseen shape borrows the closest
+    # executable's time unscaled (over-predicts, safe) ...
+    assert srv.predict_service_ms(6, L) == pytest.approx(p8)
+    # ... a LARGER unseen shape ratio-scales up (a conservative upper bound:
+    # under-predicting an unmeasured big executable means late flushes)
+    assert srv.predict_service_ms(40, L) == pytest.approx(p32 * 40 / 32)
+    # an unseen bucket has no shapes: SAAT falls back to the rho model
+    assert srv.predict_service_ms(8, L + 7) >= 0.0
+
+
+@pytest.mark.serving
+def test_observe_bucket_ms_ema_is_per_shape():
+    """EMAs for different shapes never mix."""
+
+    class _Srv(AnytimeServer):  # bypass engine setup; only the EMA matters
+        def __init__(self):
+            self.cfg = ServingConfig()
+            self._bucket_ms = {}
+
+    srv = _Srv()
+    srv._observe_bucket_ms(4, 8, 10.0)
+    srv._observe_bucket_ms(4, 32, 16.0)
+    srv._observe_bucket_ms(4, 8, 10.0)
+    assert srv._bucket_ms[("saat", 4, 8)] == pytest.approx(10.0)
+    assert srv._bucket_ms[("saat", 4, 32)] == pytest.approx(16.0)
 
 
 def test_server_daat_engine_matches_exhaustive(bm25_index, bm25_queries):
@@ -158,6 +232,14 @@ def test_server_daat_engine_matches_exhaustive(bm25_index, bm25_queries):
 def test_server_rejects_unknown_engine(bm25_index):
     with pytest.raises(ValueError, match="engine"):
         AnytimeServer(bm25_index, ServingConfig(engine="bmw"))
+
+
+def test_server_rejects_fused_chunk_without_kernels(bm25_index):
+    """daat_fused_chunk fuses the KERNEL chunk step; jnp mode has no fusion."""
+    with pytest.raises(ValueError, match="daat_use_kernels"):
+        AnytimeServer(
+            bm25_index, ServingConfig(engine="daat", daat_fused_chunk=True)
+        )
 
 
 def test_daat_engine_rejects_explicit_rho(bm25_index, bm25_queries):
