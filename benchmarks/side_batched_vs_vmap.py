@@ -27,6 +27,7 @@ MODEL = "bm25"
 BATCH_SIZES = (1, 8, 32, 64)
 SCATTER = "sort"
 REPEATS = 30
+PARITY_ASSERTED = True  # run() bitwise-compares doc ids before any timing
 
 
 def _timed_samples(fn, qt, qw, repeats: int) -> np.ndarray:

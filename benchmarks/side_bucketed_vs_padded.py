@@ -41,6 +41,7 @@ MIXES = ("short", "long", "mixed")
 SHORT_W = 4
 N_BATCHES = 4
 REPEATS = 5
+PARITY_ASSERTED = True  # run() bitwise-compares doc ids before any timing
 
 
 def _batches(qt: np.ndarray, qw: np.ndarray, B: int, mix: str):

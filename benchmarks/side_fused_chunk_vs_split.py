@@ -52,6 +52,7 @@ BLOCK_BUDGET = 16
 # models at B=32 (skipping collapses -> long while_loop of interpreted
 # launches), so keep the sample count small; on TPU raise this freely
 REPEATS = 3
+PARITY_ASSERTED = True  # run() bitwise-compares doc ids before any timing
 
 
 def _timed_samples(fn, qt, qw, repeats: int) -> np.ndarray:

@@ -1,0 +1,28 @@
+"""Static analysis for the Pallas/serving stack.
+
+Two passes, one CLI (``python -m repro.analysis.check``):
+
+  * :mod:`repro.analysis.kernel_contracts` — traces every kernel package's
+    declared ``KernelContract`` shape grid and verifies VMEM budgets,
+    grid/BlockSpec divisibility, and DMA start/wait discipline;
+  * :mod:`repro.analysis.hot_path` — traces the serving executables behind
+    ``ServingConfig``/``make_bucketed_serve_step`` and flags host
+    syncs/callbacks, dtype/weak-type drift, and executable-cache forks.
+
+Both passes work on jaxprs only: no kernel executes, no device is needed,
+and CPU CI covers the TPU contracts.
+"""
+from repro.analysis.hot_path import (  # noqa: F401
+    check_dtype_discipline,
+    check_host_sync,
+    lint_server,
+    lint_sharded_serve,
+    lint_trace,
+)
+from repro.analysis.kernel_contracts import (  # noqa: F401
+    KernelContract,
+    ShapeCase,
+    Violation,
+    all_contracts,
+    check_contract,
+)

@@ -1,0 +1,184 @@
+"""Static-analysis gate: ``python -m repro.analysis.check --all``.
+
+Runs the two trace-time passes over everything checked in:
+
+  * **kernel contracts** — every ``repro.kernels.*`` package's ``CONTRACT``
+    (VMEM budget, DMA happens-before, grid/index-map divisibility) across
+    its declared shape grid; see :mod:`repro.analysis.kernel_contracts`.
+  * **serving hot paths** — the ``AnytimeServer`` executable grid for the
+    full engine/flag matrix plus the sharded+bucketed serve step, on a tiny
+    synthetic probe index; see :mod:`repro.analysis.hot_path`.
+
+Everything is ``jax.make_jaxpr`` over ShapeDtypeStructs: no kernel executes,
+no device memory is allocated beyond the probe index, and the whole gate runs
+in CI's ``analysis`` lane in well under a minute. Exit status is the number
+of violations (0 = clean), each printed as ``[contract / case / check]
+message``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def _probe_index(seed: int = 0, n_docs: int = 220, n_terms: int = 40,
+                 n_postings: int = 1500, block_size: int = 32):
+    """Tiny synthetic impact index: big enough to exercise every phase,
+    small enough that building it dominates nothing."""
+    from repro.core import build_impact_index
+
+    rng = np.random.default_rng(seed)
+    return build_impact_index(
+        rng.integers(0, n_docs, n_postings),
+        rng.integers(0, n_terms, n_postings),
+        rng.uniform(0.1, 5.0, n_postings).astype(np.float32),
+        n_docs,
+        n_terms,
+        block_size=block_size,
+    )
+
+
+def serving_config_matrix(lq_buckets: tuple = (4, 8), k: int = 5):
+    """Every engine/flag combination the serving layer can dispatch.
+
+    One ServingConfig per point of the paper's comparison: SAAT across its
+    scatter implementations and the fused top-k, DAAT across the jnp oracle,
+    kernel-backed phase 2, and the fused chunk step.
+    """
+    from repro.serving.scheduler import ServingConfig
+
+    saat = dict(engine="saat", k=k, rho_ladder=(200, 1000), lq_buckets=lq_buckets)
+    daat = dict(
+        engine="daat", k=k, daat_est_blocks=4, daat_block_budget=4,
+        lq_buckets=lq_buckets,
+    )
+    return (
+        ServingConfig(scatter_impl="jnp", **saat),
+        ServingConfig(scatter_impl="sort", **saat),
+        ServingConfig(scatter_impl="pallas", **saat),
+        ServingConfig(scatter_impl="sort", fused_topk=True, **saat),
+        ServingConfig(**daat),
+        ServingConfig(daat_use_kernels=True, **daat),
+        ServingConfig(daat_use_kernels=True, daat_fused_chunk=True, **daat),
+    )
+
+
+def run_kernel_checks(names: Optional[Sequence[str]] = None) -> list:
+    from repro.analysis.kernel_contracts import all_contracts, check_contract
+
+    contracts = all_contracts()
+    if names:
+        unknown = sorted(set(names) - set(contracts))
+        if unknown:
+            raise SystemExit(
+                f"unknown contract(s) {unknown}; have {sorted(contracts)}"
+            )
+        contracts = {n: contracts[n] for n in names}
+    out = []
+    for name, contract in contracts.items():
+        vs = check_contract(contract)
+        print(f"  contract {name}: {len(contract.shape_grid)} cases, "
+              f"{len(vs)} violations")
+        out.extend(vs)
+    return out
+
+
+def run_serving_checks(batch_sizes: Sequence[int] = (2, 4)) -> list:
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.analysis.hot_path import lint_server, lint_sharded_serve
+    from repro.core.saat import max_segments_per_term
+    from repro.serving.scheduler import AnytimeServer
+    from repro.serving.sharded import (
+        make_bucketed_serve_step, shard_corpus, stack_indexes,
+    )
+
+    index = _probe_index()
+    out = []
+    for cfg in serving_config_matrix():
+        label = f"server:{cfg.engine}:scatter={cfg.scatter_impl}" + (
+            ":fused_topk" if cfg.fused_topk else ""
+        ) + (":kernels" if cfg.daat_use_kernels else "") + (
+            ":fused_chunk" if cfg.daat_fused_chunk else ""
+        )
+        vs = lint_server(
+            AnytimeServer(index, cfg), batch_sizes=batch_sizes, label=label
+        )
+        print(f"  {label}: {len(vs)} violations")
+        out.extend(vs)
+
+    # the pod-scale step: 1-device mesh is enough to trace the shard_map body
+    rng = np.random.default_rng(1)
+    n_docs, n_terms, n_post = 256, 32, 1200
+    shards, docs_per_shard = shard_corpus(
+        rng.integers(0, n_docs, n_post), rng.integers(0, n_terms, n_post),
+        rng.uniform(0.1, 5.0, n_post).astype(np.float32),
+        n_docs, n_terms, 1, block_size=32,
+    )
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    serve, _, _ = make_bucketed_serve_step(
+        mesh, lq_buckets=(4, 8), n_terms=n_terms, k=5, rho_per_shard=500,
+        max_segs_per_term=max_segments_per_term(shards[0]),
+        docs_per_shard=docs_per_shard,
+    )
+    vs = lint_sharded_serve(serve, stack_indexes(shards), batch_sizes=(2,))
+    print(f"  sharded+bucketed serve: {len(vs)} violations")
+    out.extend(vs)
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    p.add_argument("--all", action="store_true",
+                   help="run kernel contracts AND serving hot-path lint")
+    p.add_argument("--kernels", action="store_true",
+                   help="run the kernel contract checker only")
+    p.add_argument("--serving", action="store_true",
+                   help="run the serving hot-path lint only")
+    p.add_argument("--contract", action="append", metavar="NAME",
+                   help="restrict --kernels to the named contract(s)")
+    p.add_argument("--list", action="store_true",
+                   help="list registered contracts and exit")
+    args = p.parse_args(argv)
+
+    if args.list:
+        from repro.analysis.kernel_contracts import all_contracts
+
+        for name, c in sorted(all_contracts().items()):
+            cases = ", ".join(case.name for case in c.shape_grid)
+            print(f"{name}: {c.description or '(no description)'}")
+            print(f"  cases: {cases}")
+            print(f"  vmem limit: {c.vmem_limit_bytes} B, expect_dma={c.expect_dma}")
+        return 0
+
+    do_kernels = args.kernels or args.all or args.contract
+    do_serving = args.serving or args.all
+    if not (do_kernels or do_serving):
+        p.error("pick one of --all / --kernels / --serving / --list")
+
+    violations = []
+    if do_kernels:
+        print("kernel contracts:")
+        violations += run_kernel_checks(args.contract)
+    if do_serving:
+        print("serving hot paths:")
+        violations += run_serving_checks()
+
+    if violations:
+        print(f"\n{len(violations)} violation(s):", file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+    else:
+        print("\nall checks passed")
+    return min(len(violations), 255)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,262 @@
+"""Hot-path purity lint: the serving executables must be pure and cache-stable.
+
+The serving stack's latency story rests on three trace-time invariants that
+nothing at runtime enforces:
+
+  * **No host syncs.** A ``callback``/``infeed``/``outfeed`` primitive inside
+    a served executable stalls the device on the host every dispatch; the
+    paper's predictable-latency claim dies quietly. All host I/O belongs in
+    the host-side wrappers (``AnytimeServer.search_batch``'s timing,
+    ``serve_bucketed``'s numpy bucketization), never under the trace.
+  * **No dtype drift.** jit caches key on dtypes *and* weak-type flags. A
+    caller handing i64 terms or a weak-typed python float forks the compile
+    cache per call site — the admission queue's warmup grid no longer covers
+    serve time and "compiled once" becomes "recompiles at p99".
+  * **One executable per key.** ``AnytimeServer.executable_key`` promises a
+    1:1 map from (engine statics, Lq bucket, B) to compiled programs. The
+    queue's service-time EMA and the warmup grid both break if equal keys
+    can retrace or distinct keys alias.
+
+This module checks all three *statically*: it traces the exact engine
+dispatch (``AnytimeServer.engine_fn``) or sharded serve step
+(``make_sharded_serve_step``'s tagged fns) to a jaxpr at every
+(config, Lq bucket, B) point — ``jax.make_jaxpr`` over ShapeDtypeStructs,
+no arrays, no execution — and lints the result. Run via
+``python -m repro.analysis.check --serving``.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.jaxpr_walk import iter_eqns
+from repro.analysis.kernel_contracts import Violation
+
+# Primitive names (substring match) that force a host round-trip inside a
+# traced computation. "callback" covers pure_callback / io_callback /
+# debug_callback (jax.debug.print's carrier); infeed/outfeed are the raw XLA
+# host-transfer ops.
+FORBIDDEN_PRIMITIVE_SUBSTRINGS = ("callback", "infeed", "outfeed")
+
+
+def check_host_sync(closed_jaxpr, label: str = "<traced>", case: str = "trace"):
+    """Flag host-round-trip primitives anywhere in a traced hot path."""
+    out = []
+    for eqn in iter_eqns(closed_jaxpr.jaxpr):
+        name = eqn.primitive.name
+        if any(s in name for s in FORBIDDEN_PRIMITIVE_SUBSTRINGS):
+            out.append(
+                Violation(
+                    label, case, "host_sync",
+                    f"primitive '{name}' forces a host round-trip inside the "
+                    "served executable; hot paths must stay pure — move the "
+                    "I/O to the host-side wrapper (search_batch / "
+                    "serve_bucketed), not under the trace",
+                )
+            )
+    return out
+
+
+def check_dtype_discipline(closed_jaxpr, label: str = "<traced>", case: str = "trace"):
+    """Flag compile-cache-forking dtypes at the executable boundary.
+
+    Interface avals (invars/outvars) must be strong-typed — a weak-typed
+    input means some call site passed a python scalar and the next strong
+    caller retraces. f64 anywhere in the body means an x64 leak: the same
+    program traced from an x64 context compiles a second, slower executable.
+    """
+    out = []
+    jaxpr = closed_jaxpr.jaxpr
+    for role, atoms in (("input", jaxpr.invars), ("output", jaxpr.outvars)):
+        for i, atom in enumerate(atoms):
+            aval = getattr(atom, "aval", None)
+            if aval is None or not hasattr(aval, "dtype"):
+                continue
+            if getattr(aval, "weak_type", False):
+                out.append(
+                    Violation(
+                        label, case, "weak_type",
+                        f"{role} {i} is weak-typed {aval.dtype}: a python "
+                        "scalar leaked into the executable boundary and every "
+                        "strong-typed caller will silently retrace — "
+                        "canonicalize with jnp.asarray(x, dtype) before "
+                        "dispatch",
+                    )
+                )
+    seen: set = set()
+    for eqn in iter_eqns(jaxpr):
+        for atom in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(atom, "aval", None)
+            dt = getattr(aval, "dtype", None)
+            if dt is None or dt not in (jnp.float64, jnp.complex128):
+                continue
+            key = (eqn.primitive.name, str(dt))
+            if key in seen:
+                continue
+            seen.add(key)
+            out.append(
+                Violation(
+                    label, case, "f64_drift",
+                    f"primitive '{eqn.primitive.name}' touches {dt}: an x64 "
+                    "leak forks the compile cache (and doubles VMEM tiles) — "
+                    "the hot path is an i32/f32 contract",
+                )
+            )
+    return out
+
+
+def fingerprint(closed_jaxpr) -> str:
+    """Stable identity of a traced program (the executable-key invariant)."""
+    return hashlib.sha1(str(closed_jaxpr).encode()).hexdigest()
+
+
+def lint_trace(
+    fn: Callable,
+    args: Sequence,
+    label: str,
+    case: str,
+) -> tuple[list, Optional[str]]:
+    """Trace ``fn(*args)`` and run every purity check. -> (violations, fp).
+
+    Traces TWICE and compares fingerprints: a nondeterministic trace (e.g. a
+    dict-ordering or id()-dependent closure) means equal executable keys do
+    not imply equal programs, which silently defeats the warmup grid.
+    """
+    try:
+        jx = jax.make_jaxpr(fn)(*args)
+    except Exception as e:  # noqa: BLE001 — any trace failure is the finding
+        return (
+            [Violation(label, case, "trace", f"hot path failed to trace: {e!r}")],
+            None,
+        )
+    out = check_host_sync(jx, label, case) + check_dtype_discipline(jx, label, case)
+    fp = fingerprint(jx)
+    if fingerprint(jax.make_jaxpr(fn)(*args)) != fp:
+        out.append(
+            Violation(
+                label, case, "retrace",
+                "tracing the same hot path twice produced different jaxprs; "
+                "the executable cache cannot be warmed for a nondeterministic "
+                "trace",
+            )
+        )
+    return out, fp
+
+
+# --------------------------------------------------------------------------
+# server lint: the AnytimeServer executable grid
+# --------------------------------------------------------------------------
+
+
+def _query_structs(B: int, lq: int):
+    return (
+        jax.ShapeDtypeStruct((B, lq), jnp.int32),
+        jax.ShapeDtypeStruct((B, lq), jnp.float32),
+    )
+
+
+def lint_server(
+    server,
+    *,
+    batch_sizes: Sequence[int] = (2, 4),
+    rhos: Optional[Sequence[Optional[int]]] = None,
+    label: Optional[str] = None,
+) -> list:
+    """Lint every executable an :class:`AnytimeServer` can dispatch.
+
+    Walks the full (rho-or-engine-config) x (Lq bucket) x (B) grid — the same
+    grid ``warmup`` compiles and the admission queue flushes into — tracing
+    ``server.engine_fn`` at each point. On top of the per-trace purity checks
+    this asserts the executable-key invariant both ways: equal keys must
+    fingerprint identically, distinct keys must fingerprint distinctly (a key
+    that splits finer than the program means the cost model is learning two
+    names for one executable).
+    """
+    cfg = server.cfg
+    if label is None:
+        label = f"server:{cfg.engine}"
+    if rhos is None:
+        rhos = [None] if cfg.engine == "daat" else [server.rho_ladder[0], server.rho_ladder[-1]]
+    buckets = list(server.lq_buckets) if server.lq_buckets is not None else [8]
+    out: list = []
+    by_key: dict = {}
+    by_fp: dict = {}
+    for bucket in buckets:
+        for B in batch_sizes:
+            for rho in dict.fromkeys(rhos):
+                case = f"lq{bucket}_b{B}" + ("" if rho is None else f"_rho{rho}")
+                vs, fp = lint_trace(
+                    server.engine_fn(rho), _query_structs(B, bucket), label, case
+                )
+                out.extend(vs)
+                if fp is None:
+                    continue
+                key = server.executable_key(bucket, B, rho)
+                if key in by_key and by_key[key] != fp:
+                    out.append(
+                        Violation(
+                            label, case, "executable_key",
+                            f"executable_key {key} maps to two different "
+                            "programs; equal keys must hit one compiled "
+                            "executable",
+                        )
+                    )
+                elif key not in by_key and fp in by_fp:
+                    out.append(
+                        Violation(
+                            label, case, "executable_key",
+                            f"executable_key {key} and {by_fp[fp]} name the "
+                            "SAME program; the key distinguishes a config the "
+                            "executable ignores, so the cost model learns two "
+                            "names for one executable",
+                        )
+                    )
+                by_key[key] = fp
+                by_fp.setdefault(fp, key)
+    return out
+
+
+# --------------------------------------------------------------------------
+# sharded serve lint: the pod-scale step behind make_bucketed_serve_step
+# --------------------------------------------------------------------------
+
+
+def lint_sharded_serve(
+    serve,
+    index_stack,
+    *,
+    batch_sizes: Sequence[int] = (2,),
+    buckets: Optional[Sequence[int]] = None,
+    label: str = "sharded",
+) -> list:
+    """Lint a (possibly bucketed) sharded serve step at every bucket width.
+
+    ``make_bucketed_serve_step``'s wrapper does host-side numpy bucketization
+    and cannot be traced; its tagged ``.inner`` is the actual executable, so
+    that is what gets traced — at each ``.buckets`` width, exactly the shapes
+    the wrapper can dispatch.
+    """
+    inner = getattr(serve, "inner", serve)
+    if buckets is None:
+        tagged = getattr(serve, "buckets", None)
+        if tagged is None:
+            raise ValueError(
+                "serve fn has no .buckets tag and no explicit buckets were "
+                "given; pass buckets=(...) matching the widths it will serve"
+            )
+        buckets = tagged
+    out: list = []
+    for bucket in buckets:
+        for B in batch_sizes:
+            case = f"lq{bucket}_b{B}"
+            vs, _ = lint_trace(
+                lambda qt, qw: inner(index_stack, qt, qw),
+                _query_structs(B, bucket),
+                label,
+                case,
+            )
+            out.extend(vs)
+    return out

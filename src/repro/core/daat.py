@@ -397,13 +397,17 @@ def daat_search_vmap(
 blockmax_search = daat_search_vmap
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks",
-        "use_kernels", "fused_chunk",
-    ),
+# The full static surface of the batched engine: everything here forks the
+# compile cache. repro.analysis.hot_path keys executables on exactly this
+# tuple, so keep it in sync with the jit decorator below (it IS the decorator
+# argument).
+DAAT_STATICS = (
+    "k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks",
+    "use_kernels", "fused_chunk",
 )
+
+
+@partial(jax.jit, static_argnames=DAAT_STATICS)
 def daat_search_batched(
     index: ImpactIndex,
     q_terms: jax.Array,

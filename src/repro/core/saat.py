@@ -245,10 +245,14 @@ def _fused_scatter_topk_batched(
     )
 
 
-@partial(
-    jax.jit,
-    static_argnames=("k", "rho", "max_segs_per_term", "scatter_impl", "fused_topk"),
-)
+# The full static surface of the batched engine: everything here forks the
+# compile cache. repro.analysis.hot_path keys executables on exactly this
+# tuple, so keep it in sync with the jit decorator below (it IS the decorator
+# argument).
+SAAT_STATICS = ("k", "rho", "max_segs_per_term", "scatter_impl", "fused_topk")
+
+
+@partial(jax.jit, static_argnames=SAAT_STATICS)
 def saat_search(
     index: ImpactIndex,
     q_terms: jax.Array,

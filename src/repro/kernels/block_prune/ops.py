@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernel_contracts import KernelContract, ShapeCase
 from repro.kernels.block_prune.kernel import block_prune_batched_kernel, block_prune_kernel
 from repro.kernels.common import interpret_default, pad_axis
 
@@ -62,3 +63,33 @@ def block_prune_batched(
         interpret=interpret,
     )
     return ub[:, :nb], mask[:, :nb].astype(jnp.bool_)
+
+
+def _contract_call(dims):
+    """Trace target for the static checker: abstract inputs, sweep tiling."""
+    sds = jax.ShapeDtypeStruct
+    lq, nb = dims["lq"], dims["nb"]
+    kw = dict(block_nb=dims["block_nb"], interpret=True)
+    if "batch" in dims:
+        b = dims["batch"]
+        return partial(block_prune_batched, **kw), (
+            sds((b, lq, nb), jnp.float32), sds((b, lq), jnp.float32), sds((b,), jnp.float32))
+    return partial(block_prune, **kw), (
+        sds((lq, nb), jnp.float32), sds((lq,), jnp.float32), sds((), jnp.float32))
+
+
+# Single source of truth for the sweep shapes in tests/test_kernels.py and
+# the checker's trace grid: block counts below/above/ragged vs the tile.
+CONTRACT = KernelContract(
+    name="block_prune",
+    description="fused block-upper-bound + threshold prune (DAAT phase 0)",
+    make_call=_contract_call,
+    shape_grid=(
+        ShapeCase("narrow", dict(lq=8, nb=100, block_nb=256)),
+        ShapeCase("wide", dict(lq=32, nb=2048, block_nb=256)),
+        ShapeCase("tiny_ragged", dict(lq=5, nb=17, block_nb=256)),
+        ShapeCase("b1", dict(batch=1, lq=8, nb=100, block_nb=256)),
+        ShapeCase("b4_wide", dict(batch=4, lq=32, nb=2048, block_nb=256)),
+        ShapeCase("b3_tiny", dict(batch=3, lq=5, nb=17, block_nb=256)),
+    ),
+)

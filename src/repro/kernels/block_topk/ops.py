@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernel_contracts import KernelContract, ShapeCase
 from repro.kernels.block_topk.kernel import block_topk_batched_kernel, block_topk_kernel
 from repro.kernels.common import interpret_default, pad_axis
 
@@ -62,3 +63,31 @@ def block_topk_batched(
         fs = jnp.concatenate([fs, jnp.full((b, k - k_eff), -jnp.inf, fs.dtype)], axis=-1)
         ids = jnp.concatenate([ids, jnp.zeros((b, k - k_eff), ids.dtype)], axis=-1)
     return fs, ids
+
+
+def _contract_call(dims):
+    """Trace target for the static checker: abstract inputs, sweep tiling."""
+    sds = jax.ShapeDtypeStruct
+    kw = dict(k=dims["k"], tile=dims["tile"], interpret=True)
+    if "batch" in dims:
+        return partial(block_topk_batched, **kw), (
+            sds((dims["batch"], dims["n"]), jnp.float32),)
+    return partial(block_topk, **kw), (sds((dims["n"],), jnp.float32),)
+
+
+# Single source of truth for the sweep shapes in tests/test_kernels.py and
+# the checker's trace grid: tile-ragged n, k == n, and k > tile degenerates.
+CONTRACT = KernelContract(
+    name="block_topk",
+    description="two-stage exact top-k (per-tile select + finalist merge)",
+    make_call=_contract_call,
+    shape_grid=(
+        ShapeCase("ragged", dict(n=1000, k=10, tile=256)),
+        ShapeCase("aligned", dict(n=8192, k=100, tile=1024)),
+        ShapeCase("k_is_n", dict(n=100, k=100, tile=128)),
+        ShapeCase("wide_tile", dict(n=5000, k=7, tile=512)),
+        ShapeCase("b1", dict(batch=1, n=1000, k=10, tile=256)),
+        ShapeCase("b3_ragged", dict(batch=3, n=517, k=7, tile=128)),
+        ShapeCase("b8_k_is_n", dict(batch=8, n=100, k=100, tile=128)),
+    ),
+)

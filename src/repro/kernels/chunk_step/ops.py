@@ -16,6 +16,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernel_contracts import KernelContract, ShapeCase
 from repro.kernels.chunk_step.kernel import chunk_step_batched_kernel
 from repro.kernels.common import interpret_default, pad_axis
 
@@ -80,3 +81,55 @@ def chunk_step_batched(
         interpret=interpret,
     )
     return ps, pi, th[:, 0], pr[:, :nb].astype(jnp.bool_)
+
+
+def _contract_call(dims):
+    """Trace target for the static checker: abstract engine-state inputs."""
+    sds = jax.ShapeDtypeStruct
+    B, k, lq = dims["B"], dims["k"], dims["lq"]
+    bs, tmax = dims["block_size"], dims["tmax"]
+    nb = -(-dims["n_docs"] // bs)
+    ndp = nb * bs
+    fn = partial(
+        chunk_step_batched,
+        block_budget=dims["budget"], block_size=bs, n_live=dims["n_docs"],
+        interpret=True,
+    )
+    args = (
+        sds((ndp, tmax), jnp.int32), sds((ndp, tmax), jnp.float32),  # doc store
+        sds((B, lq), jnp.int32), sds((B, lq), jnp.float32),  # queries
+        sds((B, nb), jnp.float32), sds((B, nb), jnp.bool_),  # ub / processed
+        sds((B, k), jnp.float32), sds((B, k), jnp.int32),  # pool
+        sds((B,), jnp.float32),  # theta
+    )
+    return fn, args
+
+
+# Single source of truth for the sweep shapes in tests/test_chunk_step.py and
+# the checker's trace grid. expect_dma: the doc-major store MUST be pulled
+# with double-buffered make_async_copy DMAs, and the checker's happens-before
+# pass verifies every start is waited before its slot is read or reused —
+# the race class this kernel's revolving buffers can hide.
+CONTRACT = KernelContract(
+    name="chunk_step",
+    description="fused DAAT phase-2 chunk step (VMEM-resident select+score+merge)",
+    make_call=_contract_call,
+    expect_dma=True,
+    # full B x budget x k cross on the 220-doc/bs=32 index (7 blocks: budget 3
+    # is non-divisible, 7 == n_blocks), plus the ragged bs=24 degenerate
+    shape_grid=tuple(
+        ShapeCase(
+            f"b{B}_budget{budget}_k{k}",
+            dict(B=B, budget=budget, k=k, n_docs=220, block_size=32, lq=6, tmax=8),
+        )
+        for B in (1, 3)
+        for budget in (1, 3, 7)
+        for k in (1, 5)
+    )
+    + (
+        ShapeCase(
+            "ragged_bs24",  # bs not a lane multiple, 130/24 -> 6 blocks
+            dict(B=2, budget=5, k=3, n_docs=130, block_size=24, lq=4, tmax=8),
+        ),
+    ),
+)

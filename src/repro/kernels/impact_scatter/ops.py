@@ -9,7 +9,9 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
+from repro.analysis.kernel_contracts import KernelContract, ShapeCase
 from repro.kernels.common import interpret_default, round_up, sorted_posting_tiles
 from repro.kernels.impact_scatter.kernel import (
     impact_scatter_batched_kernel,
@@ -90,3 +92,36 @@ def impact_scatter_batched(
         interpret=interpret,
     )
     return acc[:, :n_docs]
+
+
+def _contract_call(dims):
+    """Trace target for the static checker: abstract inputs, sweep tiling."""
+    sds = jax.ShapeDtypeStruct
+    kw = dict(
+        n_docs=dims["n_docs"], block_d=dims["block_d"], tile_p=dims["tile_p"],
+        sort_by_doc=True, interpret=True,
+    )
+    if "batch" in dims:
+        shape = (dims["batch"], dims["n_postings"])
+        return partial(impact_scatter_batched, **kw), (
+            sds(shape, jnp.int32), sds(shape, jnp.float32))
+    shape = (dims["n_postings"],)
+    return partial(impact_scatter, **kw), (sds(shape, jnp.int32), sds(shape, jnp.float32))
+
+
+# The single source of truth for the interpret-mode sweep shapes in
+# tests/test_kernels.py AND the static checker's trace grid: ragged
+# (non-divisible pre-pad) posting/doc counts included on purpose.
+CONTRACT = KernelContract(
+    name="impact_scatter",
+    description="batch-gridded scatter-add accumulator (SAAT hot loop)",
+    make_call=_contract_call,
+    shape_grid=(
+        ShapeCase("single_tile", dict(n_postings=128, n_docs=512, block_d=256, tile_p=128)),
+        ShapeCase("ragged", dict(n_postings=1000, n_docs=1000, block_d=256, tile_p=128)),
+        ShapeCase("multi_tile", dict(n_postings=4096, n_docs=512, block_d=256, tile_p=128)),
+        ShapeCase("b1", dict(batch=1, n_postings=128, n_docs=700, block_d=256, tile_p=128)),
+        ShapeCase("b3_ragged", dict(batch=3, n_postings=1000, n_docs=700, block_d=256, tile_p=128)),
+        ShapeCase("b8", dict(batch=8, n_postings=1000, n_docs=700, block_d=256, tile_p=128)),
+    ),
+)

@@ -19,6 +19,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernel_contracts import KernelContract, ShapeCase
 from repro.core.topk import tiled_topk
 from repro.kernels.common import interpret_default, round_up, sorted_posting_tiles
 from repro.kernels.impact_scatter_topk.kernel import (
@@ -130,3 +131,36 @@ def impact_scatter_topk_batched(
         interpret=interpret,
     )
     return _merge_pool(cand_s, cand_i, k_out)
+
+
+def _contract_call(dims):
+    """Trace target for the static checker: abstract inputs, sweep tiling."""
+    sds = jax.ShapeDtypeStruct
+    kw = dict(
+        n_docs=dims["n_docs"], k=dims["k"], block_d=dims["block_d"],
+        tile_p=dims["tile_p"], sort_by_doc=True, interpret=True,
+    )
+    if "batch" in dims:
+        shape = (dims["batch"], dims["n_postings"])
+        return partial(impact_scatter_topk_batched, **kw), (
+            sds(shape, jnp.int32), sds(shape, jnp.float32))
+    shape = (dims["n_postings"],)
+    return partial(impact_scatter_topk, **kw), (
+        sds(shape, jnp.int32), sds(shape, jnp.float32))
+
+
+# Single source of truth for the sweep shapes in tests/test_kernels.py and
+# the checker's trace grid: k from 1 to beyond block_d, ragged doc counts.
+CONTRACT = KernelContract(
+    name="impact_scatter_topk",
+    description="fused scatter -> per-block top-k candidate pool (SAAT fused_topk)",
+    make_call=_contract_call,
+    shape_grid=(
+        ShapeCase("k1", dict(n_postings=128, n_docs=512, k=1, block_d=256, tile_p=128)),
+        ShapeCase("k10_ragged", dict(n_postings=1000, n_docs=1000, k=10, block_d=256, tile_p=128)),
+        ShapeCase("k300", dict(n_postings=4096, n_docs=512, k=300, block_d=256, tile_p=128)),
+        ShapeCase("b1", dict(batch=1, n_postings=1000, n_docs=700, k=13, block_d=256, tile_p=128)),
+        ShapeCase("b3_ragged", dict(batch=3, n_postings=1000, n_docs=700, k=13, block_d=256, tile_p=128)),
+        ShapeCase("b8", dict(batch=8, n_postings=1000, n_docs=700, k=13, block_d=256, tile_p=128)),
+    ),
+)

@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.kernel_contracts import KernelContract, ShapeCase
 from repro.kernels.common import interpret_default, pad_axis
 from repro.kernels.sparse_score.kernel import (
     sparse_score_batched_kernel,
@@ -68,3 +69,35 @@ def sparse_score_batched(
     qw = jnp.where(qt == -2, 0.0, qw)
     scores = sparse_score_batched_kernel(dt, dw, qt, qw, block_d=block_d, interpret=interpret)
     return scores[:, :n]
+
+
+def _contract_call(dims):
+    """Trace target for the static checker: abstract inputs, sweep tiling."""
+    sds = jax.ShapeDtypeStruct
+    n, tmax, lq = dims["n"], dims["tmax"], dims["lq"]
+    kw = dict(block_d=dims["block_d"], interpret=True)
+    if "batch" in dims:
+        b = dims["batch"]
+        return partial(sparse_score_batched, **kw), (
+            sds((b, n, tmax), jnp.int32), sds((b, n, tmax), jnp.float32),
+            sds((b, lq), jnp.int32), sds((b, lq), jnp.float32))
+    return partial(sparse_score, **kw), (
+        sds((n, tmax), jnp.int32), sds((n, tmax), jnp.float32),
+        sds((lq,), jnp.int32), sds((lq,), jnp.float32))
+
+
+# Single source of truth for the sweep shapes in tests/test_kernels.py and
+# the checker's trace grid: doc counts ragged vs the block and sub-lane Lq.
+CONTRACT = KernelContract(
+    name="sparse_score",
+    description="match-and-accumulate sparse scorer (DAAT chunk scoring)",
+    make_call=_contract_call,
+    shape_grid=(
+        ShapeCase("small", dict(n=100, tmax=16, lq=8, block_d=128)),
+        ShapeCase("aligned", dict(n=512, tmax=64, lq=32, block_d=128)),
+        ShapeCase("ragged", dict(n=130, tmax=7, lq=3, block_d=128)),
+        ShapeCase("b1", dict(batch=1, n=100, tmax=16, lq=8, block_d=128)),
+        ShapeCase("b3_ragged", dict(batch=3, n=130, tmax=7, lq=3, block_d=128)),
+        ShapeCase("b4_aligned", dict(batch=4, n=512, tmax=64, lq=32, block_d=128)),
+    ),
+)

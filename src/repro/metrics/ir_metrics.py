@@ -1,4 +1,4 @@
-"""IR effectiveness metrics: RR@10 (the paper's official metric) + recall."""
+"""IR effectiveness metrics: RR@10 (the paper's official metric), recall, NDCG."""
 from __future__ import annotations
 
 import numpy as np
@@ -23,6 +23,55 @@ def recall_at_k(ranked_doc_ids: np.ndarray, qrels: np.ndarray, k: int = 1000) ->
     ranked = np.asarray(ranked_doc_ids)[:, :k]
     rel = np.asarray(qrels).reshape(-1, 1)
     return float((ranked == rel).any(axis=1).mean())
+
+
+def ndcg_at_k(
+    ranked_doc_ids: np.ndarray,
+    qrel_ids: np.ndarray,
+    k: int = 10,
+    qrel_gains: np.ndarray | None = None,
+) -> float:
+    """Mean NDCG at cutoff k with graded relevance.
+
+    Args:
+      ranked_doc_ids: ``[n_queries, >=k]`` doc ids in decreasing score order.
+        A cutoff larger than the ranking just uses the whole ranking.
+      qrel_ids: ``[n_queries, R]`` relevant doc ids per query, ``-1`` padding
+        for queries with fewer than R judged docs. A 1-D array is treated as
+        one relevant doc per query (MS MARCO style).
+      qrel_gains: optional ``[n_queries, R]`` graded gains aligned with
+        ``qrel_ids``; omitted = binary relevance (gain 1 per judged doc).
+        Pad slots are ignored regardless of their gain value.
+
+    Uses the standard ``gain / log2(rank + 1)`` discount; the ideal DCG sorts
+    each query's (unpadded) gains descending and truncates at k. Queries with
+    no judged docs contribute 0 (the sklearn/trec_eval convention), so adding
+    unjudged queries can only lower the mean — never inflate it.
+    """
+    ranked = np.asarray(ranked_doc_ids)[:, :k]
+    rels = np.asarray(qrel_ids)
+    if rels.ndim == 1:
+        rels = rels.reshape(-1, 1)
+    if qrel_gains is None:
+        gains = np.ones(rels.shape, np.float64)
+    else:
+        gains = np.asarray(qrel_gains, np.float64)
+        if gains.shape != rels.shape:
+            raise ValueError(
+                f"qrel_gains shape {gains.shape} != qrel_ids shape {rels.shape}"
+            )
+    live = rels >= 0
+    gains = np.where(live, gains, 0.0)
+    # gain of each ranked slot: matched judged doc's gain, else 0. Judged ids
+    # are unique per query, so the sum over R picks at most one gain per slot.
+    slot_gain = np.einsum(
+        "qkr,qr->qk", (ranked[:, :, None] == rels[:, None, :]) & live[:, None, :], gains
+    )
+    discount = 1.0 / np.log2(np.arange(ranked.shape[1]) + 2.0)
+    dcg = slot_gain @ discount
+    ideal = -np.sort(-gains, axis=1)[:, : ranked.shape[1]]
+    idcg = ideal @ discount[: ideal.shape[1]]
+    return float(np.where(idcg > 0, dcg / np.maximum(idcg, 1e-12), 0.0).mean())
 
 
 def rank_overlap(ids_a: np.ndarray, ids_b: np.ndarray, k: int) -> float:

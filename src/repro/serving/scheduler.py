@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import jax
@@ -262,14 +263,75 @@ class AnytimeServer:
             fused_chunk=self.cfg.daat_fused_chunk,
         )
 
+    def engine_fn(self, rho: Optional[int] = None):
+        """The pure engine dispatch for one executable: ``(qt, qw) -> result``.
+
+        This is exactly what ``search_batch`` runs after host-side
+        bucketization — the traced hot path, with every static baked in. The
+        analysis lint (``repro.analysis.hot_path``) traces the returned
+        callable at each (Lq bucket, B) shape, so serving MUST route through
+        it: anything dispatched some other way is invisible to the purity
+        gate.
+        """
+        if self.cfg.engine == "daat":
+            return self._daat_search
+        if rho is None:
+            rho = self.rho_ladder[-1]
+        return functools.partial(
+            saat_search,
+            self.index,
+            k=self.cfg.k,
+            rho=rho,
+            max_segs_per_term=self.max_segs,
+            scatter_impl=self.cfg.scatter_impl,
+            fused_topk=self.cfg.fused_topk,
+        )
+
+    def executable_key(
+        self, lq_bucket: int, batch_size: int, rho: Optional[int] = None
+    ) -> tuple:
+        """Hashable id of the compiled executable serving this dispatch.
+
+        The admission queue's service-time EMA and warmup grid both assume
+        **one executable per key**: equal keys must hit the same compiled
+        program (never a silent retrace), distinct keys must be distinct
+        programs. The tuple mirrors the engines' ``SAAT_STATICS`` /
+        ``DAAT_STATICS`` jit surface plus the batch shape; the analysis lint
+        verifies the invariant by tracing every key twice.
+        """
+        cfg = self.cfg
+        if cfg.engine == "daat":
+            statics: tuple = (
+                "daat", cfg.k, cfg.daat_est_blocks, cfg.daat_block_budget,
+                self.max_bm, cfg.daat_exact, cfg.daat_use_kernels,
+                cfg.daat_fused_chunk,
+            )
+        else:
+            statics = (
+                "saat", cfg.k, self.rho_ladder[-1] if rho is None else rho,
+                self.max_segs, cfg.scatter_impl, cfg.fused_topk,
+            )
+        return statics + (int(lq_bucket), int(batch_size))
+
     def _bucketize(self, q_terms, q_weights) -> tuple[jax.Array, jax.Array, int]:
-        """Pad the batch to its Lq bucket (identity when bucketing is off)."""
+        """Pad the batch to its Lq bucket and canonicalize dtypes.
+
+        Dtype canonicalization is a compile-cache invariant, not a nicety: a
+        caller handing i64 terms or weak-typed python-float weights would
+        silently fork the jit cache per dtype and break the
+        one-executable-per-key contract ``executable_key`` promises. The
+        casts are host-side (pre-dispatch), so the traced hot path always
+        sees ``i32/f32`` strong types — which is what the analysis lint
+        asserts.
+        """
         if self.lq_buckets is None:
-            return q_terms, q_weights, int(q_terms.shape[-1])
+            qt = jnp.asarray(q_terms, jnp.int32)
+            qw = jnp.asarray(q_weights, jnp.float32)
+            return qt, qw, int(qt.shape[-1])
         qt, qw, bucket = bucketize_batch(
             np.asarray(q_terms), np.asarray(q_weights), self.lq_buckets, self.index.n_terms
         )
-        return jnp.asarray(qt), jnp.asarray(qw), bucket
+        return jnp.asarray(qt, jnp.int32), jnp.asarray(qw, jnp.float32), bucket
 
     def search_batch(self, q_terms: jax.Array, q_weights: jax.Array, rho: Optional[int] = None):
         if self.cfg.engine == "daat":
@@ -299,16 +361,7 @@ class AnytimeServer:
             )
         t0 = self.clock.now()  # bucketize is service cost: keep it timed
         q_terms, q_weights, bucket = self._bucketize(q_terms, q_weights)
-        res = saat_search(
-            self.index,
-            q_terms,
-            q_weights,
-            k=self.cfg.k,
-            rho=rho,
-            max_segs_per_term=self.max_segs,
-            scatter_impl=self.cfg.scatter_impl,
-            fused_topk=self.cfg.fused_topk,
-        )
+        res = self.engine_fn(rho)(q_terms, q_weights)
         jax.block_until_ready(res.scores)
         elapsed = (self.clock.now() - t0) * 1e3
         per_query = elapsed / q_terms.shape[0]
@@ -356,16 +409,7 @@ class AnytimeServer:
                 for rho in self.rho_ladder:
                     for _ in range(repeats):
                         t0 = self.clock.now()
-                        res = saat_search(
-                            self.index,
-                            qt,
-                            qw,
-                            k=self.cfg.k,
-                            rho=rho,
-                            max_segs_per_term=self.max_segs,
-                            scatter_impl=self.cfg.scatter_impl,
-                            fused_topk=self.cfg.fused_topk,
-                        )
+                        res = self.engine_fn(rho)(qt, qw)
                         jax.block_until_ready(res.scores)
                         batch_ms = (self.clock.now() - t0) * 1e3
                     self._cost.update(rho, batch_ms * 1e3 / B)

@@ -274,6 +274,19 @@ def make_sharded_serve_step(
         data = _index_data_dict(index_stack)
         return sm(data, q_terms, q_weights)
 
+    # Static surface of this serve step, exposed for repro.analysis.hot_path:
+    # the lint traces `serve` at each (bucket, B) shape and keys executables
+    # on exactly this dict plus the shape. Keep it the full closure config —
+    # a knob missing here is a knob the one-executable-per-key check can't
+    # see.
+    serve.statics = dict(
+        engine=engine, k=k, rho_per_shard=rho_per_shard,
+        max_segs_per_term=max_segs_per_term, docs_per_shard=docs_per_shard,
+        scatter_impl=scatter_impl, fused_topk=fused_topk,
+        daat_est_blocks=daat_est_blocks, daat_block_budget=daat_block_budget,
+        max_bm_per_term=max_bm_per_term, daat_exact=daat_exact,
+        daat_use_kernels=daat_use_kernels, daat_fused_chunk=daat_fused_chunk,
+    )
     return serve, in_specs, out_specs
 
 
@@ -305,8 +318,15 @@ def make_bucketed_serve_step(
         qt, qw, _ = bucketize_batch(
             np.asarray(q_terms), np.asarray(q_weights), buckets, n_terms
         )
-        return serve(index_stack, jnp.asarray(qt), jnp.asarray(qw))
+        # strong i32/f32, pre-dispatch: same compile-cache invariant as
+        # AnytimeServer._bucketize (see its docstring)
+        return serve(index_stack, jnp.asarray(qt, jnp.int32), jnp.asarray(qw, jnp.float32))
 
+    # serve_bucketed itself does host-side numpy bucketization and CANNOT be
+    # traced; the lint must trace `.inner` at each `.buckets` width instead.
+    serve_bucketed.inner = serve
+    serve_bucketed.buckets = buckets
+    serve_bucketed.statics = serve.statics
     return serve_bucketed, in_specs, out_specs
 
 

@@ -20,7 +20,7 @@ from repro.core.daat import (
     score_blocks,
 )
 from repro.core.topk import topk
-from repro.kernels.chunk_step.ops import chunk_step_batched
+from repro.kernels.chunk_step.ops import CONTRACT, chunk_step_batched
 from repro.kernels.chunk_step.ref import chunk_step_batched_ref
 
 pytestmark = pytest.mark.kernels
@@ -97,24 +97,19 @@ def _assert_step_bitwise(idx, qt, qw, state, *, budget):
 # --------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("B", [1, 3])
-@pytest.mark.parametrize("budget", [1, 3, 7])  # 7 == n_blocks, 3 non-divisible
-@pytest.mark.parametrize("k", [1, 5])
-def test_chunk_step_sweep(B, budget, k):
-    idx = _tiny_index()
-    rng = np.random.default_rng(B * 100 + budget * 10 + k)
-    qt, qw = _random_queries(idx, rng, B, 6)
-    state = _phase1_state(idx, qt, qw, k=k)
-    _assert_step_bitwise(idx, qt, qw, state, budget=budget)
-
-
-def test_chunk_step_non_divisible_block_size():
-    """bs=24 doc blocks (not a lane multiple) and a 5-block budget."""
-    idx = _tiny_index(seed=5, n_docs=130, block_size=24)
-    rng = np.random.default_rng(9)
-    qt, qw = _random_queries(idx, rng, 2, 4)
-    state = _phase1_state(idx, qt, qw, k=3)
-    _assert_step_bitwise(idx, qt, qw, state, budget=5)
+@pytest.mark.parametrize(
+    "dims", [c.dims for c in CONTRACT.shape_grid],
+    ids=[c.name for c in CONTRACT.shape_grid],
+)
+def test_chunk_step_sweep(dims):
+    """Executes the CONTRACT's exact shape grid (what the checker traces):
+    the full B x budget x k cross on the 7-block index — budget 3 is
+    non-divisible, 7 == n_blocks — plus the ragged bs=24 degenerate."""
+    idx = _tiny_index(n_docs=dims["n_docs"], block_size=dims["block_size"])
+    rng = np.random.default_rng(dims["B"] * 100 + dims["budget"] * 10 + dims["k"])
+    qt, qw = _random_queries(idx, rng, dims["B"], dims["lq"])
+    state = _phase1_state(idx, qt, qw, k=dims["k"])
+    _assert_step_bitwise(idx, qt, qw, state, budget=dims["budget"])
 
 
 def test_chunk_step_all_pruned_trip():

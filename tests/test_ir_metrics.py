@@ -1,0 +1,136 @@
+"""Unit coverage for ``repro.metrics.ir_metrics``: hand-computed goldens,
+tie/degenerate behavior, and the k-larger-than-ranking edge every caller hits
+when an index is smaller than the cutoff.
+
+Rides in the ``analysis`` CI lane: pure numpy, no JAX, milliseconds.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.metrics.ir_metrics import mrr_at_k, ndcg_at_k, rank_overlap, recall_at_k
+
+pytestmark = pytest.mark.analysis
+
+
+# --------------------------------- MRR ------------------------------------
+
+
+def test_mrr_hand_computed():
+    ranked = np.array([[3, 1, 2], [9, 8, 7], [5, 6, 4]])
+    qrels = np.array([3, 7, 0])  # rank 1, rank 3, miss
+    assert mrr_at_k(ranked, qrels, k=3) == pytest.approx((1.0 + 1 / 3 + 0.0) / 3)
+
+
+def test_mrr_cutoff_drops_late_hits():
+    ranked = np.array([[1, 2, 3, 4]])
+    assert mrr_at_k(ranked, np.array([4]), k=3) == 0.0
+    assert mrr_at_k(ranked, np.array([4]), k=4) == pytest.approx(0.25)
+
+
+def test_mrr_duplicate_hit_counts_first_occurrence():
+    # ties/duplicates in a ranking: the FIRST matching slot sets the rank
+    ranked = np.array([[7, 7, 2]])
+    assert mrr_at_k(ranked, np.array([7]), k=3) == 1.0
+
+
+def test_mrr_k_exceeds_ranking_width():
+    ranked = np.array([[5, 1]])
+    assert mrr_at_k(ranked, np.array([1]), k=100) == pytest.approx(0.5)
+
+
+# -------------------------------- recall ----------------------------------
+
+
+def test_recall_hand_computed():
+    ranked = np.array([[3, 1], [9, 8], [5, 6]])
+    assert recall_at_k(ranked, np.array([1, 2, 5]), k=2) == pytest.approx(2 / 3)
+
+
+def test_recall_cutoff():
+    ranked = np.array([[3, 1, 4]])
+    assert recall_at_k(ranked, np.array([4]), k=2) == 0.0
+    assert recall_at_k(ranked, np.array([4]), k=3) == 1.0
+
+
+def test_recall_k_exceeds_ranking_width():
+    ranked = np.array([[3, 1]])
+    assert recall_at_k(ranked, np.array([1]), k=1000) == 1.0
+
+
+# --------------------------------- NDCG ------------------------------------
+
+
+def test_ndcg_perfect_ranking_is_one():
+    ranked = np.array([[4, 2, 9]])
+    rels = np.array([[4, 2, 9]])
+    gains = np.array([[3.0, 2.0, 1.0]])  # already descending = ideal order
+    assert ndcg_at_k(ranked, rels, k=3, qrel_gains=gains) == pytest.approx(1.0)
+
+
+def test_ndcg_hand_computed_binary():
+    # one query, judged {5, 7}, ranking hits them at ranks 1 and 3
+    ranked = np.array([[5, 2, 7]])
+    rels = np.array([[5, 7]])
+    dcg = 1.0 / np.log2(2) + 1.0 / np.log2(4)
+    idcg = 1.0 / np.log2(2) + 1.0 / np.log2(3)
+    assert ndcg_at_k(ranked, rels, k=3) == pytest.approx(dcg / idcg)
+
+
+def test_ndcg_graded_order_matters():
+    # swapping a high-gain doc behind a low-gain one must strictly lower NDCG
+    rels = np.array([[1, 2]])
+    gains = np.array([[3.0, 1.0]])
+    good = ndcg_at_k(np.array([[1, 2]]), rels, k=2, qrel_gains=gains)
+    bad = ndcg_at_k(np.array([[2, 1]]), rels, k=2, qrel_gains=gains)
+    assert good == pytest.approx(1.0)
+    assert bad < good
+
+
+def test_ndcg_single_qrel_1d_matches_mrr_shape_convention():
+    # 1-D qrels (MS MARCO style): same call shape as mrr_at_k/recall_at_k
+    ranked = np.array([[3, 1, 2], [9, 8, 7]])
+    got = ndcg_at_k(ranked, np.array([1, 7]), k=3)
+    want = (1.0 / np.log2(3) + 1.0 / np.log2(4)) / 2  # ranks 2 and 3, idcg=1
+    assert got == pytest.approx(want)
+
+
+def test_ndcg_padded_qrels_ignored():
+    # -1 pads must contribute nothing, even with nonzero gain in the pad slot
+    ranked = np.array([[5, 2]])
+    with_pad = ndcg_at_k(
+        ranked, np.array([[5, -1]]), k=2, qrel_gains=np.array([[2.0, 9.0]])
+    )
+    without = ndcg_at_k(ranked, np.array([[5]]), k=2, qrel_gains=np.array([[2.0]]))
+    assert with_pad == pytest.approx(without) == pytest.approx(1.0)
+
+
+def test_ndcg_no_judged_docs_scores_zero():
+    # all-pad query contributes 0, not NaN — adding it halves the mean
+    ranked = np.array([[1, 2], [3, 4]])
+    rels = np.array([[1, -1], [-1, -1]])
+    assert ndcg_at_k(ranked, rels, k=2) == pytest.approx(0.5)
+
+
+def test_ndcg_k_exceeds_ranking_and_judgments():
+    ranked = np.array([[5, 9]])
+    assert ndcg_at_k(ranked, np.array([[9, 5]]), k=50) == pytest.approx(1.0)
+
+
+def test_ndcg_gain_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="qrel_gains"):
+        ndcg_at_k(np.array([[1]]), np.array([[1, 2]]), qrel_gains=np.array([[1.0]]))
+
+
+# ------------------------------ rank overlap --------------------------------
+
+
+def test_rank_overlap_permutation_invariant():
+    a = np.array([[1, 2, 3], [4, 5, 6]])
+    b = np.array([[3, 1, 2], [4, 5, 9]])
+    assert rank_overlap(a, b, k=3) == pytest.approx((1.0 + 2 / 3) / 2)
+
+
+def test_rank_overlap_disjoint_is_zero():
+    assert rank_overlap(np.array([[1, 2]]), np.array([[3, 4]]), k=2) == 0.0

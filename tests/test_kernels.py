@@ -3,18 +3,27 @@
 The whole module carries the ``kernels`` marker so CI can run the
 interpret-mode sweeps as a standalone matrix entry — a kernel regression
 fails in an attributable job instead of somewhere inside the full tier-1 run.
+
+Sweep shapes come from each package's ``CONTRACT.shape_grid`` (see
+``src/repro/analysis/README.md``): the static checker traces exactly the
+shapes these tests execute, so adding a ``ShapeCase`` grows both gates at
+once and the lists can never drift apart.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.block_prune.ops import CONTRACT as BLOCK_PRUNE_CONTRACT
 from repro.kernels.block_prune.ops import block_prune, block_prune_batched
 from repro.kernels.block_prune.ref import block_prune_batched_ref, block_prune_ref
+from repro.kernels.block_topk.ops import CONTRACT as BLOCK_TOPK_CONTRACT
 from repro.kernels.block_topk.ops import block_topk, block_topk_batched
 from repro.kernels.block_topk.ref import block_topk_batched_ref, block_topk_ref
+from repro.kernels.impact_scatter.ops import CONTRACT as SCATTER_CONTRACT
 from repro.kernels.impact_scatter.ops import impact_scatter, impact_scatter_batched
 from repro.kernels.impact_scatter.ref import impact_scatter_batched_ref, impact_scatter_ref
+from repro.kernels.impact_scatter_topk.ops import CONTRACT as SCATTER_TOPK_CONTRACT
 from repro.kernels.impact_scatter_topk.ops import (
     impact_scatter_topk,
     impact_scatter_topk_batched,
@@ -23,14 +32,15 @@ from repro.kernels.impact_scatter_topk.ref import (
     impact_scatter_topk_batched_ref,
     impact_scatter_topk_ref,
 )
+from repro.kernels.sparse_score.ops import CONTRACT as SPARSE_SCORE_CONTRACT
 from repro.kernels.sparse_score.ops import sparse_score, sparse_score_batched
 from repro.kernels.sparse_score.ref import sparse_score_batched_ref, sparse_score_ref
 
 pytestmark = pytest.mark.kernels
 
 
-@pytest.mark.parametrize("n_postings", [128, 1000, 4096])
-@pytest.mark.parametrize("n_docs", [512, 1000])
+@pytest.mark.parametrize("n_postings", SCATTER_CONTRACT.sweep_values("n_postings", exclude=("batch",)))
+@pytest.mark.parametrize("n_docs", SCATTER_CONTRACT.sweep_values("n_docs", exclude=("batch",)))
 @pytest.mark.parametrize("sort_by_doc", [True, False])
 def test_impact_scatter_sweep(n_postings, n_docs, sort_by_doc):
     rng = np.random.default_rng(n_postings + n_docs)
@@ -58,11 +68,11 @@ def test_impact_scatter_zero_contrib_padding():
     assert float(jnp.abs(got).max()) == 0.0
 
 
-@pytest.mark.parametrize("batch", [1, 3, 8])
-@pytest.mark.parametrize("n_postings", [128, 1000])
+@pytest.mark.parametrize("batch", SCATTER_CONTRACT.sweep_values("batch"))
+@pytest.mark.parametrize("n_postings", SCATTER_CONTRACT.sweep_values("n_postings", require=("batch",)))
 @pytest.mark.parametrize("sort_by_doc", [True, False])
 def test_impact_scatter_batched_sweep(batch, n_postings, sort_by_doc):
-    n_docs = 700
+    (n_docs,) = SCATTER_CONTRACT.sweep_values("n_docs", require=("batch",))
     rng = np.random.default_rng(batch * 1000 + n_postings)
     docs = jnp.asarray(rng.integers(0, n_docs, (batch, n_postings)), jnp.int32)
     contribs = jnp.asarray(rng.gamma(2.0, 1.0, (batch, n_postings)), jnp.float32)
@@ -121,9 +131,9 @@ def _fused_parity(docs, contribs, n_docs, k, *, n_live=None, block_d=256, tile_p
     return got
 
 
-@pytest.mark.parametrize("n_postings", [128, 1000, 4096])
-@pytest.mark.parametrize("n_docs", [512, 1000])
-@pytest.mark.parametrize("k", [1, 10, 300])
+@pytest.mark.parametrize("n_postings", SCATTER_TOPK_CONTRACT.sweep_values("n_postings", exclude=("batch",)))
+@pytest.mark.parametrize("n_docs", SCATTER_TOPK_CONTRACT.sweep_values("n_docs", exclude=("batch",)))
+@pytest.mark.parametrize("k", SCATTER_TOPK_CONTRACT.sweep_values("k", exclude=("batch",)))
 def test_impact_scatter_topk_sweep(n_postings, n_docs, k):
     rng = np.random.default_rng(n_postings + n_docs + k)
     docs = jnp.asarray(rng.integers(0, n_docs, n_postings), jnp.int32)
@@ -131,19 +141,22 @@ def test_impact_scatter_topk_sweep(n_postings, n_docs, k):
     _fused_parity(docs, contribs, n_docs, k)
 
 
-@pytest.mark.parametrize("batch", [1, 3, 8])
+@pytest.mark.parametrize("batch", SCATTER_TOPK_CONTRACT.sweep_values("batch"))
 @pytest.mark.parametrize("sort_by_doc", [True, False])
 def test_impact_scatter_topk_batched_sweep(batch, sort_by_doc):
     """Non-divisible n_docs/tile_p shapes, with and without skip ranges."""
-    n_docs, n_postings = 700, 1000  # 700 % 256 != 0, 1000 % 128 != 0
+    # 700 % 256 != 0, 1000 % 128 != 0 (the contract's ragged batched case)
+    (n_docs,) = SCATTER_TOPK_CONTRACT.sweep_values("n_docs", require=("batch",))
+    (n_postings,) = SCATTER_TOPK_CONTRACT.sweep_values("n_postings", require=("batch",))
+    (k,) = SCATTER_TOPK_CONTRACT.sweep_values("k", require=("batch",))
     rng = np.random.default_rng(batch * 1000)
     docs = jnp.asarray(rng.integers(0, n_docs, (batch, n_postings)), jnp.int32)
     contribs = jnp.asarray(rng.gamma(2.0, 1.0, (batch, n_postings)), jnp.float32)
     got = impact_scatter_topk_batched(
-        docs, contribs, n_docs, 13, block_d=256, tile_p=128,
+        docs, contribs, n_docs, k, block_d=256, tile_p=128,
         sort_by_doc=sort_by_doc, interpret=True,
     )
-    want = impact_scatter_topk_batched_ref(docs, contribs, n_docs, n_docs, 13)
+    want = impact_scatter_topk_batched_ref(docs, contribs, n_docs, n_docs, k)
     np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]), rtol=1e-5, atol=1e-5)
 
@@ -237,7 +250,7 @@ def test_impact_scatter_topk_single_query_bitwise_with_duplicate_docs():
     np.testing.assert_array_equal(np.asarray(fs), np.asarray(ds))
 
 
-@pytest.mark.parametrize("n,k,tile", [(1000, 10, 256), (8192, 100, 1024), (100, 100, 128), (5000, 7, 512)])
+@pytest.mark.parametrize("n,k,tile", BLOCK_TOPK_CONTRACT.sweep("n", "k", "tile", exclude=("batch",)))
 def test_block_topk_sweep(n, k, tile):
     rng = np.random.default_rng(n + k)
     scores = jnp.asarray(rng.normal(size=n), jnp.float32)
@@ -256,7 +269,7 @@ def test_block_topk_with_neg_inf():
     np.testing.assert_allclose(np.asarray(s), [3.0, 2.0, 1.0])
 
 
-@pytest.mark.parametrize("lq,nb", [(8, 100), (32, 2048), (5, 17)])
+@pytest.mark.parametrize("lq,nb", BLOCK_PRUNE_CONTRACT.sweep("lq", "nb", exclude=("batch",)))
 def test_block_prune_sweep(lq, nb):
     rng = np.random.default_rng(lq * nb)
     bm = jnp.asarray(rng.gamma(1.0, 1.0, (lq, nb)) * (rng.random((lq, nb)) > 0.3), jnp.float32)
@@ -268,7 +281,7 @@ def test_block_prune_sweep(lq, nb):
     np.testing.assert_array_equal(np.asarray(mask), np.asarray(rmask))
 
 
-@pytest.mark.parametrize("batch,n,k,tile", [(1, 1000, 10, 256), (3, 517, 7, 128), (8, 100, 100, 128)])
+@pytest.mark.parametrize("batch,n,k,tile", BLOCK_TOPK_CONTRACT.sweep("batch", "n", "k", "tile"))
 def test_block_topk_batched_sweep(batch, n, k, tile):
     """Non-divisible n/tile shapes; per-row finalists must match the oracle."""
     rng = np.random.default_rng(batch * 10 + n + k)
@@ -299,7 +312,7 @@ def test_block_topk_batched_k_exceeds_n_pads():
     assert bool(np.isneginf(np.asarray(s)[:, 40:]).all())
 
 
-@pytest.mark.parametrize("batch,lq,nb", [(1, 8, 100), (4, 32, 2048), (3, 5, 17)])
+@pytest.mark.parametrize("batch,lq,nb", BLOCK_PRUNE_CONTRACT.sweep("batch", "lq", "nb"))
 def test_block_prune_batched_sweep(batch, lq, nb):
     """Non-divisible block counts; each row pruned against its own theta."""
     rng = np.random.default_rng(batch * 100 + lq * nb)
@@ -355,7 +368,7 @@ def test_block_prune_batched_empty_blocks_never_survive():
     assert not bool(np.asarray(mask).any())
 
 
-@pytest.mark.parametrize("n,tmax,lq", [(100, 16, 8), (512, 64, 32), (130, 7, 3)])
+@pytest.mark.parametrize("n,tmax,lq", SPARSE_SCORE_CONTRACT.sweep("n", "tmax", "lq", exclude=("batch",)))
 def test_sparse_score_sweep(n, tmax, lq):
     rng = np.random.default_rng(n + tmax + lq)
     V = 500
@@ -380,7 +393,7 @@ def test_sparse_score_duplicate_query_terms():
     np.testing.assert_allclose(np.asarray(got), [3.0])
 
 
-@pytest.mark.parametrize("batch,n,tmax,lq", [(1, 100, 16, 8), (3, 130, 7, 3), (4, 512, 64, 32)])
+@pytest.mark.parametrize("batch,n,tmax,lq", SPARSE_SCORE_CONTRACT.sweep("batch", "n", "tmax", "lq"))
 def test_sparse_score_batched_sweep(batch, n, tmax, lq):
     """Each query scores its own doc rows; non-divisible doc counts pad."""
     rng = np.random.default_rng(batch + n + tmax + lq)
