@@ -12,7 +12,11 @@ what one while_loop trip does to the HBM boundary:
     pool/theta/candidate-tile/processed-row state stays in VMEM scratch, the
     selected doc blocks stream HBM->VMEM once via double-buffered async-copy
     DMA, and only the updated per-query state (the candidate output) crosses
-    back.
+    back;
+  * **multi** (``fused_chunk=True, trips_per_launch=N``): up to N trips run
+    inside ONE launch (scalar-prefetched trip budget, in-kernel early exit),
+    so the per-query state crosses HBM once per N trips instead of once per
+    trip and the outer while_loop dispatches ``ceil(trips / N)`` launches.
 
 The paper's wacky-weight regime multiplies exactly this per-trip traffic:
 when skipping collapses, the trip count tracks the worst query in the batch
@@ -34,6 +38,7 @@ property (see the roofline bench).
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -43,15 +48,20 @@ from benchmarks import common as C
 from repro.core import daat_search_batched
 from repro.core.daat import max_blocks_per_term
 
+# REPRO_BENCH_TINY=1 shrinks the sweep to CI-sized CPU shapes: the point of
+# the lane is the parity assert + launch accounting, not the wall times
+TINY = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+
 K = 100
-MODELS = ("bm25", "spladev2")
-BATCH_SIZES = (1, 8, 32)
+MODELS = ("bm25",) if TINY else ("bm25", "spladev2")
+BATCH_SIZES = (1, 4) if TINY else (1, 8, 32)
 EST_BLOCKS = 8
 BLOCK_BUDGET = 16
+TRIPS_PER_LAUNCH = 4  # the multi config's in-launch trip budget
 # interpret-mode kernels on CPU run tens of seconds per call for the wacky
 # models at B=32 (skipping collapses -> long while_loop of interpreted
 # launches), so keep the sample count small; on TPU raise this freely
-REPEATS = 3
+REPEATS = 1 if TINY else 3
 PARITY_ASSERTED = True  # run() bitwise-compares doc ids before any timing
 
 
@@ -84,26 +94,35 @@ def run() -> list[dict]:
             qw = np.tile(np.asarray(qw_all), (reps, 1))[:n]
             qt, qw = jax.numpy.asarray(qt), jax.numpy.asarray(qw)
 
-            def daat(q, w, fused):
+            def daat(q, w, fused, trips=1):
                 return daat_search_batched(
                     idx, q, w, k=K, est_blocks=EST_BLOCKS, block_budget=BLOCK_BUDGET,
                     max_bm_per_term=mb, exact=True,
-                    use_kernels=True, fused_chunk=fused,
+                    use_kernels=True, fused_chunk=fused, trips_per_launch=trips,
                 )
 
             # the fusion must be invisible in results before it is timed:
             # ids bitwise AND the per-query work metrics (trip counts drive
-            # the comparison, so they must be identical by construction)
+            # the comparison, so they must be identical by construction) —
+            # and the multi-trip batching must be invisible on top of that
             split, fused = daat(qt, qw, False), daat(qt, qw, True)
+            multi = daat(qt, qw, True, trips=TRIPS_PER_LAUNCH)
             assert (np.asarray(split.doc_ids) == np.asarray(fused.doc_ids)).all()
+            assert (np.asarray(split.doc_ids) == np.asarray(multi.doc_ids)).all()
             for field in ("n_survivors", "blocks_scored", "chunks", "rank_safe"):
-                assert (
-                    np.asarray(getattr(split.stats, field))
-                    == np.asarray(getattr(fused.stats, field))
-                ).all(), f"WorkStats.{field} diverged"
+                ref = np.asarray(getattr(split.stats, field))
+                for other in (fused, multi):
+                    assert (
+                        ref == np.asarray(getattr(other.stats, field))
+                    ).all(), f"WorkStats.{field} diverged"
 
             t_split = _stats(_timed_samples(lambda q, w: daat(q, w, False), qt, qw, REPEATS))
             t_fused = _stats(_timed_samples(lambda q, w: daat(q, w, True), qt, qw, REPEATS))
+            t_multi = _stats(
+                _timed_samples(
+                    lambda q, w: daat(q, w, True, trips=TRIPS_PER_LAUNCH), qt, qw, REPEATS
+                )
+            )
             k_eff = min(K, idx.n_docs)
             split_floats = n * (
                 2 * budget * bs * tmax  # gathered doc tiles: gather write + kernel read
@@ -111,15 +130,30 @@ def run() -> list[dict]:
                 + idx.n_blocks  # remaining-ub vector read by the select kernel
             )
             fused_floats = n * (2 * k_eff + 1 + idx.n_blocks)  # pool + theta + bitmap
+            # launch accounting: per-trip modes dispatch one chunk_step (or
+            # three split stages) per trip; multi-trip dispatches one launch
+            # per ceil(trips / T) — the batch runs to its slowest row, so the
+            # batch launch count is the max over rows
+            chunks = np.asarray(fused.chunks)
+            trips_max = int(chunks.max())
+            launches_multi = int(np.ceil(chunks / TRIPS_PER_LAUNCH).max())
+            assert launches_multi <= -(-trips_max // TRIPS_PER_LAUNCH), (
+                f"multi-trip dispatched {launches_multi} launches for "
+                f"trips_max={trips_max}, budget={TRIPS_PER_LAUNCH}"
+            )
             rows.append(
                 {
                     "model": model,
                     "batch": n,
-                    "trips_max": int(np.asarray(fused.chunks).max()),
+                    "trips_max": trips_max,
                     "split_mean_ms": t_split[0],
                     "split_p99_ms": t_split[1],
                     "fused_mean_ms": t_fused[0],
                     "fused_p99_ms": t_fused[1],
+                    "multi_mean_ms": t_multi[0],
+                    "multi_p99_ms": t_multi[1],
+                    "launches_per_query_fused": trips_max,
+                    "launches_per_query_multi": launches_multi,
                     "hbm_roundtrip_floats_per_trip_split": int(split_floats),
                     "hbm_roundtrip_floats_per_trip_fused": int(fused_floats),
                 }

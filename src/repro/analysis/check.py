@@ -63,7 +63,49 @@ def serving_config_matrix(lq_buckets: tuple = (4, 8), k: int = 5):
         ServingConfig(**daat),
         ServingConfig(daat_use_kernels=True, **daat),
         ServingConfig(daat_use_kernels=True, daat_fused_chunk=True, **daat),
+        ServingConfig(
+            daat_use_kernels=True, daat_fused_chunk=True,
+            daat_trips_per_launch=4, **daat,
+        ),
     )
+
+
+def run_daat_phase0_checks() -> list:
+    """Assert kernel-mode phase 0 never densifies the block-max lists.
+
+    Traces ``daat_search_batched(use_kernels=True)`` over ShapeDtypeStructs
+    on the probe index and scans the jaxpr for any aval of the densified
+    ``[B, Lq, n_blocks]`` shape — the intermediate the CSR prune kernel
+    exists to eliminate.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.hot_path import check_no_densified_blockmax
+    from repro.core import daat_search_batched
+    from repro.core.daat import max_blocks_per_term
+
+    index = _probe_index()
+    mb = max_blocks_per_term(index)
+    out = []
+    for B, lq in ((2, 6), (4, 8)):
+        jaxpr = jax.make_jaxpr(
+            lambda qt, qw: daat_search_batched(
+                index, qt, qw, k=5, est_blocks=4, block_budget=4,
+                max_bm_per_term=mb, exact=True, use_kernels=True,
+            )
+        )(
+            jax.ShapeDtypeStruct((B, lq), jnp.int32),
+            jax.ShapeDtypeStruct((B, lq), jnp.float32),
+        )
+        vs = check_no_densified_blockmax(
+            jaxpr, (B, lq, index.n_blocks),
+            label="daat:kernels:phase0", case=f"B{B}_lq{lq}",
+        )
+        print(f"  daat kernel-mode phase 0 B={B} Lq={lq} "
+              f"(no densified block-max): {len(vs)} violations")
+        out.extend(vs)
+    return out
 
 
 def run_kernel_checks(names: Optional[Sequence[str]] = None) -> list:
@@ -104,6 +146,9 @@ def run_serving_checks(batch_sizes: Sequence[int] = (2, 4)) -> list:
             ":fused_topk" if cfg.fused_topk else ""
         ) + (":kernels" if cfg.daat_use_kernels else "") + (
             ":fused_chunk" if cfg.daat_fused_chunk else ""
+        ) + (
+            f":trips{cfg.daat_trips_per_launch}"
+            if cfg.daat_trips_per_launch > 1 else ""
         )
         vs = lint_server(
             AnytimeServer(index, cfg), batch_sizes=batch_sizes, label=label
@@ -170,6 +215,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if do_serving:
         print("serving hot paths:")
         violations += run_serving_checks()
+        violations += run_daat_phase0_checks()
 
     if violations:
         print(f"\n{len(violations)} violation(s):", file=sys.stderr)

@@ -108,6 +108,41 @@ def check_dtype_discipline(closed_jaxpr, label: str = "<traced>", case: str = "t
     return out
 
 
+def check_no_densified_blockmax(
+    closed_jaxpr,
+    dense_shape: Sequence[int],
+    label: str = "<traced>",
+    case: str = "trace",
+):
+    """Flag the densified ``[B, Lq, n_blocks]`` block-max intermediate.
+
+    Kernel-mode DAAT phase 0 walks the CSR block-max lists directly
+    (``block_prune_csr``): the per-(query, slot) dense matrix must never be
+    materialised — it is ``Lq`` x the footprint of the lists it expands from
+    and every byte of it crosses HBM twice. Any aval of that exact shape in
+    the traced search means the scatter-densify path crept back in.
+    """
+    out = []
+    shape = tuple(int(d) for d in dense_shape)
+    for eqn in iter_eqns(closed_jaxpr.jaxpr):
+        for atom in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(atom, "aval", None)
+            if getattr(aval, "shape", None) == shape:
+                out.append(
+                    Violation(
+                        label, case, "dense_blockmax",
+                        f"primitive '{eqn.primitive.name}' touches an aval of "
+                        f"shape {shape} — the densified [B, Lq, n_blocks] "
+                        "block-max intermediate is back in kernel-mode phase "
+                        "0; the CSR prune kernel must consume base/cnt "
+                        "windows off the index's bm lists, not scatter-dense "
+                        "rows",
+                    )
+                )
+                break
+    return out
+
+
 def fingerprint(closed_jaxpr) -> str:
     """Stable identity of a traced program (the executable-key invariant)."""
     return hashlib.sha1(str(closed_jaxpr).encode()).hexdigest()

@@ -11,9 +11,11 @@ file.
 Layout facts this module relies on (verified against the pinned jax):
 
   * a ``pallas_call`` eqn's ``params["jaxpr"]`` is the kernel body whose
-    invars are ``AbstractMemoryRef``s ordered (inputs, outputs, scratch);
+    invars are ``AbstractMemoryRef``s ordered (scalar-prefetch, inputs,
+    outputs, scratch) — ``PrefetchScalarGridSpec`` operands arrive FIRST, as
+    SMEM refs, counted by ``grid_mapping.num_index_operands``;
     ``params["grid_mapping"]`` carries ``grid``, ``block_mappings`` (inputs +
-    outputs only), and the ``num_*`` operand counts;
+    outputs only, scalars excluded), and the ``num_*`` operand counts;
   * ``dma_start`` / ``dma_wait`` eqns share one invar layout — the flat
     ``(src_ref, *src_idx, dst_ref, *dst_idx, sem_ref, *sem_idx)`` copy
     descriptor — with constant indices appearing as ``Literal``s;
@@ -121,8 +123,8 @@ def aval_bytes(aval: Any) -> int:
 class KernelOperand:
     """One kernel-body invar, classified for the VMEM budget pass."""
 
-    label: str  # e.g. "in[3] args[3]", "out[0]", "scratch[1]"
-    role: str  # "in" | "out" | "scratch"
+    label: str  # e.g. "scalar[0]", "in[3] args[3]", "out[0]", "scratch[1]"
+    role: str  # "scalar" | "in" | "out" | "scratch"
     space: str  # normalized memory space ("vmem", "hbm", "smem", "semaphore")
     block_shape: Tuple[int, ...]  # VMEM-resident tile shape (block or scratch)
     dtype: Any
@@ -139,25 +141,45 @@ def _block_bytes(block_shape: Sequence[Any], dtype: Any) -> Tuple[Tuple[int, ...
     return dims, n * np.dtype(dtype).itemsize
 
 
+def num_scalar_prefetch_operands(pallas_eqn: JaxprEqn) -> int:
+    """Scalar-prefetch (``PrefetchScalarGridSpec``) operand count of one call."""
+    return int(getattr(pallas_eqn.params["grid_mapping"], "num_index_operands", 0))
+
+
 def kernel_operands(pallas_eqn: JaxprEqn) -> list[KernelOperand]:
     """Classify every kernel invar of one ``pallas_call`` equation."""
     gm = pallas_eqn.params["grid_mapping"]
     kernel_jaxpr: Jaxpr = pallas_eqn.params["jaxpr"]
+    n_scalar = num_scalar_prefetch_operands(pallas_eqn)
     n_in = gm.num_inputs
     n_out = gm.num_outputs
     n_scratch = gm.num_scratch_operands
     invars = kernel_jaxpr.invars
-    if len(invars) != n_in + n_out + n_scratch:
+    if len(invars) != n_scalar + n_in + n_out + n_scratch:
         raise ValueError(
             f"kernel jaxpr has {len(invars)} invars; grid_mapping claims "
-            f"{n_in}+{n_out}+{n_scratch} (inputs+outputs+scratch) — pallas "
-            "internals changed, update jaxpr_walk.kernel_operands"
+            f"{n_scalar}+{n_in}+{n_out}+{n_scratch} "
+            "(scalar-prefetch+inputs+outputs+scratch) — pallas internals "
+            "changed, update jaxpr_walk.kernel_operands"
         )
     out: list[KernelOperand] = []
     mappings = list(gm.block_mappings)
     for i, var in enumerate(invars):
         aval = var.aval
         space = memory_space_of(aval)
+        if i < n_scalar:
+            # scalar-prefetch refs live in SMEM, carry no block mapping, and
+            # cost no VMEM — but the budget/divisibility passes must still
+            # see them so the invar count reconciles
+            dtype = getattr(aval, "dtype", np.int32)
+            shape = tuple(getattr(aval, "shape", ()))
+            out.append(
+                KernelOperand(
+                    f"scalar[{i}]", "scalar", space, shape, dtype, aval_bytes(aval), ()
+                )
+            )
+            continue
+        i -= n_scalar
         if i < n_in + n_out:
             role = "in" if i < n_in else "out"
             idx = i if i < n_in else i - n_in
@@ -312,6 +334,17 @@ def _walk_dma(jaxpr: Jaxpr, pending: list[PendingDma], report: DmaReport) -> lis
                         f"dma_start at {where} reuses semaphore slot {idx} while "
                         f"the copy started at {p.where} is still in flight — "
                         "wait() must run before the slot revolves"
+                    )
+                elif p.dst is dst and _slot_matches(p.dst_slot, slot):
+                    # different semaphore, same destination buffer slot: the
+                    # trip-loop revolving-buffer race a per-trip sem rotation
+                    # hides from the semaphore check above
+                    report.violations.append(
+                        f"dma_start at {where} overwrites destination "
+                        f"{_fmt_ref(dst)} slot {slot} while the copy started at "
+                        f"{p.where} is still in flight into the same slot — "
+                        "the two copies race on the buffer even though their "
+                        "semaphores differ; wait() the first before revolving"
                     )
             report.starts += 1
             pending.append(PendingDma(dst, slot, sem, idx, where))

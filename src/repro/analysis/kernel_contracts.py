@@ -16,9 +16,14 @@ and runs three passes over each ``pallas_call`` it finds:
      masks or miscompiles on device), and the block index map must stay in
      range over the whole grid, evaluated point by point.
   3. **DMA happens-before** — every ``make_async_copy`` start must be waited
-     before its destination slot is read or its semaphore slot revolves
-     (the double-buffer race class in ``chunk_step``), and no copy may be
-     left in flight at the end of the body.
+     before its destination slot is read, its semaphore slot revolves, or a
+     second copy starts into the same destination slot (the double-buffer /
+     trip-loop revolving-buffer race classes in ``chunk_step``), and no copy
+     may be left in flight at the end of the body.
+  4. **Scalar prefetch** — a contract (or an individual case) that declares
+     ``expect_scalar_prefetch`` must trace to a ``pallas_call`` with
+     ``PrefetchScalarGridSpec`` operands; a silent fall-back to a static
+     grid would drop the dynamic trip-budget / CSR-offset dispatch.
 
 The shape grid is the single source of truth for the kernel test sweeps:
 ``tests/test_kernels.py`` parametrizes from ``CONTRACT.sweep(...)`` instead
@@ -50,10 +55,17 @@ class ShapeCase:
     ``dims`` holds the op-level shape parameters (the same names the test
     sweeps use), so a case is both a trace target for the checker and a
     parametrize row for the interpret-mode tests.
+
+    ``expect_scalar_prefetch`` overrides the contract-level default for this
+    case (``None`` = inherit): a grid may mix plain cases with
+    ``PrefetchScalarGridSpec`` cases (e.g. single-trip vs multi-trip
+    ``chunk_step``), and the checker must know which dispatch each case is
+    supposed to take.
     """
 
     name: str
     dims: Mapping[str, int]
+    expect_scalar_prefetch: Optional[bool] = None
 
     def __post_init__(self):
         object.__setattr__(self, "dims", dict(self.dims))
@@ -72,6 +84,7 @@ class KernelContract:
     shape_grid: Tuple[ShapeCase, ...]
     vmem_limit_bytes: int = VMEM_BYTES_PER_CORE
     expect_dma: bool = False
+    expect_scalar_prefetch: bool = False
     description: str = ""
 
     def __post_init__(self):
@@ -116,7 +129,7 @@ class KernelContract:
 class Violation:
     contract: str
     case: str
-    check: str  # "vmem" | "divisibility" | "index_map" | "dma" | "trace"
+    check: str  # "vmem" | "divisibility" | "index_map" | "dma" | "scalar_prefetch" | "trace"
     message: str
 
     def __str__(self) -> str:
@@ -210,8 +223,13 @@ def _check_blocks(contract: KernelContract, case: ShapeCase, eqn) -> list[Violat
         imj = getattr(bm, "index_map_jaxpr", None)
         if imj is None:
             continue
+        # scalar-prefetch operands trail the grid indices in the index-map
+        # signature; the maps here never read them (`lambda b, *_: ...`), so
+        # zero placeholders keep eval_jaxpr's arity happy
+        n_extra = max(0, len(imj.jaxpr.invars) - len(points[0] if points else ()))
+        extra = [np.int32(0)] * n_extra
         for pt in points:
-            idx = jax.core.eval_jaxpr(imj.jaxpr, imj.consts, *map(np.int32, pt))
+            idx = jax.core.eval_jaxpr(imj.jaxpr, imj.consts, *map(np.int32, pt), *extra)
             vals = [int(v) for v in idx]
             if len(vals) != len(nblocks):
                 out.append(
@@ -241,6 +259,27 @@ def _check_blocks(contract: KernelContract, case: ShapeCase, eqn) -> list[Violat
                 )
                 break
     return out
+
+
+def _check_scalar_prefetch(
+    contract: KernelContract, case: ShapeCase, eqns
+) -> list[Violation]:
+    expected = case.expect_scalar_prefetch
+    if expected is None:
+        expected = contract.expect_scalar_prefetch
+    count = sum(jaxpr_walk.num_scalar_prefetch_operands(eqn) for eqn in eqns)
+    if expected and count == 0:
+        return [
+            Violation(
+                contract.name,
+                case.name,
+                "scalar_prefetch",
+                "contract expects scalar-prefetch operands at this case but the "
+                "traced pallas_call declares none (num_index_operands == 0) — "
+                "the dynamic-offset/trip-budget dispatch is not being taken",
+            )
+        ]
+    return []
 
 
 def _check_dma(contract: KernelContract, case: ShapeCase, eqns) -> list[Violation]:
@@ -308,12 +347,14 @@ def check_contract(
             out.extend(_check_vmem(contract, case, eqn))
             out.extend(_check_blocks(contract, case, eqn))
         out.extend(_check_dma(contract, case, eqns))
+        out.extend(_check_scalar_prefetch(contract, case, eqns))
     return out
 
 
 def all_contracts() -> dict[str, KernelContract]:
     """Import every kernel package's CONTRACT (the checked-in registry)."""
     from repro.kernels.block_prune import ops as block_prune
+    from repro.kernels.block_prune_csr import ops as block_prune_csr
     from repro.kernels.block_topk import ops as block_topk
     from repro.kernels.chunk_step import ops as chunk_step
     from repro.kernels.impact_scatter import ops as impact_scatter
@@ -321,7 +362,7 @@ def all_contracts() -> dict[str, KernelContract]:
     from repro.kernels.sparse_score import ops as sparse_score
 
     modules = (
-        block_prune, block_topk, chunk_step, impact_scatter,
+        block_prune, block_prune_csr, block_topk, chunk_step, impact_scatter,
         impact_scatter_topk, sparse_score,
     )
     out: dict[str, KernelContract] = {}

@@ -91,6 +91,37 @@ Phase 0/1 still run the split kernels (they execute once per query, not once
 per trip). The jnp body remains the parity oracle: the fused kernel evaluates
 the numerically identical expressions in the same order, so doc ids, theta,
 and ``WorkStats`` are bit-identical across all three modes.
+
+Multi-trip launches (``fused_chunk=True, trips_per_launch=N``)
+--------------------------------------------------------------
+The fused mode still exits to XLA on every while_loop trip — one launch plus
+a pool/theta/processed HBM round-trip per trip, multiplied by exactly the
+trip counts that explode under wacky weights. ``trips_per_launch=N`` runs up
+to N trip bodies inside ONE ``chunk_step`` launch: the engine hands the
+kernel a scalar-prefetched per-row trip budget
+(``min(max_chunks - chunks, N)``; 0 for already-finished rows), the state
+revolves in VMEM across the in-kernel trip loop with a per-trip early exit
+(a rank-safe row skips the remaining trips' DMAs and compute), and the
+while_loop advances ``chunks`` by the kernel's reported per-row
+``trips_done``. Each row's trip sequence is independent of the others, so
+the final pool/theta/processed AND the per-query trip counts are
+bit-identical to ``trips_per_launch=1`` — a launch is just a window of T
+consecutive trips, and a query's launch count drops to
+``ceil(chunks / trips_per_launch)``. Approximate mode (``exact=False``)
+clamps the budget to one trip so its single gated step stays flag-invariant.
+
+CSR-native phase 0 (``use_kernels=True``)
+-----------------------------------------
+Kernel-mode phase 0 used to densify the per-(query, slot) block-max lists to
+a ``[B, Lq, n_blocks]`` matrix — ``Lq`` x the footprint of the CSR lists it
+expands — just to feed ``block_prune_batched``'s MXU contraction. The
+``block_prune_csr`` kernel walks the CSR lists directly: the engine
+scalar-prefetches the per-slot list offsets/counts
+(:func:`csr_blockmax_offsets`), the kernel DMAs each slot's window out of
+the HBM-resident ``bm_block``/``bm_weight`` arrays, densifies it into a
+``[Lq, n_blocks]`` VMEM tile, and runs the SAME ``[1, Lq] x [Lq, NB]`` dot —
+so ``ub`` (and therefore ids and ``WorkStats``) is bit-identical while the
+dense intermediate never exists in the jaxpr.
 """
 from __future__ import annotations
 
@@ -176,10 +207,7 @@ def _gather_blockmax_lists(
     maxima (query weight NOT applied) and invalid slots zeroed; pad /
     zero-weight query slots map to the sentinel term's empty list.
     """
-    n_terms = index.n_terms
-    t = jnp.where(q_weights > 0, q_terms, n_terms)
-    base = index.term_bm_start[t]
-    cnt = jnp.minimum(index.term_bm_count[t], max_bm_per_term)
+    base, cnt = csr_blockmax_offsets(index, q_terms, q_weights, max_bm_per_term)
     offs = jnp.arange(max_bm_per_term, dtype=jnp.int32)
     idx = base[..., :, None] + offs
     valid = offs < cnt[..., :, None]
@@ -187,6 +215,23 @@ def _gather_blockmax_lists(
     blocks = jnp.where(valid, index.bm_block[idx], 0)
     w = jnp.where(valid, index.bm_weight[idx], 0.0)
     return blocks, w
+
+
+def csr_blockmax_offsets(
+    index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array, max_bm_per_term: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Scalar-prefetch operands for the CSR-native prune kernel.
+
+    The same sentinel/clamp logic as :func:`_gather_blockmax_lists` — pad /
+    zero-weight query slots map to the sentinel term's empty list, counts
+    clamp to the static per-term bound — but only the ``(base, cnt)``
+    ``i32[..., Lq]`` window descriptors are materialized; the lists
+    themselves stay in HBM for the kernel to DMA.
+    """
+    t = jnp.where(q_weights > 0, q_terms, index.n_terms)
+    base = index.term_bm_start[t].astype(jnp.int32)
+    cnt = jnp.minimum(index.term_bm_count[t], max_bm_per_term).astype(jnp.int32)
+    return base, cnt
 
 
 def block_upper_bounds(
@@ -263,9 +308,11 @@ def _dense_blockmax_rows(
     0 to the bound, mirroring :func:`block_upper_bounds`.
 
     Cost note: the dense layout is ``Lq`` x larger than the CSR lists it
-    expands (that IS the prune kernel's input contract), so phase 0 of the
-    kernel mode trades one-off HBM traffic here for the fused bound+threshold
-    pass; a CSR-native prune kernel is a ROADMAP item.
+    expands, which is why kernel-mode phase 0 no longer uses it — the
+    CSR-native ``block_prune_csr`` kernel walks the lists directly and the
+    analysis lane asserts this intermediate never appears in the traced
+    search. Kept as the dense ``block_prune`` kernel's input builder for its
+    oracle tests.
     """
     blocks, w = _gather_blockmax_lists(index, q_terms, q_weights, max_bm_per_term)
     B, Lq = q_terms.shape
@@ -403,7 +450,7 @@ blockmax_search = daat_search_vmap
 # argument).
 DAAT_STATICS = (
     "k", "est_blocks", "block_budget", "max_bm_per_term", "exact", "max_chunks",
-    "use_kernels", "fused_chunk",
+    "use_kernels", "fused_chunk", "trips_per_launch",
 )
 
 
@@ -421,6 +468,7 @@ def daat_search_batched(
     max_chunks: int | None = None,
     use_kernels: bool = False,
     fused_chunk: bool = False,
+    trips_per_launch: int = 1,
 ) -> DaatResult:
     """Natively batched block-max DAAT top-k. ``q_terms/q_weights: [B, Lq]``.
 
@@ -430,18 +478,28 @@ def daat_search_batched(
     docstring for the batched-loop semantics). Bit-identical doc ids and
     :class:`WorkStats` to :func:`daat_search_vmap`.
 
-    ``use_kernels=True`` routes phase 0's upper bounds through
-    ``block_prune_batched``, chunk selection through ``block_topk_batched``,
-    and chunk scoring through ``sparse_score_batched``; ``fused_chunk=True``
-    (kernel mode only) additionally collapses every phase-2 trip's
-    select+score+merge into the single VMEM-resident ``chunk_step`` kernel
-    (see module docstring); the jnp formulation stays the parity oracle.
+    ``use_kernels=True`` routes phase 0's upper bounds through the CSR-native
+    ``block_prune_csr`` kernel, chunk selection through
+    ``block_topk_batched``, and chunk scoring through
+    ``sparse_score_batched``; ``fused_chunk=True`` (kernel mode only)
+    additionally collapses every phase-2 trip's select+score+merge into the
+    single VMEM-resident ``chunk_step`` kernel, and ``trips_per_launch=N``
+    (fused mode only) runs up to N trips per launch inside that kernel (see
+    module docstring); the jnp formulation stays the parity oracle for every
+    combination.
     """
     if q_terms.ndim != 2:
         raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
     if fused_chunk and not use_kernels:
         raise ValueError(
             "fused_chunk fuses the kernel-mode chunk step; pass use_kernels=True"
+        )
+    if trips_per_launch < 1:
+        raise ValueError(f"trips_per_launch={trips_per_launch} must be >= 1")
+    if trips_per_launch > 1 and not fused_chunk:
+        raise ValueError(
+            "trips_per_launch > 1 batches trips inside the fused chunk_step "
+            "kernel; pass use_kernels=True, fused_chunk=True"
         )
     n_blocks = index.n_blocks
     est_blocks, block_budget, max_chunks = _resolve_daat_shapes(
@@ -451,13 +509,19 @@ def daat_search_batched(
     rows = jnp.arange(B, dtype=jnp.int32)[:, None]
 
     if use_kernels:
-        from repro.kernels.block_prune import ops as prune_ops
+        from repro.kernels.block_prune_csr import ops as prune_ops
         from repro.kernels.block_topk import ops as topk_ops
 
-        bm_rows = _dense_blockmax_rows(index, q_terms, q_weights, max_bm_per_term)
-        ub, _ = prune_ops.block_prune_batched(
-            bm_rows, q_weights.astype(jnp.float32),
+        # CSR-native phase 0: only the [B, Lq] window descriptors cross to
+        # the kernel; the dense [B, Lq, n_blocks] block-max intermediate the
+        # old block_prune_batched path densified never exists (the analysis
+        # lane asserts its absence from this jaxpr). ub stays bit-identical.
+        base, cnt = csr_blockmax_offsets(index, q_terms, q_weights, max_bm_per_term)
+        ub, _ = prune_ops.block_prune_csr_batched(
+            index.bm_block, index.bm_weight, base, cnt,
+            q_weights.astype(jnp.float32),
             jnp.full((B,), -jnp.inf, jnp.float32),  # no threshold yet: pure ub pass
+            n_blocks=n_blocks, max_bm_per_term=max_bm_per_term,
         )
         qvec = None  # the kernel scorer consumes (q_terms, q_weights) directly
 
@@ -498,6 +562,11 @@ def daat_search_batched(
     def cond(state):
         return jnp.any(active_rows(state))
 
+    # approximate mode applies the body ONCE outside the while_loop, so its
+    # launch must stay a single gated trip for flag-invariant results
+    trip_cap = trips_per_launch if exact else 1
+    multi_body = None
+
     if fused_chunk:
         from repro.kernels.chunk_step import ops as chunk_ops
 
@@ -514,6 +583,42 @@ def daat_search_batched(
                 block_size=index.block_size,
                 n_live=index.n_docs,
             )
+
+        if trip_cap > 1:
+
+            def multi_body(state):
+                """Up to ``trip_cap`` trips in ONE launch; state stays in VMEM.
+
+                The per-row scalar-prefetched budget folds the engine's
+                ``chunks < max_chunks`` bound into the kernel (a row never
+                overruns it) and zeroes out inactive rows, so the kernel's
+                in-kernel gating reproduces the per-trip loop's active
+                condition trip by trip — final state AND per-query trip
+                counts are bit-identical to ``trips_per_launch=1``.
+                """
+                pool_s, pool_i, processed, theta, chunks = state
+                act = active_rows(state)
+                trips_left = jnp.where(
+                    act, jnp.minimum(max_chunks - chunks, trip_cap), 0
+                ).astype(jnp.int32)
+                new_s, new_i, new_theta, new_processed, trips_done = (
+                    chunk_ops.chunk_step_multi_batched(
+                        index.doc_terms, index.doc_weights, q_terms, qw_raw,
+                        ub, processed, pool_s, pool_i, theta, trips_left,
+                        trips_per_launch=trip_cap,
+                        block_budget=block_budget,
+                        block_size=index.block_size,
+                        n_live=index.n_docs,
+                    )
+                )
+                # the kernel freezes trips_left == 0 rows itself; the masks
+                # keep the inactive-row guarantee structural regardless
+                pool_s = jnp.where(act[:, None], new_s, pool_s)
+                pool_i = jnp.where(act[:, None], new_i, pool_i)
+                processed = jnp.where(act[:, None], new_processed, processed)
+                theta = jnp.where(act, new_theta, theta)
+                chunks = chunks + jnp.where(act, trips_done, 0)
+                return pool_s, pool_i, processed, theta, chunks
 
     else:
 
@@ -546,6 +651,9 @@ def daat_search_batched(
         theta = jnp.where(act, new_theta, theta)
         chunks = chunks + act.astype(jnp.int32)
         return pool_s, pool_i, processed, theta, chunks
+
+    if multi_body is not None:
+        body = multi_body
 
     state = (pool_s, pool_i, processed, theta, jnp.zeros((B,), jnp.int32))
     if exact:

@@ -1,0 +1,1 @@
+from repro.kernels.block_prune_csr.ops import block_prune_csr_batched  # noqa: F401

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: CSR-native Block-Max upper bound + threshold prune.
+
+``block_prune_batched`` eats a densified ``[B, Lq, n_blocks]`` block-max
+matrix — ``Lq`` x the footprint of the CSR lists it expands from, written to
+HBM by the engine's scatter just to be re-read by the kernel. This kernel
+walks the CSR block-max lists directly: the per-(query, slot) window offsets
+and entry counts arrive via scalar prefetch (``PrefetchScalarGridSpec`` SMEM
+operands — DMA source offsets must be known before the body runs), each
+slot's ``[M]`` window of ``bm_block``/``bm_weight`` streams HBM->VMEM with
+double-buffered async copies (slot ``l+1`` prefetches while slot ``l``
+densifies), and the densified ``[Lq, NBp]`` tile exists only as VMEM scratch.
+
+Parity contract: the tile is densified with the exact masked-gather
+semantics of ``repro.core.daat._gather_blockmax_lists`` (a block id appears
+at most once per per-term list, so the masked one-hot sum reproduces the
+scatter-add), and the bound is the same ``[1, Lq] x [Lq, NB]`` MXU dot the
+dense kernel runs — ``ub`` is bit-identical to ``block_prune_batched`` on the
+densified rows, so engine ids and WorkStats cannot move.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _prune_csr_kernel_batched(
+    base_ref,  # SMEM i32[B, Lq] — scalar-prefetched window starts
+    cnt_ref,  # SMEM i32[B, Lq] — scalar-prefetched valid entry counts
+    qw_ref,  # f32[1, Lq]
+    theta_ref,  # f32[1, 1]
+    bm_block_hbm,  # i32[n_bm_pad] — stays in HBM, DMA'd per slot
+    bm_weight_hbm,  # f32[n_bm_pad] — stays in HBM, DMA'd per slot
+    ub_ref,  # out f32[1, NBp]
+    mask_ref,  # out i32[1, NBp]
+    bm_tile,  # VMEM f32[Lq, NBp] — the densified tile, never leaves VMEM
+    blk_buf,  # VMEM i32[2, M] — double-buffered block-id windows
+    w_buf,  # VMEM f32[2, M] — double-buffered block-max windows
+    sems,  # DMA semaphores (slot, block/weight)
+):
+    b = pl.program_id(0)
+    lq, nbp = bm_tile.shape
+    m = blk_buf.shape[1]
+
+    def window_dma(slot, l):
+        start = base_ref[b, l]
+        return (
+            pltpu.make_async_copy(
+                bm_block_hbm.at[pl.ds(start, m)], blk_buf.at[slot], sems.at[slot, 0]
+            ),
+            pltpu.make_async_copy(
+                bm_weight_hbm.at[pl.ds(start, m)], w_buf.at[slot], sems.at[slot, 1]
+            ),
+        )
+
+    for c in window_dma(0, 0):  # warm up the pipeline
+        c.start()
+    for l in range(lq):
+        slot = l % 2
+        if l + 1 < lq:  # prefetch the next slot's window while densifying
+            for c in window_dma((l + 1) % 2, l + 1):
+                c.start()
+        for c in window_dma(slot, l):
+            c.wait()
+        blk = blk_buf[slot]  # i32[M]
+        w = w_buf[slot].astype(jnp.float32)  # f32[M]
+        valid = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)[:, 0] < cnt_ref[b, l]
+        # a block id appears at most once per per-term list, so the masked
+        # one-hot sum IS the engine's scatter-add densification
+        onehot = (
+            blk[:, None] == jax.lax.broadcasted_iota(jnp.int32, (m, nbp), 1)
+        ) & valid[:, None]
+        bm_tile[l, :] = jnp.sum(jnp.where(onehot, w[:, None], 0.0), axis=0)
+
+    # the dense kernel's exact contraction: [1, Lq] x [Lq, NBp] on the MXU
+    qw = qw_ref[...].astype(jnp.float32)
+    theta = theta_ref[0, 0]
+    ub = jnp.dot(qw, bm_tile[...], preferred_element_type=jnp.float32)
+    ub_ref[...] = ub
+    mask_ref[...] = ((ub > theta) & (ub > 0)).astype(jnp.int32)
+
+
+def block_prune_csr_batched_kernel(
+    bm_block: jax.Array,  # i32[n_bm_pad] — padded so every window is in-bounds
+    bm_weight: jax.Array,  # f32[n_bm_pad]
+    base: jax.Array,  # i32[B, Lq]
+    cnt: jax.Array,  # i32[B, Lq] (already clamped to M)
+    q_weights: jax.Array,  # f32[B, Lq]
+    theta: jax.Array,  # f32[B]
+    *,
+    m: int,
+    nbp: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """CSR-walking (ub, survive_mask) over doc blocks: grid over B.
+
+    ``base``/``cnt`` ride in as scalar-prefetch operands; ``bm_block`` /
+    ``bm_weight`` stay HBM-resident and are windowed in by DMA.
+    """
+    B, lq = base.shape
+    row = lambda b, *_: (b, 0)  # noqa: E731 — scalar refs trail the index args
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, lq), row),
+            pl.BlockSpec((1, 1), row),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # CSR block ids: DMA only
+            pl.BlockSpec(memory_space=pltpu.ANY),  # CSR block maxima: DMA only
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nbp), row),
+            pl.BlockSpec((1, nbp), row),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((lq, nbp), jnp.float32),  # densified tile (VMEM-only)
+            pltpu.VMEM((2, m), jnp.int32),  # double-buffered id windows
+            pltpu.VMEM((2, m), jnp.float32),  # double-buffered max windows
+            pltpu.SemaphoreType.DMA((2, 2)),  # (slot, block/weight)
+        ],
+    )
+    ub, mask = pl.pallas_call(
+        _prune_csr_kernel_batched,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nbp), jnp.float32),
+            jax.ShapeDtypeStruct((B, nbp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        base, cnt, q_weights.reshape(B, lq), theta.reshape(B, 1),
+        bm_block, bm_weight,
+    )
+    return ub, mask

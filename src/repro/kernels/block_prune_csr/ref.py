@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the CSR-native block-prune kernel.
+
+The masked-gather densification below is ``_gather_blockmax_lists`` +
+``_dense_blockmax_rows`` from ``repro.core.daat``, inlined verbatim, followed
+by the dense kernel's contraction — so the kernel is simultaneously checked
+against the CSR semantics and against what ``block_prune_batched`` would have
+produced from the densified rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_prune_csr_batched_ref(
+    bm_block: jax.Array,  # i32[n_bm]
+    bm_weight: jax.Array,  # f32[n_bm]
+    base: jax.Array,  # i32[B, Lq]
+    cnt: jax.Array,  # i32[B, Lq]
+    q_weights: jax.Array,  # f32[B, Lq]
+    theta: jax.Array,  # f32[B]
+    *,
+    n_blocks: int,
+    max_bm_per_term: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns ``(ub[B, n_blocks], survive[B, n_blocks])``."""
+    B, lq = base.shape
+    m = max_bm_per_term
+    offs = jnp.arange(m, dtype=jnp.int32)
+    idx = base[..., :, None] + offs
+    valid = offs < jnp.minimum(cnt, m)[..., :, None]
+    idx = jnp.where(valid, idx, 0)
+    blocks = jnp.where(valid, bm_block[idx], 0)
+    w = jnp.where(valid, bm_weight[idx], 0.0)
+    rows = jnp.zeros((B, lq, n_blocks), jnp.float32)
+    b_ix = jnp.arange(B, dtype=jnp.int32)[:, None, None]
+    l_ix = jnp.arange(lq, dtype=jnp.int32)[None, :, None]
+    rows = rows.at[b_ix, l_ix, blocks].add(w)
+    ub = jnp.einsum(
+        "ql,qlb->qb", q_weights.astype(jnp.float32), rows
+    )
+    survive = (ub > theta[:, None]) & (ub > 0)
+    return ub, survive

@@ -31,6 +31,24 @@ appends sit at the highest ids, so they never displace a real block while
 like ``merge_topk``, and non-live / padded-doc candidates mask to ``-inf``
 before the merge. Doc ids, theta, and the processed bitmap are bit-identical
 to the jnp body; scores agree to f32 reassociation.
+
+Multi-trip launch (``_chunk_step_multi_kernel_batched``)
+--------------------------------------------------------
+The per-trip kernel above still exits to XLA on EVERY while_loop trip, so a
+skipping-collapsed (wacky-weight) query pays one launch plus a pool/theta/
+processed HBM round-trip per trip — multiplied by exactly the trip counts the
+paper shows explode. The multi-trip variant runs up to ``trips`` trip bodies
+inside ONE launch: the per-query state initializes the output blocks once,
+revolves in VMEM across trips, and crosses HBM once per *launch*. A
+scalar-prefetched per-row trip budget (``PrefetchScalarGridSpec``; the engine
+passes ``min(max_chunks - chunks, trips_per_launch)``, 0 for inactive rows)
+plus the in-kernel early exit — each trip body runs under
+``pl.when(t < budget AND max remaining ub > theta)``, so a row that goes
+rank-safe mid-launch skips the remaining trips' DMAs and compute entirely.
+Because each row's trip sequence never depends on other rows, running T trip
+bodies in-kernel is bit-identical to T per-trip launches; the extra
+``trips_done`` output row lets the engine advance its per-query chunk counts
+without re-deriving them.
 """
 from __future__ import annotations
 
@@ -42,14 +60,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _chunk_step_kernel_batched(
-    ub_ref,
-    proc_ref,
-    pool_s_ref,
-    pool_i_ref,
-    theta_ref,
-    qt_ref,
-    qw_ref,
+def _trip_body(
+    ub,  # f32[NBp] (value, not ref — constant across trips)
+    proc,  # i32[NBp] current processed row (1 = processed / pad)
+    theta,  # f32[] current threshold
+    pool_s,  # f32[k] current pool scores
+    pool_i,  # i32[k] current pool ids
+    qt,  # i32[Lq]
+    qw,  # f32[Lq]
     dt_hbm,
     dw_hbm,
     out_s_ref,
@@ -65,16 +83,16 @@ def _chunk_step_kernel_batched(
     bs: int,
     n_live: int,
 ):
+    """ONE select+score+merge trip; writes the new state into the out refs.
+
+    Shared verbatim between the per-trip and multi-trip kernels so the parity
+    contract (bit-identical ids/theta/processed vs the jnp while-body) is
+    maintained in exactly one place.
+    """
     # ---- select: remaining-ub top-budget, entirely from the VMEM ub row ----
-    ub = ub_ref[0, :]  # f32[NBp]
-    proc = proc_ref[0, :]  # i32[NBp] (1 = processed / pad)
-    theta = theta_ref[0, 0]
     rub = jnp.where(proc != 0, -jnp.inf, ub)
     ub_c, b_c = jax.lax.top_k(rub, budget)  # [budget], ties -> lowest block id
     live = ub_c > theta  # only these can change the top-k
-
-    qt = qt_ref[0, :]  # i32[Lq]
-    qw = qw_ref[0, :].astype(jnp.float32)
 
     # ---- score: doc-block revisiting loop, double-buffered HBM prefetch ----
     def doc_dma(slot, j):
@@ -110,12 +128,12 @@ def _chunk_step_kernel_batched(
         cand_ref[j, :] = s
 
     # ---- merge: pool + candidates -> new pool/theta (merge_topk order) ----
-    k = pool_s_ref.shape[1]
+    k = pool_s.shape[0]
     d_flat = (
         b_c[:, None] * bs + jax.lax.broadcasted_iota(jnp.int32, (budget, bs), 1)
     ).reshape(-1)
-    all_s = jnp.concatenate([pool_s_ref[0, :], cand_ref[...].reshape(-1)])
-    all_i = jnp.concatenate([pool_i_ref[0, :], d_flat.astype(jnp.int32)])
+    all_s = jnp.concatenate([pool_s, cand_ref[...].reshape(-1)])
+    all_i = jnp.concatenate([pool_i, d_flat.astype(jnp.int32)])
     ms, mpos = jax.lax.top_k(all_s, k)
     out_s_ref[0, :] = ms
     out_i_ref[0, :] = jnp.take(all_i, mpos)
@@ -127,6 +145,132 @@ def _chunk_step_kernel_batched(
         :, None
     ]
     out_proc_ref[0, :] = jnp.maximum(proc, jnp.any(hit, axis=0).astype(proc.dtype))
+
+
+def _chunk_step_kernel_batched(
+    ub_ref,
+    proc_ref,
+    pool_s_ref,
+    pool_i_ref,
+    theta_ref,
+    qt_ref,
+    qw_ref,
+    dt_hbm,
+    dw_hbm,
+    out_s_ref,
+    out_i_ref,
+    out_theta_ref,
+    out_proc_ref,
+    dt_buf,
+    dw_buf,
+    cand_ref,
+    sems,
+    *,
+    budget: int,
+    bs: int,
+    n_live: int,
+):
+    _trip_body(
+        ub_ref[0, :],
+        proc_ref[0, :],
+        theta_ref[0, 0],
+        pool_s_ref[0, :],
+        pool_i_ref[0, :],
+        qt_ref[0, :],
+        qw_ref[0, :].astype(jnp.float32),
+        dt_hbm,
+        dw_hbm,
+        out_s_ref,
+        out_i_ref,
+        out_theta_ref,
+        out_proc_ref,
+        dt_buf,
+        dw_buf,
+        cand_ref,
+        sems,
+        budget=budget,
+        bs=bs,
+        n_live=n_live,
+    )
+
+
+def _chunk_step_multi_kernel_batched(
+    trips_ref,  # SMEM i32[B] — scalar-prefetched per-row trip budget
+    ub_ref,
+    proc_ref,
+    pool_s_ref,
+    pool_i_ref,
+    theta_ref,
+    qt_ref,
+    qw_ref,
+    dt_hbm,
+    dw_hbm,
+    out_s_ref,
+    out_i_ref,
+    out_theta_ref,
+    out_proc_ref,
+    out_trips_ref,
+    dt_buf,
+    dw_buf,
+    cand_ref,
+    sems,
+    *,
+    trips: int,
+    budget: int,
+    bs: int,
+    n_live: int,
+):
+    """Up to ``trips`` trip bodies in ONE launch; state revolves in VMEM.
+
+    The per-query state (pool, theta, processed) initializes the output
+    blocks once and every trip reads/writes them in place — the output tile
+    is VMEM-resident for the whole grid cell, so nothing crosses HBM between
+    trips. Each trip runs under ``pl.when``: a row past its scalar-prefetched
+    budget, or already rank-safe (``max remaining ub <= theta``), skips the
+    trip's DMAs and compute entirely — the in-kernel early exit.
+    """
+    b = pl.program_id(0)
+    out_s_ref[...] = pool_s_ref[...]
+    out_i_ref[...] = pool_i_ref[...]
+    out_theta_ref[...] = theta_ref[...]
+    out_proc_ref[...] = proc_ref[...]
+    out_trips_ref[0, 0] = 0
+
+    ub = ub_ref[0, :]
+    qt = qt_ref[0, :]
+    qw = qw_ref[0, :].astype(jnp.float32)
+
+    for t in range(trips):
+        proc = out_proc_ref[0, :]
+        theta = out_theta_ref[0, 0]
+        more = jnp.max(jnp.where(proc != 0, -jnp.inf, ub)) > theta
+        active = (t < trips_ref[b]) & more
+
+        @pl.when(active)
+        def _one_trip(proc=proc, theta=theta):
+            _trip_body(
+                ub,
+                proc,
+                theta,
+                out_s_ref[0, :],
+                out_i_ref[0, :],
+                qt,
+                qw,
+                dt_hbm,
+                dw_hbm,
+                out_s_ref,
+                out_i_ref,
+                out_theta_ref,
+                out_proc_ref,
+                dt_buf,
+                dw_buf,
+                cand_ref,
+                sems,
+                budget=budget,
+                bs=bs,
+                n_live=n_live,
+            )
+            out_trips_ref[0, 0] = out_trips_ref[0, 0] + 1
 
 
 def chunk_step_batched_kernel(
@@ -194,3 +338,83 @@ def chunk_step_batched_kernel(
         interpret=interpret,
     )(ub, processed, pool_s, pool_i, theta, q_terms, q_weights, doc_terms, doc_weights)
     return out[0], out[1], out[2], out[3]
+
+
+def chunk_step_multi_batched_kernel(
+    ub: jax.Array,  # f32[B, NBp] (pad lanes = -inf)
+    processed: jax.Array,  # i32[B, NBp] (pad lanes = 1)
+    pool_s: jax.Array,  # f32[B, k]
+    pool_i: jax.Array,  # i32[B, k]
+    theta: jax.Array,  # f32[B, 1]
+    q_terms: jax.Array,  # i32[B, Lq]
+    q_weights: jax.Array,  # f32[B, Lq] (pad slots already zeroed)
+    doc_terms: jax.Array,  # i32[n_docs_pad, Tmax] — stays in HBM, DMA'd
+    doc_weights: jax.Array,  # f32[n_docs_pad, Tmax] — stays in HBM, DMA'd
+    trips_left: jax.Array,  # i32[B] — per-row trip budget (scalar-prefetched)
+    *,
+    trips: int,
+    budget: int,
+    bs: int,
+    n_live: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Up to ``trips`` fused chunk steps per query in ONE launch: grid over B.
+
+    Returns ``(pool_s, pool_i, theta, processed, trips_done)`` — the state
+    crosses the HBM boundary once per launch instead of once per trip;
+    ``trips_done[b]`` counts how many trip bodies actually ran for row ``b``
+    (the in-kernel early exit stops short of the budget once rank-safe).
+    """
+    B, nbp = ub.shape
+    k = pool_s.shape[1]
+    lq = q_terms.shape[1]
+    tmax = doc_terms.shape[1]
+
+    row = lambda b, *_: (b, 0)  # noqa: E731 — scalar refs trail the index args
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, nbp), row),
+            pl.BlockSpec((1, nbp), row),
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, 1), row),
+            pl.BlockSpec((1, lq), row),
+            pl.BlockSpec((1, lq), row),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # doc-major store: DMA only
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, k), row),
+            pl.BlockSpec((1, 1), row),
+            pl.BlockSpec((1, nbp), row),
+            pl.BlockSpec((1, 1), row),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bs, tmax), jnp.int32),  # double-buffered doc terms
+            pltpu.VMEM((2, bs, tmax), jnp.float32),  # double-buffered doc weights
+            pltpu.VMEM((budget, bs), jnp.float32),  # candidate score tile
+            pltpu.SemaphoreType.DMA((2, 2)),  # (slot, terms/weights)
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _chunk_step_multi_kernel_batched,
+            trips=trips, budget=budget, bs=bs, n_live=n_live,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, nbp), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        trips_left, ub, processed, pool_s, pool_i, theta, q_terms, q_weights,
+        doc_terms, doc_weights,
+    )
+    return out[0], out[1], out[2], out[3], out[4]

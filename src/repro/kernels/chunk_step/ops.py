@@ -17,7 +17,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.kernel_contracts import KernelContract, ShapeCase
-from repro.kernels.chunk_step.kernel import chunk_step_batched_kernel
+from repro.kernels.chunk_step.kernel import (
+    chunk_step_batched_kernel,
+    chunk_step_multi_batched_kernel,
+)
 from repro.kernels.common import interpret_default, pad_axis
 
 
@@ -83,26 +86,103 @@ def chunk_step_batched(
     return ps, pi, th[:, 0], pr[:, :nb].astype(jnp.bool_)
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "trips_per_launch", "block_budget", "block_size", "n_live", "interpret",
+    ),
+)
+def chunk_step_multi_batched(
+    doc_terms: jax.Array,
+    doc_weights: jax.Array,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    ub: jax.Array,
+    processed: jax.Array,
+    pool_s: jax.Array,
+    pool_i: jax.Array,
+    theta: jax.Array,
+    trips_left: jax.Array,
+    *,
+    trips_per_launch: int,
+    block_budget: int,
+    block_size: int,
+    n_live: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Up to ``trips_per_launch`` fused chunk steps in ONE kernel launch.
+
+    Same engine-state interface as :func:`chunk_step_batched` plus
+    ``trips_left: i32[B]`` — the per-row trip budget the kernel receives via
+    scalar prefetch (the engine passes ``min(max_chunks - chunks,
+    trips_per_launch)``; 0 freezes a row). Returns ``(pool_s, pool_i, theta,
+    processed, trips_done)``: the state after up to ``trips_per_launch``
+    sequential trips (the in-kernel early exit stops a row once rank-safe)
+    and the per-row count of trips that actually advanced.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    if trips_per_launch < 1:
+        raise ValueError(f"trips_per_launch={trips_per_launch} must be >= 1")
+    B, nb = ub.shape
+    if block_budget > nb:
+        raise ValueError(
+            f"block_budget={block_budget} exceeds n_blocks={nb}; the engine "
+            "clamps budgets before the loop"
+        )
+    ubp = pad_axis(ub.astype(jnp.float32), 1, 128, fill=-jnp.inf)
+    procp = pad_axis(processed.astype(jnp.int32), 1, 128, fill=1)
+    ps, pi, th, pr, td = chunk_step_multi_batched_kernel(
+        ubp,
+        procp,
+        pool_s.astype(jnp.float32),
+        pool_i.astype(jnp.int32),
+        theta.astype(jnp.float32).reshape(B, 1),
+        q_terms.astype(jnp.int32),
+        q_weights.astype(jnp.float32),
+        doc_terms,
+        doc_weights,
+        trips_left.astype(jnp.int32),
+        trips=trips_per_launch,
+        budget=block_budget,
+        bs=block_size,
+        n_live=n_live,
+        interpret=interpret,
+    )
+    return ps, pi, th[:, 0], pr[:, :nb].astype(jnp.bool_), td[:, 0]
+
+
 def _contract_call(dims):
-    """Trace target for the static checker: abstract engine-state inputs."""
+    """Trace target for the static checker: abstract engine-state inputs.
+
+    Cases with a ``trips`` dim trace the multi-trip (scalar-prefetched)
+    dispatch; the rest trace the per-trip kernel.
+    """
     sds = jax.ShapeDtypeStruct
     B, k, lq = dims["B"], dims["k"], dims["lq"]
     bs, tmax = dims["block_size"], dims["tmax"]
     nb = -(-dims["n_docs"] // bs)
     ndp = nb * bs
-    fn = partial(
-        chunk_step_batched,
-        block_budget=dims["budget"], block_size=bs, n_live=dims["n_docs"],
-        interpret=True,
-    )
-    args = (
+    state = (
         sds((ndp, tmax), jnp.int32), sds((ndp, tmax), jnp.float32),  # doc store
         sds((B, lq), jnp.int32), sds((B, lq), jnp.float32),  # queries
         sds((B, nb), jnp.float32), sds((B, nb), jnp.bool_),  # ub / processed
         sds((B, k), jnp.float32), sds((B, k), jnp.int32),  # pool
         sds((B,), jnp.float32),  # theta
     )
-    return fn, args
+    if "trips" in dims:
+        fn = partial(
+            chunk_step_multi_batched,
+            trips_per_launch=dims["trips"], block_budget=dims["budget"],
+            block_size=bs, n_live=dims["n_docs"], interpret=True,
+        )
+        return fn, state + (sds((B,), jnp.int32),)  # + trips_left
+    fn = partial(
+        chunk_step_batched,
+        block_budget=dims["budget"], block_size=bs, n_live=dims["n_docs"],
+        interpret=True,
+    )
+    return fn, state
 
 
 # Single source of truth for the sweep shapes in tests/test_chunk_step.py and
@@ -116,7 +196,10 @@ CONTRACT = KernelContract(
     make_call=_contract_call,
     expect_dma=True,
     # full B x budget x k cross on the 220-doc/bs=32 index (7 blocks: budget 3
-    # is non-divisible, 7 == n_blocks), plus the ragged bs=24 degenerate
+    # is non-divisible, 7 == n_blocks), plus the ragged bs=24 degenerate and
+    # the multi-trip (scalar-prefetched, in-kernel trip loop) cases — trips 1
+    # degenerates to one gated trip, trips 4 spans the whole 7-block index at
+    # budget 2, trips 3 exercises early exit headroom at the full budget
     shape_grid=tuple(
         ShapeCase(
             f"b{B}_budget{budget}_k{k}",
@@ -130,6 +213,24 @@ CONTRACT = KernelContract(
         ShapeCase(
             "ragged_bs24",  # bs not a lane multiple, 130/24 -> 6 blocks
             dict(B=2, budget=5, k=3, n_docs=130, block_size=24, lq=4, tmax=8),
+        ),
+    )
+    + tuple(
+        ShapeCase(
+            f"multi_b{B}_trips{trips}_budget{budget}",
+            dict(
+                B=B, trips=trips, budget=budget, k=5,
+                n_docs=220, block_size=32, lq=6, tmax=8,
+            ),
+            expect_scalar_prefetch=True,
+        )
+        for B, trips, budget in ((1, 1, 3), (3, 3, 7), (2, 4, 2))
+    )
+    + (
+        ShapeCase(
+            "multi_ragged_bs24",
+            dict(B=2, trips=2, budget=5, k=3, n_docs=130, block_size=24, lq=4, tmax=8),
+            expect_scalar_prefetch=True,
         ),
     ),
 )

@@ -62,3 +62,46 @@ def chunk_step_batched_ref(
     new_theta = ms[:, k - 1]
     new_processed = processed.at[rows, b_c].set(processed[rows, b_c] | live)
     return ms, new_i, new_theta, new_processed
+
+
+def chunk_step_multi_batched_ref(
+    doc_terms: jax.Array,
+    doc_weights: jax.Array,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    ub: jax.Array,
+    processed: jax.Array,
+    pool_s: jax.Array,
+    pool_i: jax.Array,
+    theta: jax.Array,
+    trips_left: jax.Array,  # i32[B] per-row trip budget
+    *,
+    trips_per_launch: int,
+    block_budget: int,
+    block_size: int,
+    n_live: int,
+    n_terms: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Multi-trip oracle: ``trips_per_launch`` sequential single-trip steps.
+
+    Per-row gating mirrors the engine's while-loop semantics exactly — a row
+    advances on trip ``t`` iff ``t < trips_left[row]`` AND it is not yet
+    rank-safe; frozen rows keep their state bit-for-bit. Returns the final
+    state plus ``trips_done[B]``, the per-row count of trips that advanced.
+    """
+    trips_done = jnp.zeros(trips_left.shape, jnp.int32)
+    for t in range(trips_per_launch):
+        rub = jnp.where(processed, -jnp.inf, ub)
+        act = (t < trips_left) & (jnp.max(rub, axis=-1) > theta)
+        ns, ni, nth, npr = chunk_step_batched_ref(
+            doc_terms, doc_weights, q_terms, q_weights,
+            ub, processed, pool_s, pool_i, theta,
+            block_budget=block_budget, block_size=block_size,
+            n_live=n_live, n_terms=n_terms,
+        )
+        pool_s = jnp.where(act[:, None], ns, pool_s)
+        pool_i = jnp.where(act[:, None], ni, pool_i)
+        theta = jnp.where(act, nth, theta)
+        processed = jnp.where(act[:, None], npr, processed)
+        trips_done = trips_done + act.astype(jnp.int32)
+    return pool_s, pool_i, theta, processed, trips_done

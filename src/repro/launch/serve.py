@@ -68,6 +68,12 @@ def main() -> None:
         "single VMEM-resident chunk_step kernel (needs --daat-use-kernels)",
     )
     ap.add_argument(
+        "--daat-trips-per-launch", type=int, default=1, metavar="N",
+        help="DAAT: batch up to N phase-2 trips inside one fused chunk_step "
+        "launch (pool/theta cross HBM once per launch; needs "
+        "--daat-fused-chunk)",
+    )
+    ap.add_argument(
         "--lq-buckets", type=_csv_ints, default=None, metavar="W1,W2,...",
         help="Lq bucket widths: pad each batch to the smallest covering "
         "bucket (one executable per (config, bucket); bit-identical results)",
@@ -90,6 +96,12 @@ def main() -> None:
         "--queue-safety-ms", type=float, default=2.0,
         help="flush headroom before each due instant (absorbs host dispatch cost)",
     )
+    ap.add_argument(
+        "--queue-max-wait-s", type=float, default=None,
+        help="age-based flush bound: a bucket flushes no later than "
+        "oldest-arrival + this many seconds (keeps deadline-less traffic "
+        "from starving in a never-full bucket)",
+    )
     ap.add_argument("--seed", type=int, default=0, help="arrival-schedule RNG seed")
     args = ap.parse_args()
     if args.queue and args.lq_buckets is None:
@@ -100,6 +112,13 @@ def main() -> None:
         ap.error("--daat-use-kernels selects DAAT kernels; use --engine daat")
     if args.daat_fused_chunk and not args.daat_use_kernels:
         ap.error("--daat-fused-chunk fuses the kernel chunk step; add --daat-use-kernels")
+    if args.daat_trips_per_launch < 1:
+        ap.error("--daat-trips-per-launch must be >= 1")
+    if args.daat_trips_per_launch > 1 and not args.daat_fused_chunk:
+        ap.error(
+            "--daat-trips-per-launch > 1 batches trips inside the fused "
+            "chunk_step kernel; add --daat-fused-chunk"
+        )
     if args.engine == "daat" and (args.deadline_ms is not None or args.rho is not None):
         ap.error("--deadline-ms/--rho are SAAT budgets; the daat engine cannot honor them")
 
@@ -119,6 +138,7 @@ def main() -> None:
         daat_est_blocks=args.daat_est_blocks, daat_block_budget=args.daat_block_budget,
         daat_use_kernels=args.daat_use_kernels,
         daat_fused_chunk=args.daat_fused_chunk,
+        daat_trips_per_launch=args.daat_trips_per_launch,
         lq_buckets=args.lq_buckets,
     )
     if args.queue:
@@ -166,6 +186,7 @@ def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
         batch_shapes=args.queue_shapes,
         clock=clock,
         safety_ms=args.queue_safety_ms,
+        max_wait_s=args.queue_max_wait_s,
     )
     rng = np.random.default_rng(args.seed)
     n = args.queries

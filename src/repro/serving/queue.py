@@ -37,7 +37,10 @@ Coalescing policy
 Flush-time policy
 -----------------
 A bucket is *due* at ``oldest.deadline - predicted_service(B, bucket) -
-safety``. ``poll()`` flushes every due bucket; ``next_due()`` exposes the
+safety`` — or at ``oldest.arrival + max_wait_s`` if that comes first: the
+age bound is what keeps best-effort traffic (``deadline_ms=None``) from
+starving in a bucket that never fills. ``poll()`` flushes every due bucket;
+``next_due()`` exposes the
 earliest such instant so a driver (or a simulated-clock test harness) can
 sleep exactly until the next decision point instead of busy-polling. A
 flush that happens later than its due instant is recorded as a policy
@@ -79,7 +82,10 @@ class SurvivorPredictor:
     number of blocks that outlive phase-1 pruning, which is what the batched
     while_loop's trip count — and therefore the batch tail — tracks. Queries
     with the same effective Lq tend to have similar survivor counts, so the
-    EMA is keyed by ``lq_eff`` with a global EMA as cold-start fallback.
+    EMA is keyed by ``lq_eff``; an unseen key falls back to the *nearest
+    observed* Lq key first (survivor counts are roughly monotone in Lq, so a
+    neighbor is informative where a global mean over a bimodal stream is
+    not), and to the global EMA only before any observation at all.
     """
 
     def __init__(self, alpha: float = 0.2):
@@ -98,6 +104,14 @@ class SurvivorPredictor:
         v = self._by_lq.get(lq_eff)
         if v is not None:
             return v
+        # unseen Lq: the nearest observed key beats the global EMA. Under a
+        # bimodal stream (say Lq 3 and 30) the global mean describes NO
+        # query, so predicting with it interleaved short and long queries in
+        # one batch — exactly the tail the survivor sort exists to avoid.
+        # Ties break toward the smaller key (stable, deterministic).
+        if self._by_lq:
+            nearest = min(self._by_lq, key=lambda key: (abs(key - lq_eff), key))
+            return self._by_lq[nearest]
         return self._global if self._global is not None else 0.0
 
 
@@ -165,6 +179,12 @@ class AdmissionQueue:
         share one time domain.
     safety_ms: subtracted from every due instant (headroom for dispatch
         overhead the cost model cannot see).
+    max_wait_s: age-based flush trigger — a bucket is due no later than
+        ``oldest.arrival + max_wait_s`` even when no deadline says so.
+        Without it, a non-full bucket whose pending requests all carry no
+        (or an infinite) deadline is never due: ``next_due()`` has nothing
+        to report and the requests starve until ``drain()``. ``None``
+        (default) keeps the pure deadline-driven policy.
     dynamic_rho: when True (SAAT only), each flush re-picks rho against the
         oldest request's *remaining* budget instead of the server default.
     """
@@ -176,6 +196,7 @@ class AdmissionQueue:
         batch_shapes: Sequence[int] = (8, 32),
         clock: Optional[Clock] = None,
         safety_ms: float = 0.0,
+        max_wait_s: Optional[float] = None,
         dynamic_rho: bool = False,
         max_lq: Optional[int] = None,
         survivor_alpha: float = 0.2,
@@ -194,6 +215,9 @@ class AdmissionQueue:
                 "server has no lq_buckets; pass max_lq= so the queue has a width grid"
             )
         self.safety_s = safety_ms / 1e3
+        if max_wait_s is not None and max_wait_s < 0:
+            raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
+        self.max_wait_s = max_wait_s
         self.dynamic_rho = dynamic_rho
         self.survivors = SurvivorPredictor(alpha=survivor_alpha)
         self._pending: dict[int, deque[_Request]] = {b: deque() for b in self.buckets}
@@ -205,9 +229,15 @@ class AdmissionQueue:
 
     # ------------------------------ admission ------------------------------
 
-    def submit(self, q_terms, q_weights, deadline_ms: float) -> int:
-        """Admit one request; returns its rid. May flush a now-full bucket."""
-        if deadline_ms <= 0:
+    def submit(self, q_terms, q_weights, deadline_ms: Optional[float] = None) -> int:
+        """Admit one request; returns its rid. May flush a now-full bucket.
+
+        ``deadline_ms=None`` (or ``inf``) admits a best-effort request with
+        no latency contract: it never makes its bucket due on its own, so it
+        flushes when the bucket fills, when a deadlined neighbor is due, or
+        at the ``max_wait_s`` age bound.
+        """
+        if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be positive, got {deadline_ms}")
         qt = np.asarray(q_terms, dtype=np.int32).reshape(-1)
         qw = np.asarray(q_weights, dtype=np.float32).reshape(-1)
@@ -228,7 +258,9 @@ class AdmissionQueue:
                 q_terms=qt[:eff].copy(),
                 q_weights=qw[:eff].copy(),
                 arrival_s=now,
-                deadline_s=now + deadline_ms / 1e3,
+                deadline_s=(
+                    float("inf") if deadline_ms is None else now + deadline_ms / 1e3
+                ),
                 lq_eff=eff,
                 bucket=bucket,
             )
@@ -255,7 +287,12 @@ class AdmissionQueue:
         shape = self._shape_for(len(q))
         predicted_ms = self.server.predict_service_ms(shape, bucket)
         oldest = min(r.deadline_s for r in q)
-        return oldest - predicted_ms / 1e3 - self.safety_s
+        due = oldest - predicted_ms / 1e3 - self.safety_s
+        # age bound: deadline-less (inf) requests would otherwise push `due`
+        # to +inf and starve in a bucket that never fills
+        if self.max_wait_s is not None:
+            due = min(due, min(r.arrival_s for r in q) + self.max_wait_s)
+        return due if due < float("inf") else None
 
     def next_due(self) -> Optional[float]:
         """Earliest instant at which some bucket must flush (None if empty)."""

@@ -78,6 +78,12 @@ class ServingConfig:
     # VMEM-resident chunk_step kernel (requires daat_use_kernels=True);
     # per-trip HBM traffic drops to the candidate/state output only
     daat_fused_chunk: bool = False
+    # batch up to this many phase-2 trips inside ONE fused chunk_step launch
+    # (requires daat_fused_chunk=True); pool/theta/processed cross HBM once
+    # per launch instead of once per trip. 1 = the per-trip launch cadence.
+    # Ignored (clamped to 1) when daat_exact=False: the anytime budget is
+    # enforced at trip granularity.
+    daat_trips_per_launch: int = 1
     # Lq bucket widths: each batch is padded to the smallest bucket covering
     # its live terms (one executable per (config, bucket) pair, bit-identical
     # results); None pads to whatever width the caller sends
@@ -92,14 +98,14 @@ class _CostModel:
     observable (and so calibration itself is testable on a simulated clock).
     A level is *calibrated* once it has been directly measured. Predictions
     for unmeasured levels interpolate piecewise-linearly in *total cost*
-    between the two bracketing calibrated levels; outside the calibrated
-    range the boundary level's per-Mpost rate extrapolates linearly (the
-    clamp). The old nearest-level-times-``rho/level`` rule mispredicted
-    wildly across the ladder whenever only a far level was calibrated — a
-    fixed per-call overhead measured at rho=100k, scaled x100, is not the
-    cost of rho=10M. ``predict_us`` returns ``None`` only when nothing has
-    been measured at all — callers must treat that as "unknown", never as
-    "free".
+    between the two bracketing calibrated levels. Above the calibrated range
+    the boundary level's per-Mpost rate extrapolates linearly; BELOW it the
+    prediction floors at the boundary level's measured total — fixed
+    per-call overhead does not shrink with rho, so scaling through the
+    origin under-predicts small budgets (the old nearest-level-times-
+    ``rho/level`` rule had the same disease across the whole ladder).
+    ``predict_us`` returns ``None`` only when nothing has been measured at
+    all — callers must treat that as "unknown", never as "free".
     """
 
     us_per_mpost: dict
@@ -120,10 +126,16 @@ class _CostModel:
         if not self.us_per_mpost:
             return None
         levels = sorted(self.us_per_mpost)
-        # outside the calibrated range: clamp to the boundary level's RATE
-        # (linear in rho from the nearest end — there is nothing to bracket)
+        # below the calibrated range: floor at the boundary level's measured
+        # TOTAL cost. Scaling linearly through the origin pretends the fixed
+        # per-call overhead (dispatch, plan sort, top-k) shrinks with rho —
+        # it doesn't, and the resulting under-prediction made pick_rho admit
+        # small-rho work that blew its deadline. Over-predicting a smaller
+        # rho by at most the boundary total is the safe direction.
         if rho <= levels[0]:
-            return self.us_per_mpost[levels[0]] * rho / 1e6
+            return self.us_per_mpost[levels[0]] * levels[0] / 1e6
+        # above it: the boundary RATE extrapolates linearly (dominated by the
+        # per-posting scan, so the rate is the right asymptote)
         if rho >= levels[-1]:
             return self.us_per_mpost[levels[-1]] * rho / 1e6
         hi_ix = bisect.bisect_left(levels, rho)
@@ -150,6 +162,16 @@ class AnytimeServer:
             raise ValueError(
                 "daat_fused_chunk fuses the kernel-mode chunk step; set "
                 "daat_use_kernels=True"
+            )
+        if cfg.daat_trips_per_launch < 1:
+            raise ValueError(
+                f"daat_trips_per_launch={cfg.daat_trips_per_launch} must be >= 1"
+            )
+        if cfg.daat_trips_per_launch > 1 and not cfg.daat_fused_chunk:
+            raise ValueError(
+                "daat_trips_per_launch > 1 batches trips inside the fused "
+                "chunk_step kernel; set daat_fused_chunk=True (and "
+                "daat_use_kernels=True)"
             )
         self.index = index
         self.cfg = cfg
@@ -261,6 +283,7 @@ class AnytimeServer:
             exact=self.cfg.daat_exact,
             use_kernels=self.cfg.daat_use_kernels,
             fused_chunk=self.cfg.daat_fused_chunk,
+            trips_per_launch=self.cfg.daat_trips_per_launch,
         )
 
     def engine_fn(self, rho: Optional[int] = None):
@@ -304,7 +327,7 @@ class AnytimeServer:
             statics: tuple = (
                 "daat", cfg.k, cfg.daat_est_blocks, cfg.daat_block_budget,
                 self.max_bm, cfg.daat_exact, cfg.daat_use_kernels,
-                cfg.daat_fused_chunk,
+                cfg.daat_fused_chunk, cfg.daat_trips_per_launch,
             )
         else:
             statics = (

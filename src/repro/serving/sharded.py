@@ -184,6 +184,7 @@ def make_sharded_serve_step(
     daat_exact: bool = True,
     daat_use_kernels: bool = False,
     daat_fused_chunk: bool = False,
+    daat_trips_per_launch: int = 1,
 ):
     """Builds ``serve(index_stack, q_terms, q_weights) -> (scores, ids)``.
 
@@ -219,6 +220,16 @@ def make_sharded_serve_step(
             "daat_fused_chunk fuses the kernel-mode chunk step; pass "
             "daat_use_kernels=True"
         )
+    if daat_trips_per_launch < 1:
+        raise ValueError(
+            f"daat_trips_per_launch={daat_trips_per_launch} must be >= 1"
+        )
+    if daat_trips_per_launch > 1 and not daat_fused_chunk:
+        raise ValueError(
+            "daat_trips_per_launch > 1 batches trips inside the fused "
+            "chunk_step kernel; pass daat_fused_chunk=True (and "
+            "daat_use_kernels=True)"
+        )
     axes = mesh_axes(mesh)
     dp = axes.data if len(axes.data) > 1 else axes.data[0]
     idx_specs = jax.tree.map(lambda _: P("model"), _index_data_template())
@@ -247,6 +258,7 @@ def make_sharded_serve_step(
                     exact=daat_exact,
                     use_kernels=daat_use_kernels,
                     fused_chunk=daat_fused_chunk,
+                    trips_per_launch=daat_trips_per_launch,
                 )
             else:
                 res = saat_search(
@@ -286,6 +298,7 @@ def make_sharded_serve_step(
         daat_est_blocks=daat_est_blocks, daat_block_budget=daat_block_budget,
         max_bm_per_term=max_bm_per_term, daat_exact=daat_exact,
         daat_use_kernels=daat_use_kernels, daat_fused_chunk=daat_fused_chunk,
+        daat_trips_per_launch=daat_trips_per_launch,
     )
     return serve, in_specs, out_specs
 

@@ -41,8 +41,8 @@ CONTRACTS = all_contracts()
 
 def test_every_kernel_package_declares_a_contract():
     assert set(CONTRACTS) == {
-        "block_prune", "block_topk", "chunk_step", "impact_scatter",
-        "impact_scatter_topk", "sparse_score",
+        "block_prune", "block_prune_csr", "block_topk", "chunk_step",
+        "impact_scatter", "impact_scatter_topk", "sparse_score",
     }
 
 
@@ -56,6 +56,17 @@ def test_chunk_step_contract_expects_dma():
     # the double-buffer race class only exists because the copies exist;
     # a refactor that silently drops the DMAs must trip expect_dma
     assert CONTRACTS["chunk_step"].expect_dma
+
+
+def test_csr_prune_contract_expects_scalar_prefetch():
+    # the CSR walk only works because the window offsets arrive via scalar
+    # prefetch; a refactor that re-densifies would drop the SMEM operands
+    assert CONTRACTS["block_prune_csr"].expect_scalar_prefetch
+    assert CONTRACTS["block_prune_csr"].expect_dma
+    # chunk_step's grid is mixed: only the multi-trip cases prefetch
+    assert any(
+        c.expect_scalar_prefetch for c in CONTRACTS["chunk_step"].shape_grid
+    )
 
 
 # --------------------------------------------------------------------------
@@ -104,6 +115,122 @@ def test_disciplined_dma_is_clean():
     report = jaxpr_walk.check_dma_discipline(_dma_kernel_jaxpr(wait_before_read=True))
     assert report.starts == 1 and report.waits == 1
     assert report.violations == []
+
+
+# --------------------------------------------------------------------------
+# seeded violation: destination-slot reuse across revolving-buffer trips
+# --------------------------------------------------------------------------
+
+
+def _dst_reuse_kernel_jaxpr(wait_between: bool):
+    """Two copies into the SAME destination slot on DIFFERENT semaphores —
+    the trip-loop revolving-buffer race the multi-trip chunk step could hit
+    if a trip re-issued a slot's copy before the previous trip drained it."""
+
+    def kern(src_hbm, o_ref, buf, sem):
+        c1 = pltpu.make_async_copy(
+            src_hbm.at[pl.ds(0, 8), :], buf.at[0], sem.at[0, 0]
+        )
+        c2 = pltpu.make_async_copy(
+            src_hbm.at[pl.ds(8, 8), :], buf.at[0], sem.at[1, 0]
+        )
+        c1.start()
+        if wait_between:
+            c1.wait()
+        c2.start()
+        c2.wait()
+        if not wait_between:
+            c1.wait()
+        o_ref[...] = buf[0]
+
+    f = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, 0)),
+        out_shape=_SDS((8, 128), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, 8, 128), jnp.float32),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+        interpret=True,
+    )
+    jx = jax.make_jaxpr(f)(_SDS((16, 128), jnp.float32))
+    (eqn,) = jaxpr_walk.find_pallas_calls(jx.jaxpr)
+    return eqn.params["jaxpr"]
+
+
+def test_dst_slot_reuse_is_caught():
+    report = jaxpr_walk.check_dma_discipline(_dst_reuse_kernel_jaxpr(wait_between=False))
+    assert report.starts == 2
+    assert report.violations, "the seeded destination-slot race must be flagged"
+    text = " ".join(report.violations)
+    assert "destination" in text and "still in flight" in text
+
+
+def test_dst_slot_reuse_with_wait_is_clean():
+    report = jaxpr_walk.check_dma_discipline(_dst_reuse_kernel_jaxpr(wait_between=True))
+    assert report.starts == 2 and report.waits == 2
+    assert report.violations == []
+
+
+# --------------------------------------------------------------------------
+# seeded violation: scalar prefetch expected but absent
+# --------------------------------------------------------------------------
+
+
+def test_expect_scalar_prefetch_without_prefetch_is_caught():
+    no_sp = KernelContract(
+        name="seeded_no_scalar_prefetch",
+        make_call=_blocked_op,
+        expect_scalar_prefetch=True,
+        shape_grid=(ShapeCase("aligned", dict(n=128, blk=64)),),
+    )
+    violations = check_contract(no_sp)
+    assert any(v.check == "scalar_prefetch" for v in violations)
+
+
+def test_scalar_prefetch_expectation_per_case_override():
+    # contract-level default False, one case opting in: only that case fires
+    mixed = KernelContract(
+        name="seeded_mixed_scalar_prefetch",
+        make_call=_blocked_op,
+        shape_grid=(
+            ShapeCase("plain", dict(n=128, blk=64)),
+            ShapeCase(
+                "wants_prefetch", dict(n=128, blk=64),
+                expect_scalar_prefetch=True,
+            ),
+        ),
+    )
+    violations = check_contract(mixed)
+    sp = [v for v in violations if v.check == "scalar_prefetch"]
+    assert [v.case for v in sp] == ["wants_prefetch"]
+
+
+# --------------------------------------------------------------------------
+# seeded violation: the densified [B, Lq, n_blocks] intermediate
+# --------------------------------------------------------------------------
+
+
+def test_densified_blockmax_is_caught():
+    from repro.analysis.hot_path import check_no_densified_blockmax
+
+    B, lq, nb = 2, 6, 7
+    jx = jax.make_jaxpr(
+        lambda qw, rows: jnp.einsum("ql,qlb->qb", qw, rows)
+    )(_SDS((B, lq), jnp.float32), _SDS((B, lq, nb), jnp.float32))
+    violations = check_no_densified_blockmax(jx, (B, lq, nb), "seeded", "dense")
+    assert violations, "the densified intermediate must be flagged"
+    assert all(v.check == "dense_blockmax" for v in violations)
+    assert "block_prune_csr" not in str(violations[0])  # message is generic
+    assert "CSR" in str(violations[0])
+
+
+def test_daat_phase0_gate_is_clean():
+    from repro.analysis.check import run_daat_phase0_checks
+
+    assert run_daat_phase0_checks() == []
 
 
 # --------------------------------------------------------------------------
@@ -280,6 +407,7 @@ def test_cli_list(capsys):
     assert check_main(["--list"]) == 0
     out = capsys.readouterr().out
     assert "chunk_step" in out and "expect_dma=True" in out
+    assert "block_prune_csr" in out
 
 
 def test_cli_single_contract(capsys):

@@ -20,8 +20,15 @@ from repro.core.daat import (
     score_blocks,
 )
 from repro.core.topk import topk
-from repro.kernels.chunk_step.ops import CONTRACT, chunk_step_batched
-from repro.kernels.chunk_step.ref import chunk_step_batched_ref
+from repro.kernels.chunk_step.ops import (
+    CONTRACT,
+    chunk_step_batched,
+    chunk_step_multi_batched,
+)
+from repro.kernels.chunk_step.ref import (
+    chunk_step_batched_ref,
+    chunk_step_multi_batched_ref,
+)
 
 pytestmark = pytest.mark.kernels
 
@@ -92,6 +99,32 @@ def _assert_step_bitwise(idx, qt, qw, state, *, budget):
     return got
 
 
+def _assert_multi_step_bitwise(idx, qt, qw, state, trips_left, *, budget, trips):
+    """Multi-trip kernel vs its jnp oracle: all five outputs bitwise."""
+    ub, processed, pool_s, pool_i, theta = state
+    qw_raw = jnp.where(qw > 0, qw, 0.0)
+    tl = jnp.asarray(trips_left, jnp.int32)
+    got = chunk_step_multi_batched(
+        idx.doc_terms, idx.doc_weights, qt, qw_raw,
+        ub, processed, pool_s, pool_i, theta, tl,
+        trips_per_launch=trips, block_budget=budget,
+        block_size=idx.block_size, n_live=idx.n_docs,
+    )
+    want = chunk_step_multi_batched_ref(
+        idx.doc_terms, idx.doc_weights, qt, qw,
+        ub, processed, pool_s, pool_i, theta, tl,
+        trips_per_launch=trips, block_budget=budget,
+        block_size=idx.block_size, n_live=idx.n_docs, n_terms=idx.n_terms,
+    )
+    names = ("pool_s", "pool_i", "theta", "processed", "trips_done")
+    for name, g, r in zip(names, got, want):
+        np.testing.assert_array_equal(
+            np.asarray(g), np.asarray(r),
+            err_msg=f"multi-trip chunk step {name} diverged (bitwise)",
+        )
+    return got
+
+
 # --------------------------------------------------------------------------
 # interpret-mode degenerate sweeps (op vs jnp body)
 # --------------------------------------------------------------------------
@@ -104,12 +137,92 @@ def _assert_step_bitwise(idx, qt, qw, state, *, budget):
 def test_chunk_step_sweep(dims):
     """Executes the CONTRACT's exact shape grid (what the checker traces):
     the full B x budget x k cross on the 7-block index — budget 3 is
-    non-divisible, 7 == n_blocks — plus the ragged bs=24 degenerate."""
+    non-divisible, 7 == n_blocks — plus the ragged bs=24 degenerate and the
+    multi-trip cases (``trips`` dim present: the scalar-prefetched launch
+    with heterogeneous per-row trip budgets, including a zero-budget row)."""
     idx = _tiny_index(n_docs=dims["n_docs"], block_size=dims["block_size"])
     rng = np.random.default_rng(dims["B"] * 100 + dims["budget"] * 10 + dims["k"])
     qt, qw = _random_queries(idx, rng, dims["B"], dims["lq"])
     state = _phase1_state(idx, qt, qw, k=dims["k"])
-    _assert_step_bitwise(idx, qt, qw, state, budget=dims["budget"])
+    if "trips" in dims:
+        trips = dims["trips"]
+        # heterogeneous budgets spanning 0..trips exercise the per-row gate
+        trips_left = np.arange(dims["B"], dtype=np.int32) % (trips + 1)
+        _assert_multi_step_bitwise(
+            idx, qt, qw, state, trips_left, budget=dims["budget"], trips=trips
+        )
+    else:
+        _assert_step_bitwise(idx, qt, qw, state, budget=dims["budget"])
+
+
+def test_multi_trip_matches_sequential_single_trips():
+    """One multi-trip launch == the same trips applied one launch at a time
+    (the exact equivalence the engine's trips_per_launch routing relies on)."""
+    idx = _tiny_index()
+    rng = np.random.default_rng(11)
+    qt, qw = _random_queries(idx, rng, 3, 5)
+    state = _phase1_state(idx, qt, qw, k=4)
+    trips = 4
+    got = _assert_multi_step_bitwise(
+        idx, qt, qw, state, np.full(3, trips, np.int32), budget=2, trips=trips
+    )
+    ub = state[0]
+    qw_raw = jnp.where(qw > 0, qw, 0.0)
+    _, processed, pool_s, pool_i, theta = state
+    for _ in range(trips):
+        rub = jnp.where(processed, -jnp.inf, ub)
+        act = jnp.max(rub, axis=-1, initial=-jnp.inf) > theta
+        step = chunk_step_batched(
+            idx.doc_terms, idx.doc_weights, qt, qw_raw,
+            ub, processed, pool_s, pool_i, theta,
+            block_budget=2, block_size=idx.block_size, n_live=idx.n_docs,
+        )
+        m = act[:, None]
+        pool_s = jnp.where(m, step[0], pool_s)
+        pool_i = jnp.where(m, step[1], pool_i)
+        theta = jnp.where(act, step[2], theta)
+        processed = jnp.where(m, step[3], processed)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(pool_s))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(pool_i))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(theta))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(processed))
+
+
+def test_multi_trip_early_exit_counts_trips():
+    """trips_done stops where a row goes rank-safe or its budget ends; a
+    zero-budget row rides through the launch bit-for-bit untouched."""
+    idx = _tiny_index()
+    rng = np.random.default_rng(12)
+    qt, qw = _random_queries(idx, rng, 3, 5)
+    ub, processed, pool_s, pool_i, theta = _phase1_state(idx, qt, qw, k=4)
+    trips_left = np.array([0, 2, 8], np.int32)
+    got = _assert_multi_step_bitwise(
+        idx, qt, qw, (ub, processed, pool_s, pool_i, theta), trips_left,
+        budget=3, trips=8,
+    )
+    trips_done = np.asarray(got[4])
+    assert trips_done[0] == 0
+    assert trips_done[1] <= 2
+    # the 7-block index at budget 3 is fully scored in <= 3 trips: row 2's
+    # in-kernel early exit must fire well before its 8-trip budget
+    assert trips_done[2] < 8
+    np.testing.assert_array_equal(np.asarray(got[0])[0], np.asarray(pool_s)[0])
+    np.testing.assert_array_equal(np.asarray(got[3])[0], np.asarray(processed)[0])
+
+
+def test_multi_trip_validates_budget():
+    idx = _tiny_index()
+    rng = np.random.default_rng(13)
+    qt, qw = _random_queries(idx, rng, 2, 4)
+    ub, processed, pool_s, pool_i, theta = _phase1_state(idx, qt, qw, k=3)
+    with pytest.raises(ValueError, match="trips_per_launch"):
+        chunk_step_multi_batched(
+            idx.doc_terms, idx.doc_weights, qt, qw,
+            ub, processed, pool_s, pool_i, theta,
+            jnp.ones((2,), jnp.int32),
+            trips_per_launch=0, block_budget=2,
+            block_size=idx.block_size, n_live=idx.n_docs,
+        )
 
 
 def test_chunk_step_all_pruned_trip():
@@ -251,6 +364,62 @@ def test_engine_fused_chunk_max_chunks_cap(bm25_index, bm25_queries):
         k=10, est_blocks=1, block_budget=1, exact=True, max_chunks=1,
     )
     assert int(np.asarray(f.chunks).max()) <= 1
+
+
+@pytest.mark.parametrize("trips", [2, 3, 8])
+def test_engine_multi_trip_parity(bm25_index, bm25_queries, trips):
+    """trips_per_launch is invisible: ids/scores/WorkStats bitwise vs the
+    per-trip fused mode (which itself is pinned to the jnp oracle above)."""
+    qt, qw = bm25_queries
+    kw = dict(
+        k=10, est_blocks=2, block_budget=2, exact=True,
+        max_bm_per_term=max_blocks_per_term(bm25_index),
+        use_kernels=True, fused_chunk=True,
+    )
+    f = daat_search_batched(bm25_index, jnp.asarray(qt), jnp.asarray(qw), **kw)
+    m = daat_search_batched(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw),
+        trips_per_launch=trips, **kw,
+    )
+    np.testing.assert_array_equal(np.asarray(m.doc_ids), np.asarray(f.doc_ids))
+    np.testing.assert_array_equal(np.asarray(m.scores), np.asarray(f.scores))
+    for field in ("n_survivors", "blocks_scored", "chunks", "rank_safe"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(m.stats, field)),
+            np.asarray(getattr(f.stats, field)),
+            err_msg=f"WorkStats.{field} diverged under trips_per_launch={trips}",
+        )
+
+
+def test_engine_multi_trip_anytime_flag_invariant(bm25_index, bm25_queries):
+    """exact=False clamps the trip batching to 1: the anytime budget is
+    enforced per trip, so trips_per_launch must not change anything."""
+    qt, qw = bm25_queries
+    kw = dict(
+        k=10, est_blocks=2, block_budget=2, exact=False,
+        max_bm_per_term=max_blocks_per_term(bm25_index),
+        use_kernels=True, fused_chunk=True,
+    )
+    a = daat_search_batched(bm25_index, jnp.asarray(qt), jnp.asarray(qw), **kw)
+    b = daat_search_batched(
+        bm25_index, jnp.asarray(qt), jnp.asarray(qw), trips_per_launch=4, **kw
+    )
+    np.testing.assert_array_equal(np.asarray(b.doc_ids), np.asarray(a.doc_ids))
+    np.testing.assert_array_equal(np.asarray(b.scores), np.asarray(a.scores))
+    np.testing.assert_array_equal(
+        np.asarray(b.stats.chunks), np.asarray(a.stats.chunks)
+    )
+
+
+def test_engine_multi_trip_requires_fused_chunk(bm25_index, bm25_queries):
+    qt, qw = bm25_queries
+    with pytest.raises(ValueError, match="fused_chunk"):
+        daat_search_batched(
+            bm25_index, jnp.asarray(qt[:2]), jnp.asarray(qw[:2]),
+            k=5, est_blocks=2, block_budget=2,
+            max_bm_per_term=max_blocks_per_term(bm25_index),
+            use_kernels=True, fused_chunk=False, trips_per_launch=2,
+        )
 
 
 def test_engine_fused_chunk_requires_kernels(bm25_index, bm25_queries):

@@ -159,6 +159,25 @@ def test_tiled_topk_matches_full():
     np.testing.assert_allclose(np.asarray(x)[np.asarray(i2)], np.asarray(s1))
 
 
+def test_tiled_topk_k_equals_pool_size():
+    """k == n must return the whole pool, exactly sorted, with a valid
+    permutation of indices — including when the pool is ragged across tiles
+    (k is clamped per tile, so every tile contributes all of its entries)."""
+    rng = np.random.default_rng(3)
+    for n, num_tiles in ((96, 8), (100, 8), (7, 3)):  # even, ragged, tiny
+        x = jnp.asarray(rng.normal(size=n), jnp.float32)
+        s, i = tiled_topk(x, n, num_tiles=num_tiles)
+        assert s.shape == (n,) and i.shape == (n,)
+        np.testing.assert_allclose(np.asarray(s), np.sort(np.asarray(x))[::-1])
+        # indices are a permutation of the pool and consistent with scores
+        assert sorted(np.asarray(i).tolist()) == list(range(n))
+        np.testing.assert_allclose(np.asarray(x)[np.asarray(i)], np.asarray(s))
+    # k beyond the pool clamps to n (mirrors topk())
+    x = jnp.asarray(rng.normal(size=16), jnp.float32)
+    s, i = tiled_topk(x, 50, num_tiles=4)
+    assert s.shape == (16,)
+
+
 def test_merge_topk():
     sa = jnp.asarray([9.0, 5.0, 1.0])
     ia = jnp.asarray([1, 2, 3], jnp.int32)

@@ -444,9 +444,128 @@ def test_survivor_predictor_ema():
     assert p.predict(3) == 10.0
     p.observe(3, 20.0)
     assert p.predict(3) == pytest.approx(15.0)
-    assert p.predict(7) == pytest.approx(15.0)  # global fallback
+    assert p.predict(7) == pytest.approx(15.0)  # nearest observed key (3)
     p.observe(7, 100.0)
     assert p.predict(7) == 100.0
+
+
+def test_survivor_predictor_nearest_key_beats_global():
+    """Unseen Lq under a bimodal stream: the nearest observed key predicts,
+    not the global EMA (which describes NO query in a bimodal mix)."""
+    p = SurvivorPredictor(alpha=0.2)
+    p.observe(2, 5.0)
+    p.observe(30, 400.0)
+    # global EMA is 0.8*5 + 0.2*400 = 84 — wrong for BOTH modes
+    assert p._global == pytest.approx(84.0)
+    assert p.predict(3) == pytest.approx(5.0)  # nearest is 2
+    assert p.predict(28) == pytest.approx(400.0)  # nearest is 30
+    assert p.predict(16) == pytest.approx(5.0)  # tie |2-16|==|30-16| -> smaller
+    assert p.predict(2) == pytest.approx(5.0)  # exact keys still exact
+
+
+def test_queue_bimodal_lq_coschedules_with_neighbor(bm25_index, bm25_queries):
+    """DAAT survivor sort under a bimodal stream: an UNSEEN Lq rides with its
+    neighboring mode instead of the global EMA. With history at Lq 4 (cheap)
+    and Lq 30 (expensive), a first-ever Lq-3 request must tie with the Lq-4
+    mode — stable FIFO keeps it first — where the old global fallback
+    predicted 84 survivors and bumped it behind the cheap Lq-4 request."""
+    qt, qw = bm25_queries
+    clock = SimulatedClock()
+    srv = _queue_server(bm25_index, qt.shape[1], engine="daat", clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(2,), clock=clock)
+    q.survivors.observe(4, 5.0)
+    q.survivors.observe(30, 400.0)
+    assert q.survivors._global == pytest.approx(84.0)  # describes no mode
+    captured = {}
+    real_search = srv.search_batch
+
+    def spy(qt_, qw_, rho=None):
+        captured["qt"] = np.asarray(qt_)
+        return real_search(qt_, qw_, rho=rho)
+
+    srv.search_batch = spy
+    n_terms = bm25_index.n_terms
+    # both requests land in bucket 4 (same lane): Lq 3 first, then Lq 4
+    q.submit(np.array([1, 2, 3], np.int32), np.ones(3, np.float32), deadline_ms=50.0)
+    q.submit(np.array([4, 5, 6, 7], np.int32), np.ones(4, np.float32), deadline_ms=50.0)
+    q.drain()
+    # nearest-key predicts Lq 3 ~ Lq 4: tie -> FIFO keeps the Lq-3 row first
+    assert captured["qt"].shape[0] == 2
+    assert int((captured["qt"][0] != n_terms).sum()) == 3
+    assert int((captured["qt"][1] != n_terms).sum()) == 4
+
+
+def test_queue_max_wait_flushes_deadline_less_traffic(bm25_index, bm25_queries):
+    """The starvation bug: a non-full bucket of deadline-less requests was
+    never due (next_due() = None) and sat until drain(). max_wait_s bounds
+    the wait at oldest-arrival + max_wait, pinned on a simulated clock."""
+    qt, qw = bm25_queries
+    clock = SimulatedClock()
+    srv = _queue_server(bm25_index, qt.shape[1], clock=clock)
+    t3, w3 = np.array([1, 2, 3], np.int32), np.ones(3, np.float32)
+
+    # without the age bound the request starves: nothing is ever due
+    starved = AdmissionQueue(srv, batch_shapes=(4,), clock=clock)
+    starved.submit(t3, w3, deadline_ms=None)
+    assert starved.next_due() is None
+    clock.advance(3600.0)
+    assert starved.poll() == [] and starved.pending() == 1
+
+    bounded = AdmissionQueue(srv, batch_shapes=(4,), clock=clock, max_wait_s=0.05)
+    t0 = clock.now()
+    bounded.submit(t3, w3, deadline_ms=None)
+    assert bounded.next_due() == pytest.approx(t0 + 0.05)
+    clock.advance(0.049)
+    assert bounded.poll() == []  # age bound not reached yet
+    clock.advance_to(t0 + 0.05)
+    comps = bounded.poll()
+    assert len(comps) == 1 and comps[0].wait_ms == pytest.approx(50.0)
+    assert bounded.flush_log[-1].reason == "deadline"
+    assert not bounded.flush_log[-1].violation  # inf deadline is never late
+
+
+def test_queue_max_wait_coexists_with_deadlines(bm25_index, bm25_queries):
+    """An earlier hard deadline still wins over the age bound, and the age
+    bound still wins over a distant deadline."""
+    qt, qw = bm25_queries
+    clock = SimulatedClock()
+    srv = _queue_server(bm25_index, qt.shape[1], clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(4,), clock=clock, max_wait_s=1.0)
+    t3, w3 = np.array([1, 2, 3], np.int32), np.ones(3, np.float32)
+    t0 = clock.now()
+    q.submit(t3, w3, deadline_ms=10.0)  # deadline due at +10 ms beats +1 s age
+    assert q.next_due() == pytest.approx(t0 + 0.010)
+    clock.advance_to(q.next_due())
+    assert len(q.poll()) == 1
+    t1 = clock.now()
+    q.submit(t3, w3, deadline_ms=60_000.0)  # distant deadline: age bound wins
+    assert q.next_due() == pytest.approx(t1 + 1.0)
+    with pytest.raises(ValueError, match="max_wait_s"):
+        AdmissionQueue(srv, batch_shapes=(4,), clock=clock, max_wait_s=-0.1)
+
+
+def test_queue_drain_final_partial_flush_accounting(bm25_index, bm25_queries):
+    """drain()'s ragged last batch: the full flush happens on admission, the
+    remainder pads with sentinels, and ONLY real rows reach the survivor
+    predictor / per-request accounting."""
+    qt, qw = bm25_queries
+    clock = SimulatedClock()
+    srv = _queue_server(bm25_index, qt.shape[1], engine="daat", clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(2, 4), clock=clock)
+    observed: list = []
+    real_observe = q.survivors.observe
+    q.survivors.observe = lambda lq, s: (observed.append((lq, s)), real_observe(lq, s))[1]
+    t3, w3 = np.array([1, 2, 3], np.int32), np.ones(3, np.float32)
+    rids = [q.submit(t3, w3, deadline_ms=None) for _ in range(7)]
+    comps = q.take_completions()  # the 4-wide full flush fired on admission
+    assert len(comps) == 4 and q.pending() == 3
+    comps += q.drain()  # ragged remainder: 3 real rows in the 4-wide shape
+    assert sorted(c.rid for c in comps) == rids
+    last = q.flush_log[-1]
+    assert last.reason == "drain" and last.n_real == 3 and last.batch_shape == 4
+    # 4 real rows from the full flush + 3 from the drain, never the sentinel
+    assert len(observed) == 7
+    assert q.n_submitted == q.n_completed == 7
 
 
 def test_replay_arrivals_requires_simulated_clock(bm25_index, bm25_queries):

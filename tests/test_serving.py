@@ -133,9 +133,12 @@ def test_cost_model_ema_convergence_and_interpolation():
         m.update(1_000_000, 300.0)
     assert m.predict_us(1_000_000) == pytest.approx(300.0, rel=1e-3)
     assert m.last_update_s[1_000_000] == pytest.approx(40.0)
-    # one calibrated level: rho outside it clamps to that level's RATE
+    # one calibrated level: above it, clamp to that level's RATE; below it,
+    # floor at the level's measured TOTAL — small batches still pay the full
+    # launch/dispatch overhead, so rate-scaling 300 us down to 150 us was a
+    # systematic under-prediction that admitted infeasible work
     assert m.predict_us(2_000_000) == pytest.approx(600.0, rel=1e-3)
-    assert m.predict_us(500_000) == pytest.approx(150.0, rel=1e-3)
+    assert m.predict_us(500_000) == pytest.approx(300.0, rel=1e-3)
     # two calibrated levels: in-between rho interpolates TOTAL cost between
     # the bracketing levels instead of scaling the nearest level's rate —
     # the old rule predicted 8 * 500 = 4000 us for 8M, jumping wildly at the
@@ -148,6 +151,66 @@ def test_cost_model_ema_convergence_and_interpolation():
     assert m.predict_us(10_000_000) == pytest.approx(5000.0, rel=1e-3)
     # beyond the top level: clamp to the top level's rate
     assert m.predict_us(20_000_000) == pytest.approx(10_000.0, rel=1e-3)
+
+
+@pytest.mark.serving
+def test_cost_model_low_end_floors_at_boundary_total(bm25_index):
+    """Seeding ONLY a high-rho level must not make small-rho work look
+    fractionally cheap: a 100k-posting batch pays the same launch/dispatch
+    overhead as the measured 5M-posting one, so its prediction floors at the
+    boundary level's measured total instead of rate-scaling through the
+    origin (the old rule predicted 5000 * 0.1/5 = 100 us and over-admitted)."""
+    from repro.serving.scheduler import _CostModel
+
+    m = _CostModel({}, alpha=0.5)
+    m.update(5_000_000, 5000.0)  # measured 5000 us total at 5M postings
+    # every rho at or below the only calibrated level predicts its total
+    assert m.predict_us(5_000_000) == pytest.approx(5000.0)
+    assert m.predict_us(1_000_000) == pytest.approx(5000.0)
+    assert m.predict_us(100_000) == pytest.approx(5000.0)
+    # above it still extrapolates by rate
+    assert m.predict_us(10_000_000) == pytest.approx(10_000.0)
+
+    # end to end: with only the big level measured as slow, a deadline that
+    # the old origin-scaled estimate called feasible for the small level now
+    # correctly falls back to the smallest rung instead of "fitting" rho=100
+    srv = AnytimeServer(
+        bm25_index, ServingConfig(rho_ladder=(100, 1000, 10**9), deadline_ms=1.0)
+    )
+    srv._cost.us_per_mpost[srv.rho_ladder[-1]] = 1e9  # seconds total: nothing fits
+    srv._cost.last_update_s[srv.rho_ladder[-1]] = 0.0
+    assert srv._cost.predict_us(100) == pytest.approx(
+        srv._cost.predict_us(srv.rho_ladder[-1])
+    )
+    assert srv.pick_rho() == srv.rho_ladder[0]
+
+
+def test_server_rejects_multi_trip_without_fused_chunk(bm25_index):
+    """daat_trips_per_launch > 1 batches trips inside the fused kernel."""
+    with pytest.raises(ValueError, match="daat_fused_chunk"):
+        AnytimeServer(
+            bm25_index,
+            ServingConfig(engine="daat", daat_use_kernels=True, daat_trips_per_launch=4),
+        )
+    with pytest.raises(ValueError, match="daat_trips_per_launch"):
+        AnytimeServer(
+            bm25_index, ServingConfig(engine="daat", daat_trips_per_launch=0)
+        )
+
+
+def test_sharded_daat_rejects_multi_trip_without_fused_chunk(bm25_index):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="daat_fused_chunk"):
+        make_sharded_serve_step(
+            mesh, k=5, rho_per_shard=0, max_segs_per_term=0, docs_per_shard=100,
+            engine="daat", max_bm_per_term=4, daat_use_kernels=True,
+            daat_trips_per_launch=2,
+        )
+    with pytest.raises(ValueError, match="daat_trips_per_launch"):
+        make_sharded_serve_step(
+            mesh, k=5, rho_per_shard=0, max_segs_per_term=0, docs_per_shard=100,
+            engine="daat", max_bm_per_term=4, daat_trips_per_launch=0,
+        )
 
 
 class _ScriptedClock:
