@@ -55,6 +55,7 @@ def main(argv=None) -> None:
         side_blockmax_vs_exhaustive,
         side_bucketed_vs_padded,
         side_daat_vs_saat_batched,
+        side_degrade_vs_violate,
         side_fused_chunk_vs_split,
         side_fused_vs_unfused,
         table1_models_systems,
@@ -73,6 +74,7 @@ def main(argv=None) -> None:
         ("side_fused_vs_unfused", side_fused_vs_unfused),
         ("side_fused_chunk_vs_split", side_fused_chunk_vs_split),
         ("side_bucketed_vs_padded", side_bucketed_vs_padded),
+        ("side_degrade_vs_violate", side_degrade_vs_violate),
         ("roofline", roofline),
     ]
     if args.only:

@@ -214,7 +214,10 @@ def lint_server(
     if label is None:
         label = f"server:{cfg.engine}"
     if rhos is None:
-        rhos = [None] if cfg.engine == "daat" else [server.rho_ladder[0], server.rho_ladder[-1]]
+        # EVERY ladder level: deadline degradation may flush any calibrated
+        # rho, so each level is a dispatchable executable the key invariant
+        # must cover (endpoints alone would miss a mid-ladder collision)
+        rhos = [None] if cfg.engine == "daat" else list(server.rho_ladder)
     buckets = list(server.lq_buckets) if server.lq_buckets is not None else [8]
     out: list = []
     by_key: dict = {}

@@ -188,7 +188,43 @@ def build_impact_index(
     keep = weights > 0
     doc_idx, term_idx, weights = doc_idx[keep], term_idx[keep], weights[keep]
     if doc_idx.size == 0:
-        raise ValueError("empty corpus")
+        # Degenerate but legal: a shard whose doc range holds no postings
+        # (short final shard of an uneven split, aggressively filtered
+        # corpus). Every CSR count is zero, so the engines touch nothing —
+        # but the posting/segment/block-max stores still get padded rows so
+        # no zero-length array ever reaches a jitted gather.
+        _, scale = quantize(weights, quant, max_weight=quant_max_weight)
+        max_doc_terms = max(1, max_doc_terms or 1)
+        n_docs_pad = _round_up(max(n_docs, 1), block_size)
+        zc = np.zeros(n_terms + 1, dtype=np.int32)
+        return ImpactIndex(
+            doc_ids=jnp.zeros(max(pad_postings_to, 1), dtype=jnp.int32),
+            seg_term=jnp.full(1, n_terms, dtype=jnp.int32),
+            seg_weight=jnp.zeros(1, dtype=jnp.float32),
+            seg_start=jnp.zeros(1, dtype=jnp.int32),
+            seg_len=jnp.zeros(1, dtype=jnp.int32),
+            term_seg_start=jnp.asarray(zc),
+            term_seg_count=jnp.asarray(zc),
+            term_post_count=jnp.asarray(zc),
+            term_max_weight=jnp.zeros(n_terms + 1, dtype=jnp.float32),
+            bm_block=jnp.zeros(1, dtype=jnp.int32),
+            bm_weight=jnp.zeros(1, dtype=jnp.float32),
+            term_bm_start=jnp.asarray(zc),
+            term_bm_count=jnp.asarray(zc),
+            doc_terms=jnp.full((n_docs_pad, max_doc_terms), n_terms, dtype=jnp.int32),
+            doc_weights=jnp.zeros((n_docs_pad, max_doc_terms), dtype=jnp.float32),
+            doc_n_terms=jnp.zeros(n_docs_pad, dtype=jnp.int32),
+            doc_weight_sum=jnp.zeros(n_docs_pad, dtype=jnp.float32),
+            n_docs=int(n_docs),
+            n_terms=int(n_terms),
+            n_blocks=int(n_docs_pad // block_size),
+            block_size=int(block_size),
+            max_doc_terms=int(max_doc_terms),
+            scale=float(scale),
+            bits=int(quant.bits),
+            max_segs=0,
+            max_bm=0,
+        )
 
     # -- deduplicate (doc, term) pairs by summing weights (bag-of-words) --
     key = doc_idx * n_terms + term_idx

@@ -97,6 +97,20 @@ def main() -> None:
         help="flush headroom before each due instant (absorbs host dispatch cost)",
     )
     ap.add_argument(
+        "--degrade-rho", action="store_true",
+        help="SAAT + --queue: a flush that can no longer meet the oldest "
+        "deadline at the full budget degrades to the largest calibrated rho "
+        "that still fits (degradation replaces violation; served levels are "
+        "reported per flush)",
+    )
+    ap.add_argument(
+        "--eval-qrels", action="store_true",
+        help="report the effectiveness ledger against the synthetic corpus "
+        "qrels: Recall/MRR/NDCG per rho level vs the exact budget (direct "
+        "mode) or per rho actually served (--queue mode), plus the smallest "
+        "rho within 3%% MRR loss",
+    )
+    ap.add_argument(
         "--queue-max-wait-s", type=float, default=None,
         help="age-based flush bound: a bucket flushes no later than "
         "oldest-arrival + this many seconds (keeps deadline-less traffic "
@@ -121,6 +135,10 @@ def main() -> None:
         )
     if args.engine == "daat" and (args.deadline_ms is not None or args.rho is not None):
         ap.error("--deadline-ms/--rho are SAAT budgets; the daat engine cannot honor them")
+    if args.degrade_rho and not args.queue:
+        ap.error("--degrade-rho is a flush-time policy of the admission queue; add --queue")
+    if args.degrade_rho and args.engine != "saat":
+        ap.error("--degrade-rho trades the SAAT posting budget; use --engine saat")
 
     corpus = generate_corpus(CorpusConfig(n_docs=args.docs, n_queries=args.queries))
     enc = apply_treatment(corpus, args.model)
@@ -149,19 +167,29 @@ def main() -> None:
     server.reset_stats()
     scores, ids = run_query_stream(server, qt, qw)
     stats = server.stats()
-    print(
-        json.dumps(
-            {
-                "model": args.model,
-                "n_docs": corpus.n_docs,
-                "n_postings": index.n_postings,
-                "rr@10": round(mrr_at_k(ids, corpus.qrels, 10), 4),
-                "latency": {k: round(v, 3) for k, v in stats.row().items()},
-                "tail_ratio_p99_p50": round(stats.tail_ratio, 2),
-            },
-            indent=1,
+    report = {
+        "model": args.model,
+        "n_docs": corpus.n_docs,
+        "n_postings": index.n_postings,
+        "rr@10": round(mrr_at_k(ids, corpus.qrels, 10), 4),
+        "latency": {k: round(v, 3) for k, v in stats.row().items()},
+        "tail_ratio_p99_p50": round(stats.tail_ratio, 2),
+    }
+    if args.eval_qrels:
+        if args.engine != "saat":
+            raise SystemExit("--eval-qrels sweeps the SAAT rho ladder; use --engine saat")
+        from repro.metrics.ir_metrics import cheapest_rho_within_loss, rho_effectiveness_sweep
+
+        sweep = rho_effectiveness_sweep(
+            server, qt, qw, np.asarray(corpus.qrels),
+            recall_k=min(args.k, 100), batch_size=args.batch,
         )
-    )
+        report["effectiveness_by_rho"] = [
+            {k: (round(v, 4) if isinstance(v, float) else v) for k, v in row.items()}
+            for row in sweep
+        ]
+        report["rho_within_3pct_mrr_loss"] = cheapest_rho_within_loss(sweep, max_loss=0.03)
+    print(json.dumps(report, indent=1))
 
 
 def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
@@ -187,6 +215,7 @@ def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
         clock=clock,
         safety_ms=args.queue_safety_ms,
         max_wait_s=args.queue_max_wait_s,
+        degrade_rho=args.degrade_rho,
     )
     rng = np.random.default_rng(args.seed)
     n = args.queries
@@ -208,26 +237,46 @@ def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
     for f in queue.flush_log:
         key = f"b{f.bucket}xB{f.batch_shape}"
         flush_counts[key] = flush_counts.get(key, 0) + 1
-    print(
-        json.dumps(
+    report = {
+        "model": args.model,
+        "mode": "admission-queue",
+        "requests": n,
+        "completed": queue.n_completed,
+        "deadline_policy_violations": queue.n_violations,
+        "infeasible_on_arrival": queue.n_infeasible,
+        "degraded_flushes": queue.n_degraded,
+        "rr@10": round(mrr_at_k(ids, qrels, 10), 4),
+        "queue_wait_ms": {k: round(v, 3) for k, v in waits.row().items()},
+        "flushes": dict(sorted(flush_counts.items())),
+        "flush_reasons": {
+            r: sum(1 for f in queue.flush_log if f.reason == r)
+            for r in ("full", "deadline", "drain")
+        },
+    }
+    if args.eval_qrels:
+        # effectiveness of what was ACTUALLY served, grouped by flush rho —
+        # the live-traffic ledger of the degradation trade
+        from repro.metrics.ir_metrics import effectiveness_report
+
+        groups: dict = {}
+        for c in by_rid:
+            groups.setdefault(c.rho, []).append(c)
+        report["effectiveness_by_served_rho"] = [
             {
-                "model": args.model,
-                "mode": "admission-queue",
-                "requests": n,
-                "completed": queue.n_completed,
-                "deadline_policy_violations": queue.n_violations,
-                "infeasible_on_arrival": queue.n_infeasible,
-                "rr@10": round(mrr_at_k(ids, qrels, 10), 4),
-                "queue_wait_ms": {k: round(v, 3) for k, v in waits.row().items()},
-                "flushes": dict(sorted(flush_counts.items())),
-                "flush_reasons": {
-                    r: sum(1 for f in queue.flush_log if f.reason == r)
-                    for r in ("full", "deadline", "drain")
+                "rho": rho,
+                "n_queries": len(cs),
+                **{
+                    k: (round(v, 4) if isinstance(v, float) else v)
+                    for k, v in effectiveness_report(
+                        np.stack([c.doc_ids for c in cs]),
+                        qrels[[c.rid for c in cs]],
+                        recall_k=min(args.k, 100),
+                    ).items()
                 },
-            },
-            indent=1,
-        )
-    )
+            }
+            for rho, cs in sorted(groups.items(), key=lambda kv: (kv[0] is None, kv[0] or 0))
+        ]
+    print(json.dumps(report, indent=1))
 
 
 if __name__ == "__main__":

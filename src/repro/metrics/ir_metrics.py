@@ -1,5 +1,42 @@
-"""IR effectiveness metrics: RR@10 (the paper's official metric), recall, NDCG."""
+"""IR effectiveness metrics and the rho-degradation effectiveness harness.
+
+Point metrics: RR@10 (the paper's official metric), Recall@k, NDCG@k, and
+top-k overlap. On top of them this module quantifies the paper's serving
+trade — *what does each rho level cost in effectiveness?* — two ways:
+
+  * :func:`rho_effectiveness_sweep` serves a labeled query set directly at
+    every ladder level and reports per-rho Recall@k/MRR/NDCG plus relative
+    loss against the exhaustive (max-rho) level;
+  * :func:`replay_effectiveness` / :func:`effectiveness_surface` push the
+    same labeled set through a continuous-batching
+    :class:`~repro.serving.queue.AdmissionQueue` *under load*, so the rho
+    each query was actually served at is decided by the deadline-driven
+    flush policy (``degrade_rho``), and effectiveness is accounted per
+    served level — the effectiveness-vs-rho-vs-deadline surface behind the
+    paper's "≤3% loss buys large mean/tail gains" claim.
+
+Qrels replay format
+-------------------
+A labeled replay is four parallel sequences, one entry per request ``i``
+(request ``i`` gets rid ``i``, so completions re-align by rid):
+
+  * ``arrivals_s[i]``   — arrival instant (seconds, clock domain), ascending;
+  * ``q_terms_list[i]`` / ``q_weights_list[i]`` — the ragged query (int term
+    ids / float weights, trailing padding allowed);
+  * ``qrels[i]``        — the single relevant doc id (MS MARCO style). The
+    point metrics also accept ``[n_queries, R]`` graded qrels with ``-1``
+    padding (see :func:`ndcg_at_k`), but the replay harness keys its
+    per-rho grouping on the 1-D form.
+
+Queries are replayed on the queue's injectable clock: a
+:class:`~repro.metrics.latency.SimulatedClock` makes the whole surface a
+deterministic function of the schedule (CI), a
+:class:`~repro.metrics.latency.HybridClock` keeps the scripted arrivals but
+accrues real measured service time (load rehearsal).
+"""
 from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -82,3 +119,217 @@ def rank_overlap(ids_a: np.ndarray, ids_b: np.ndarray, k: int) -> float:
     for i in range(a.shape[0]):
         out.append(len(np.intersect1d(a[i], b[i])) / k)
     return float(np.mean(out))
+
+
+# --------------------------------------------------------------------------
+# the rho-degradation effectiveness harness
+# --------------------------------------------------------------------------
+
+
+def effectiveness_report(
+    ranked_doc_ids: np.ndarray,
+    qrels: np.ndarray,
+    *,
+    recall_k: int = 100,
+    mrr_k: int = 10,
+    ndcg_k: int = 10,
+) -> dict:
+    """The harness's standard metric triple for one ranking set."""
+    return {
+        "mrr": mrr_at_k(ranked_doc_ids, qrels, mrr_k),
+        "recall": recall_at_k(ranked_doc_ids, qrels, recall_k),
+        "ndcg": ndcg_at_k(ranked_doc_ids, qrels, ndcg_k),
+        "mrr_k": mrr_k,
+        "recall_k": recall_k,
+        "ndcg_k": ndcg_k,
+    }
+
+
+def _relative_loss(value: float, exact: float) -> float:
+    """Fractional effectiveness lost vs the exhaustive level (floored at 0:
+    a budget that happens to beat exhaustive on a small label set is not a
+    negative loss the 3%-tolerance selector should reward)."""
+    if exact <= 0.0:
+        return 0.0
+    return max(0.0, (exact - value) / exact)
+
+
+def _serve_ids_at_rho(server, q_terms, q_weights, rho, batch_size):
+    import jax.numpy as jnp  # lazy: keep the metrics module numpy-cheap
+
+    N = q_terms.shape[0]
+    out = []
+    for lo in range(0, N, batch_size):
+        hi = min(lo + batch_size, N)
+        bt, bw = q_terms[lo:hi], q_weights[lo:hi]
+        if hi - lo < batch_size:  # pad final batch (served, then dropped)
+            pad = batch_size - (hi - lo)
+            bt = np.concatenate([bt, np.repeat(bt[-1:], pad, 0)])
+            bw = np.concatenate([bw, np.repeat(bw[-1:], pad, 0)])
+        res = server.search_batch(jnp.asarray(bt), jnp.asarray(bw), rho=rho)
+        out.append(np.asarray(res.doc_ids)[: hi - lo])
+    return np.concatenate(out)
+
+
+def rho_effectiveness_sweep(
+    server,
+    q_terms: np.ndarray,  # [N, Lq]
+    q_weights: np.ndarray,
+    qrels: np.ndarray,  # [N] single relevant doc per query
+    *,
+    recall_k: int = 100,
+    mrr_k: int = 10,
+    ndcg_k: int = 10,
+    batch_size: Optional[int] = None,
+) -> list:
+    """Serve a labeled set at EVERY ladder level; one row per rho.
+
+    Each row carries the metric triple plus ``loss_mrr/loss_recall/loss_ndcg``
+    — relative loss against the exhaustive level (the ladder top, which the
+    server caps at the index's own posting count). This is the direct
+    (no-queue) arm of the harness: what each budget costs in effectiveness,
+    independent of load.
+    """
+    qt = np.asarray(q_terms)
+    qw = np.asarray(q_weights)
+    rels = np.asarray(qrels)
+    bs = int(batch_size) if batch_size is not None else int(server.cfg.batch_size)
+    rows = []
+    by_rho = {}
+    for rho in server.rho_ladder:
+        ids = _serve_ids_at_rho(server, qt, qw, rho, bs)
+        by_rho[rho] = effectiveness_report(
+            ids, rels, recall_k=recall_k, mrr_k=mrr_k, ndcg_k=ndcg_k
+        )
+    exact = by_rho[server.rho_ladder[-1]]
+    for rho in server.rho_ladder:
+        rep = by_rho[rho]
+        rows.append(
+            {
+                "rho": int(rho),
+                "exact": rho == server.rho_ladder[-1],
+                **rep,
+                "loss_mrr": _relative_loss(rep["mrr"], exact["mrr"]),
+                "loss_recall": _relative_loss(rep["recall"], exact["recall"]),
+                "loss_ndcg": _relative_loss(rep["ndcg"], exact["ndcg"]),
+            }
+        )
+    return rows
+
+
+def cheapest_rho_within_loss(
+    sweep_rows: Sequence[dict], *, max_loss: float = 0.03, metric: str = "mrr"
+) -> Optional[int]:
+    """Smallest ladder level within ``max_loss`` relative loss of exhaustive.
+
+    This is "the largest tolerable degradation": the most aggressive posting
+    budget the paper's ≤3%-effectiveness-loss tolerance admits (every level
+    at or above it also qualifies — the sweep's losses are what make the
+    claim auditable). Returns None when no level qualifies, which can only
+    happen if ``max_loss`` excludes even the exhaustive level's own 0.0.
+    """
+    key = f"loss_{metric}"
+    fits = [r for r in sweep_rows if r[key] <= max_loss]
+    return int(min(fits, key=lambda r: r["rho"])["rho"]) if fits else None
+
+
+def replay_effectiveness(
+    queue,
+    arrivals_s: Sequence[float],
+    q_terms_list: Sequence[np.ndarray],
+    q_weights_list: Sequence[np.ndarray],
+    deadlines_ms: Sequence[float],
+    qrels: np.ndarray,
+    *,
+    recall_k: int = 100,
+    mrr_k: int = 10,
+    ndcg_k: int = 10,
+) -> dict:
+    """Push a labeled arrival schedule through an AdmissionQueue and account
+    effectiveness per rho level *actually served* (see the module docstring
+    for the replay format).
+
+    The flush policy — not the caller — decides each request's budget, so
+    under overload with ``degrade_rho=True`` the report shows exactly what
+    the SLO cost: which fraction of traffic was degraded, to which levels,
+    and what each level scored on the labels. Returns one surface row::
+
+        {"n_requests", "violations", "infeasible", "degraded_flushes",
+         "wait_ms": {...percentiles...}, "overall": {metric triple},
+         "by_rho": [{"rho", "n_queries", ...metric triple...}, ...]}
+    """
+    from repro.metrics.latency import summarize_latencies  # lazy: no cycle
+    from repro.serving.queue import replay_arrivals
+
+    rels = np.asarray(qrels)
+    if rels.ndim != 1:
+        raise ValueError(
+            f"replay harness needs 1-D single-relevant qrels, got {rels.shape}"
+        )
+    if len(arrivals_s) != rels.shape[0]:
+        raise ValueError(
+            f"{len(arrivals_s)} arrivals vs {rels.shape[0]} qrels entries"
+        )
+    comps = replay_arrivals(queue, arrivals_s, q_terms_list, q_weights_list, deadlines_ms)
+    comps = sorted(comps, key=lambda c: c.rid)
+    ids = np.stack([c.doc_ids for c in comps])
+    served_rho = [c.rho for c in comps]
+    waits = summarize_latencies([c.wait_ms for c in comps])
+    by_rho = []
+    for rho in sorted({r for r in served_rho if r is not None}):
+        pick = np.asarray([r == rho for r in served_rho])
+        by_rho.append(
+            {
+                "rho": int(rho),
+                "n_queries": int(pick.sum()),
+                **effectiveness_report(
+                    ids[pick], rels[pick], recall_k=recall_k, mrr_k=mrr_k, ndcg_k=ndcg_k
+                ),
+            }
+        )
+    return {
+        "n_requests": len(comps),
+        "violations": queue.n_violations,
+        "infeasible": queue.n_infeasible,
+        "degraded_flushes": queue.n_degraded,
+        "wait_ms": {k: round(v, 4) for k, v in waits.row().items()},
+        "overall": effectiveness_report(
+            ids, rels, recall_k=recall_k, mrr_k=mrr_k, ndcg_k=ndcg_k
+        ),
+        "by_rho": by_rho,
+    }
+
+
+def effectiveness_surface(
+    queue_factory: Callable[[float], object],
+    deadlines_ms: Sequence[float],
+    arrivals_s: Sequence[float],
+    q_terms_list: Sequence[np.ndarray],
+    q_weights_list: Sequence[np.ndarray],
+    qrels: np.ndarray,
+    **report_kw,
+) -> list:
+    """Effectiveness-vs-rho-vs-deadline surface: one replay per deadline.
+
+    ``queue_factory(deadline_ms)`` must build a FRESH queue (and state) for
+    each replay — reusing one queue would leak calibration and flush logs
+    across deadline points. Each row is :func:`replay_effectiveness`'s dict
+    plus the ``deadline_ms`` that produced it: tightening the deadline
+    shifts traffic down the rho ladder, and the surface shows what that
+    costs on the labels.
+    """
+    rows = []
+    for d in deadlines_ms:
+        queue = queue_factory(float(d))
+        row = replay_effectiveness(
+            queue,
+            arrivals_s,
+            q_terms_list,
+            q_weights_list,
+            [float(d)] * len(arrivals_s),
+            qrels,
+            **report_kw,
+        )
+        row["deadline_ms"] = float(d)
+        rows.append(row)
+    return rows

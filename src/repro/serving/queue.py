@@ -46,6 +46,16 @@ sleep exactly until the next decision point instead of busy-polling. A
 flush that happens later than its due instant is recorded as a policy
 violation in ``flush_log`` — the serving suite asserts there are none.
 
+``degrade_rho=True`` (SAAT only) arms the anytime knob the paper's serving
+argument turns on: when a lane's due instant arrives before it fills, the
+flush serves at the **largest calibrated rho whose predicted service still
+meets the oldest deadline** (``AnytimeServer.pick_degraded_rho``) instead of
+blowing the deadline at the full budget. The rho actually served is recorded
+on every ``FlushRecord`` and ``Completion``, and the violation judgement
+uses the served level's predicted service — degradation *replaces*
+violation, and the effectiveness cost of each degraded flush is auditable
+against the rho ladder (see ``repro.metrics.ir_metrics``).
+
 The ``Clock`` injection point
 -----------------------------
 All time in this subsystem flows through one injectable
@@ -187,6 +197,15 @@ class AdmissionQueue:
         (default) keeps the pure deadline-driven policy.
     dynamic_rho: when True (SAAT only), each flush re-picks rho against the
         oldest request's *remaining* budget instead of the server default.
+    degrade_rho: when True (SAAT only), a flush that can no longer meet the
+        oldest deadline at the default budget degrades to the largest
+        *calibrated* ladder level whose predicted service for this exact
+        ``(batch shape, bucket)`` still fits the remaining time
+        (``AnytimeServer.pick_degraded_rho``); the served level is recorded
+        in ``flush_log``/completions and the violation judgement uses it.
+        Differs from ``dynamic_rho`` in consulting the shape-keyed
+        service-time EMA (whole-flush wall time) rather than the per-query
+        rho cost model; the two policies are mutually exclusive.
     """
 
     def __init__(
@@ -198,6 +217,7 @@ class AdmissionQueue:
         safety_ms: float = 0.0,
         max_wait_s: Optional[float] = None,
         dynamic_rho: bool = False,
+        degrade_rho: bool = False,
         max_lq: Optional[int] = None,
         survivor_alpha: float = 0.2,
     ):
@@ -218,7 +238,18 @@ class AdmissionQueue:
         if max_wait_s is not None and max_wait_s < 0:
             raise ValueError(f"max_wait_s must be >= 0, got {max_wait_s}")
         self.max_wait_s = max_wait_s
+        if (dynamic_rho or degrade_rho) and server.cfg.engine != "saat":
+            raise ValueError(
+                "dynamic_rho/degrade_rho trade the SAAT posting budget; the "
+                "daat engine has no rho knob"
+            )
+        if dynamic_rho and degrade_rho:
+            raise ValueError(
+                "dynamic_rho and degrade_rho are alternative flush-time rho "
+                "policies; enable at most one"
+            )
         self.dynamic_rho = dynamic_rho
+        self.degrade_rho = degrade_rho
         self.survivors = SurvivorPredictor(alpha=survivor_alpha)
         self._pending: dict[int, deque[_Request]] = {b: deque() for b in self.buckets}
         self._completions: list[Completion] = []
@@ -348,16 +379,25 @@ class AdmissionQueue:
             qt[i], qw[i] = t, w
         r_oldest = min(batch, key=lambda r: r.deadline_s)
         oldest = r_oldest.deadline_s
-        predicted_ms = self.server.predict_service_ms(shape, bucket)
         rho: Optional[int] = None
         if not daat:
             # pick the level here (identically to what search_batch would do)
             # so completions/flush_log record the budget actually served
-            if self.dynamic_rho:
+            if self.degrade_rho:
+                # budget = time to the oldest deadline, less the same safety
+                # headroom the due instant reserves; the epsilon keeps an
+                # exactly-on-time flush from degrading over float round-off
+                remaining_ms = max((oldest - now - self.safety_s + _EPS_S) * 1e3, 0.0)
+                rho = self.server.pick_degraded_rho(shape, bucket, remaining_ms)
+            elif self.dynamic_rho:
                 remaining_ms = max((oldest - now) * 1e3, 0.0)
                 rho = self.server.pick_rho(deadline_ms=remaining_ms)
             else:
                 rho = self.server.pick_rho()
+        # predicted service of the level ACTUALLY served: the violation /
+        # infeasibility judgement below must account degradation as meeting
+        # the deadline it was chosen to meet, not as missing full-rho's
+        predicted_ms = self.server.predict_service_ms(shape, bucket, rho=rho)
         res = self.server.search_batch(qt, qw, rho=rho)
         scores = np.asarray(jax.device_get(res.scores))
         ids = np.asarray(jax.device_get(res.doc_ids))
@@ -407,6 +447,14 @@ class AdmissionQueue:
     @property
     def n_infeasible(self) -> int:
         return sum(1 for f in self.flush_log if f.infeasible)
+
+    @property
+    def n_degraded(self) -> int:
+        """Flushes served below the full posting budget (SAAT only)."""
+        if self.server.cfg.engine != "saat":
+            return 0
+        top = self.server.rho_ladder[-1]
+        return sum(1 for f in self.flush_log if f.rho is not None and f.rho < top)
 
 
 def replay_arrivals(

@@ -182,13 +182,17 @@ class AnytimeServer:
         self._latencies_ms: list[float] = []
         self._rhos: list[int] = []
         self._cost = _CostModel({}, cfg.ema_alpha, clock=self.clock)
-        # whole-batch wall-ms EMA keyed by (engine, Lq bucket, batch shape):
-        # a batch runs as ONE executable whose wall time is far from linear
-        # in B (plan/gather amortize, the DAAT while_loop runs to the slowest
-        # row), so the admission queue's service-time estimate is learned per
-        # compiled shape — never extrapolated linearly in B (DAAT has no rho
-        # to hang a cost model on; SAAT falls back to the rho model)
-        self._bucket_ms: dict[tuple[str, int, int], float] = {}
+        # whole-batch wall-ms EMA keyed by (engine, Lq bucket, batch shape,
+        # rho): a batch runs as ONE executable whose wall time is far from
+        # linear in B (plan/gather amortize, the DAAT while_loop runs to the
+        # slowest row), so the admission queue's service-time estimate is
+        # learned per compiled shape — never extrapolated linearly in B.
+        # rho is part of the key because each SAAT ladder level is its own
+        # executable with its own wall time (that difference IS the knob the
+        # degrade-instead-of-violate flush policy trades on); DAAT has no rho
+        # and keys with rho=None. SAAT falls back to the per-query rho model
+        # only when no shape in the (engine, bucket, rho) lane is calibrated.
+        self._bucket_ms: dict[tuple[str, int, int, Optional[int]], float] = {}
         self.lq_buckets = (
             normalize_buckets(cfg.lq_buckets) if cfg.lq_buckets is not None else None
         )
@@ -227,44 +231,95 @@ class AnytimeServer:
 
     # ------------------------ queue-facing predictions ---------------------
 
+    def _rho_key(self, rho: Optional[int]) -> Optional[int]:
+        """Canonical rho component of the service-time key (None for DAAT)."""
+        if self.cfg.engine == "daat":
+            return None
+        return int(rho) if rho is not None else self.pick_rho()
+
     def predict_service_ms(self, n_queries: int, lq_bucket: int, rho: Optional[int] = None) -> float:
         """Predicted wall time to serve an ``[n_queries, lq_bucket]`` batch.
 
-        Prefers the per-(engine, bucket, batch-shape) EMA of observed
+        Prefers the per-(engine, bucket, batch-shape, rho) EMA of observed
         whole-batch wall times: a batch is ONE executable, so its cost is far
         from linear in B and the old per-query-EMA-times-``n_queries`` rule
-        systematically over-predicted large-shape flushes. When the exact
-        shape is uncalibrated, the nearest calibrated shape in the same
-        (engine, bucket) lane stands in: unscaled when predicting a smaller
-        shape (a smaller batch can only be cheaper — over-predicting is
-        safe), ratio-scaled upward when predicting a LARGER shape (flushing
-        early is safe; under-predicting an unmeasured big executable would
-        turn the cold start into deadline violations). Once a shape is
-        observed its exact key takes over. SAAT falls back
-        to the rho cost model only when no shape is calibrated at all, and
-        the result is 0.0 when nothing is known — the admission queue then
-        flushes exactly at the deadline, which is the conservative policy for
-        an unknown service time.
+        systematically over-predicted large-shape flushes. ``rho`` selects
+        the SAAT ladder level being considered (default: whatever
+        ``pick_rho()`` would serve) — each level is a distinct executable
+        with its own wall time, so predictions never mix levels. When the
+        exact shape is uncalibrated, the nearest calibrated shape in the same
+        (engine, bucket, rho) lane stands in: unscaled when predicting a
+        smaller shape (a smaller batch can only be cheaper — over-predicting
+        is safe), ratio-scaled upward when predicting a LARGER shape
+        (flushing early is safe; under-predicting an unmeasured big
+        executable would turn the cold start into deadline violations). Once
+        a shape is observed its exact key takes over. SAAT falls back to the
+        rho cost model only when no shape in the lane is calibrated at all,
+        and the result is 0.0 when nothing is known — the admission queue
+        then flushes exactly at the deadline, which is the conservative
+        policy for an unknown service time.
         """
         eng, bucket, shape = self.cfg.engine, int(lq_bucket), int(n_queries)
-        batch_ms = self._bucket_ms.get((eng, bucket, shape))
+        rk = self._rho_key(rho)
+        batch_ms = self._bucket_ms.get((eng, bucket, shape, rk))
         if batch_ms is not None:
             return batch_ms
-        shapes = [b for (e, bk, b) in self._bucket_ms if e == eng and bk == bucket]
+        shapes = [
+            b for (e, bk, b, r) in self._bucket_ms if e == eng and bk == bucket and r == rk
+        ]
         if shapes:
             nearest = min(shapes, key=lambda b: (abs(b - shape), b))
-            batch_ms = self._bucket_ms[(eng, bucket, nearest)]
+            batch_ms = self._bucket_ms[(eng, bucket, nearest, rk)]
             if shape > nearest:  # conservative upper bound, never a late flush
                 return batch_ms * shape / nearest
             return batch_ms
         if eng == "saat":
-            pred_us = self._cost.predict_us(rho if rho is not None else self.pick_rho())
+            pred_us = self._cost.predict_us(rk)
             if pred_us is not None:
                 return pred_us / 1e3 * n_queries
         return 0.0
 
-    def _observe_bucket_ms(self, lq_bucket: int, batch_shape: int, batch_ms: float):
-        key = (self.cfg.engine, int(lq_bucket), int(batch_shape))
+    def service_calibrated(self, lq_bucket: int, rho: Optional[int] = None) -> bool:
+        """True when some batch shape in the (engine, bucket, rho) lane has
+        been directly measured — i.e. ``predict_service_ms`` for that lane
+        rests on an observation of THAT executable, not on a cross-level
+        guess. The degraded-rho picker only trusts calibrated lanes: an
+        unmeasured small-rho level must never be "picked to fit" on faith.
+        """
+        eng, bucket, rk = self.cfg.engine, int(lq_bucket), self._rho_key(rho)
+        return any(
+            e == eng and bk == bucket and r == rk for (e, bk, _b, r) in self._bucket_ms
+        )
+
+    def pick_degraded_rho(self, n_queries: int, lq_bucket: int, remaining_ms: float) -> int:
+        """Largest *calibrated* ladder level whose predicted service for this
+        ``[n_queries, lq_bucket]`` flush still fits in ``remaining_ms``.
+
+        This is the queue's degrade-instead-of-violate policy: when the full
+        budget would blow the oldest deadline, trade effectiveness (a smaller
+        posting budget) for the SLO rather than miss it. When no calibrated
+        level fits, the SMALLEST calibrated level is the least-late choice;
+        with nothing calibrated at all this defers to :meth:`pick_rho`'s
+        deadline logic (which probes the smallest uncalibrated level so the
+        EMA can learn it).
+        """
+        fit = [
+            rho
+            for rho in self.rho_ladder
+            if self.service_calibrated(lq_bucket, rho)
+            and self.predict_service_ms(n_queries, lq_bucket, rho) <= remaining_ms
+        ]
+        if fit:
+            return fit[-1]  # ladder is sorted ascending
+        calibrated = [r for r in self.rho_ladder if self.service_calibrated(lq_bucket, r)]
+        if calibrated:
+            return calibrated[0]
+        return self.pick_rho(deadline_ms=remaining_ms)
+
+    def _observe_bucket_ms(
+        self, lq_bucket: int, batch_shape: int, batch_ms: float, rho: Optional[int] = None
+    ):
+        key = (self.cfg.engine, int(lq_bucket), int(batch_shape), self._rho_key(rho))
         old = self._bucket_ms.get(key)
         a = self.cfg.ema_alpha
         self._bucket_ms[key] = batch_ms if old is None else (1 - a) * old + a * batch_ms
@@ -392,7 +447,7 @@ class AnytimeServer:
             self._latencies_ms.append(per_query)
             self._rhos.append(rho)
         self._cost.update(rho, per_query * 1e3)
-        self._observe_bucket_ms(bucket, q_terms.shape[0], elapsed)
+        self._observe_bucket_ms(bucket, q_terms.shape[0], elapsed, rho=rho)
         return res
 
     def warmup(
@@ -436,7 +491,9 @@ class AnytimeServer:
                         jax.block_until_ready(res.scores)
                         batch_ms = (self.clock.now() - t0) * 1e3
                     self._cost.update(rho, batch_ms * 1e3 / B)
-                    self._observe_bucket_ms(bucket, B, batch_ms)
+                    # per-rho key: each ladder level is its own executable,
+                    # so its wall time must never EMA-mix with another level's
+                    self._observe_bucket_ms(bucket, B, batch_ms, rho=rho)
 
     def stats(self) -> LatencyStats:
         return summarize_latencies(self._latencies_ms)

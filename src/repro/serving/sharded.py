@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,7 @@ from repro.core.daat import daat_search_batched
 from repro.core.impact_index import ImpactIndex, META_FIELDS as _META_FIELDS, build_impact_index
 from repro.core.quantization import QuantConfig
 from repro.core.saat import saat_search
-from repro.core.topk import sharded_topk_merge
+from repro.core.topk import NEG_INF, merge_topk, sharded_topk_merge
 from repro.distributed.sharding import mesh_axes
 
 
@@ -185,6 +185,7 @@ def make_sharded_serve_step(
     daat_use_kernels: bool = False,
     daat_fused_chunk: bool = False,
     daat_trips_per_launch: int = 1,
+    n_docs_total: Optional[int] = None,
 ):
     """Builds ``serve(index_stack, q_terms, q_weights) -> (scores, ids)``.
 
@@ -210,6 +211,13 @@ def make_sharded_serve_step(
     ``daat_fused_chunk`` collapses each rank's per-trip select+score+merge
     into the single VMEM-resident ``chunk_step`` kernel (per-trip HBM traffic
     on every rank drops to the candidate/state output only).
+
+    ``n_docs_total`` (the UNSHARDED corpus size) bounds the live doc range of
+    every shard: block-padding slots and — on a short final shard — doc ids
+    past the corpus end are masked to ``(NEG_INF, INT32_MAX)`` before their
+    local ids are globalized, so a pad doc can never alias a real document in
+    a later shard's id range. Omitting it still masks the per-shard block
+    padding (ids ``>= docs_per_shard``) but assumes every shard is full.
     """
     if engine not in ("saat", "daat"):
         raise ValueError(f"unknown engine {engine!r}")
@@ -236,6 +244,13 @@ def make_sharded_serve_step(
     in_specs = (idx_specs, P(dp, None), P(dp, None))
     out_specs = (P(dp, None), P(dp, None))
 
+    # Real static metadata of the caller's index_stack (block_size, quant
+    # scale/bits, seg/bm bounds). `serve()` fills it before tracing so every
+    # per-shard reconstruction inside the shard_map carries the true build
+    # constants instead of hardcoded defaults; a direct `sm(...)` call on a
+    # bare data dict falls back to the historical defaults.
+    meta_cell: dict = {}
+
     def body(idx_data: dict, qt, qw):
         # the block may hold SEVERAL shards when n_shards > model-axis size
         # (multiple doc ranges per chip): search each, merge locally, then
@@ -245,7 +260,9 @@ def make_sharded_serve_step(
         pool_s = pool_i = None
         for j in range(n_local):
             local = jax.tree.map(lambda x, _j=j: x[_j], idx_data)
-            index = ImpactIndex(**local, **_static_meta_from(local, docs_per_shard))
+            index = ImpactIndex(
+                **local, **_static_meta_from(local, docs_per_shard, meta_cell)
+            )
             if engine == "daat":
                 res = daat_search_batched(
                     index,
@@ -271,18 +288,45 @@ def make_sharded_serve_step(
                     scatter_impl=scatter_impl,
                     fused_topk=fused_topk,
                 )
-            gids = res.doc_ids + (rank * n_local + j) * docs_per_shard
-            if pool_s is None:
-                pool_s, pool_i = res.scores, gids
+            # Pad documents (block-padding slots, and — on a short final
+            # shard — ids past the corpus end) score 0.0 locally, so with
+            # k > live candidates they survive the local top-k. Left
+            # unmasked, `pad_id + shard_offset` aliases a REAL doc id in
+            # the next shard's range after globalization. Demote them to
+            # (NEG_INF, INT32_MAX) so the cross-shard merge can only ever
+            # surface them as explicit sentinels when k exceeds the whole
+            # live corpus.
+            shard_ord = rank * n_local + j
+            if n_docs_total is None:
+                live = jnp.int32(docs_per_shard)
             else:
-                from repro.core.topk import merge_topk
-
-                pool_s, pool_i = merge_topk(pool_s, pool_i, res.scores, gids, k)
+                live = jnp.clip(
+                    n_docs_total - shard_ord * docs_per_shard, 0, docs_per_shard
+                ).astype(jnp.int32)
+            pad = res.doc_ids >= live
+            scores = jnp.where(pad, NEG_INF, res.scores)
+            gids = jnp.where(
+                pad,
+                jnp.iinfo(jnp.int32).max,
+                res.doc_ids + shard_ord * docs_per_shard,
+            )
+            if pool_s is None:
+                pool_s, pool_i = scores, gids
+            else:
+                pool_s, pool_i = merge_topk(pool_s, pool_i, scores, gids, k)
         return sharded_topk_merge(pool_s, pool_i, k, "model")
 
     sm = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
     def serve(index_stack: ImpactIndex, q_terms, q_weights):
+        meta_cell.clear()
+        meta_cell.update(
+            block_size=index_stack.block_size,
+            scale=index_stack.scale,
+            bits=index_stack.bits,
+            max_segs=index_stack.max_segs,
+            max_bm=index_stack.max_bm,
+        )
         data = _index_data_dict(index_stack)
         return sm(data, q_terms, q_weights)
 
@@ -298,7 +342,7 @@ def make_sharded_serve_step(
         daat_est_blocks=daat_est_blocks, daat_block_budget=daat_block_budget,
         max_bm_per_term=max_bm_per_term, daat_exact=daat_exact,
         daat_use_kernels=daat_use_kernels, daat_fused_chunk=daat_fused_chunk,
-        daat_trips_per_launch=daat_trips_per_launch,
+        daat_trips_per_launch=daat_trips_per_launch, n_docs_total=n_docs_total,
     )
     return serve, in_specs, out_specs
 
@@ -359,16 +403,27 @@ def _index_data_template() -> dict:
     }
 
 
-def _static_meta_from(local: dict, docs_per_shard: int) -> dict:
+def _static_meta_from(local: dict, docs_per_shard: int, meta: dict | None = None) -> dict:
+    """Static metadata for a per-shard index rebuilt inside the shard_map.
+
+    Shape-derived fields come from the local arrays; build-time constants
+    (block size, quant scale/bits, seg/bm bounds) come from the real
+    ``index_stack`` via ``meta`` when :func:`make_sharded_serve_step`'s
+    ``serve()`` is the entry point. The historical defaults (128/1.0/8) only
+    apply to bare ``sm(data_dict, ...)`` calls that never saw a real index.
+    """
     n_docs_pad, tmax = local["doc_terms"].shape
     n_terms = local["term_seg_start"].shape[0] - 1
-    block_size = 128
+    m = meta or {}
+    block_size = int(m.get("block_size", 128))
     return dict(
         n_docs=docs_per_shard,
         n_terms=n_terms,
         n_blocks=n_docs_pad // block_size,
         block_size=block_size,
         max_doc_terms=tmax,
-        scale=1.0,
-        bits=8,
+        scale=float(m.get("scale", 1.0)),
+        bits=int(m.get("bits", 8)),
+        max_segs=int(m.get("max_segs", 0)),
+        max_bm=int(m.get("max_bm", 0)),
     )

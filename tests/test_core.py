@@ -75,6 +75,25 @@ def test_index_size_accounting(bm25_index):
     assert bm25_index.posting_store_nbytes() < bm25_index.nbytes()
 
 
+def test_build_empty_corpus_index_is_inert():
+    """A shard whose COO range holds no postings must still build and serve.
+
+    All engines see zeroed CSR counts plus padded (never zero-length) stores,
+    so every search returns all-zero scores instead of crashing."""
+    z = np.zeros(0)
+    idx = build_impact_index(z, z, z, 4, 5)
+    assert idx.n_postings >= 1  # padded posting store: no zero-length gathers
+    assert idx.seg_term.shape[0] >= 1 and idx.bm_block.shape[0] >= 1
+    assert int(np.asarray(idx.term_post_count).sum()) == 0
+    assert idx.max_segs == 0 and idx.max_bm == 0
+    qt = jnp.asarray([[0, 2]], jnp.int32)
+    qw = jnp.ones((1, 2), jnp.float32)
+    ex = exhaustive_search(idx, qt, qw, k=3)
+    assert np.all(np.asarray(ex.scores) == 0.0)
+    sa = saat_search(idx, qt, qw, k=3, rho=idx.n_postings, max_segs_per_term=1)
+    assert np.all(np.asarray(sa.scores) == 0.0)
+
+
 # ---------------------------------------------------------------- evaluation
 
 

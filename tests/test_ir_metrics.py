@@ -9,7 +9,14 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.metrics.ir_metrics import mrr_at_k, ndcg_at_k, rank_overlap, recall_at_k
+from repro.metrics.ir_metrics import (
+    cheapest_rho_within_loss,
+    effectiveness_report,
+    mrr_at_k,
+    ndcg_at_k,
+    rank_overlap,
+    recall_at_k,
+)
 
 pytestmark = pytest.mark.analysis
 
@@ -134,3 +141,31 @@ def test_rank_overlap_permutation_invariant():
 
 def test_rank_overlap_disjoint_is_zero():
     assert rank_overlap(np.array([[1, 2]]), np.array([[3, 4]]), k=2) == 0.0
+
+
+# ------------------- effectiveness harness (numpy parts) --------------------
+
+
+def test_effectiveness_report_triple_and_cutoffs():
+    ranked = np.array([[3, 1, 2], [9, 8, 7]])
+    qrels = np.array([1, 9])  # ranks 2 and 1
+    rep = effectiveness_report(ranked, qrels, recall_k=2, mrr_k=2, ndcg_k=2)
+    assert rep["mrr"] == pytest.approx((0.5 + 1.0) / 2)
+    assert rep["recall"] == pytest.approx(1.0)
+    assert 0.0 < rep["ndcg"] <= 1.0
+    assert (rep["mrr_k"], rep["recall_k"], rep["ndcg_k"]) == (2, 2, 2)
+
+
+def test_cheapest_rho_within_loss_selector():
+    rows = [
+        {"rho": 100, "loss_mrr": 0.10, "loss_recall": 0.01},
+        {"rho": 500, "loss_mrr": 0.02, "loss_recall": 0.00},
+        {"rho": 1000, "loss_mrr": 0.00, "loss_recall": 0.00},
+    ]
+    # the smallest level inside the tolerance = the largest tolerable degradation
+    assert cheapest_rho_within_loss(rows, max_loss=0.03) == 500
+    assert cheapest_rho_within_loss(rows, max_loss=0.5) == 100
+    assert cheapest_rho_within_loss(rows, max_loss=0.001) == 1000
+    assert cheapest_rho_within_loss(rows, max_loss=0.03, metric="recall") == 100
+    # a tolerance below even the exact level's 0.0 loss admits nothing
+    assert cheapest_rho_within_loss(rows, max_loss=-1.0) is None

@@ -125,9 +125,10 @@ def test_bucketed_server_serves_smaller_executables(bm25_index, bm25_queries):
         bm25_index, ServingConfig(k=5, rho_ladder=EXACT, lq_buckets=(2, qt.shape[1]))
     )
     srv.search_batch(jnp.asarray(qt[:4, :2]), jnp.asarray(qw[:4, :2]))
-    assert ("saat", 2, 4) in srv._bucket_ms  # narrow bucket was exercised
+    top = srv.rho_ladder[-1]
+    assert ("saat", 2, 4, top) in srv._bucket_ms  # narrow bucket was exercised
     srv.search_batch(jnp.asarray(qt[:4]), jnp.asarray(qw[:4]))
-    assert ("saat", qt.shape[1], 4) in srv._bucket_ms
+    assert ("saat", qt.shape[1], 4, top) in srv._bucket_ms
 
 
 def test_warmup_calibrates_every_bucket_from_a_wide_sample(bm25_index, bm25_queries):
@@ -139,7 +140,7 @@ def test_warmup_calibrates_every_bucket_from_a_wide_sample(bm25_index, bm25_quer
         bm25_index, ServingConfig(k=5, rho_ladder=EXACT, lq_buckets=(2, 4, L))
     )
     srv.warmup(jnp.asarray(qt[:4]), jnp.asarray(qw[:4]), batch_sizes=(4,))
-    assert {b for (_, b, _) in srv._bucket_ms} == {2, 4, L}
+    assert {b for (_, b, _, _) in srv._bucket_ms} == {2, 4, L}
 
 
 def test_bucketed_sharded_serve_matches_exhaustive(tiny_corpus, bm25_collection, bm25_index, bm25_queries):
@@ -380,7 +381,7 @@ def test_queue_separates_infeasible_from_violation(bm25_index, bm25_queries):
     clock = SimulatedClock()
     srv = _queue_server(bm25_index, qt.shape[1], clock=clock)
     # make service expensive in the model's eyes: 50 ms predicted per flush
-    srv._bucket_ms[("saat", 4, 2)] = 50.0  # whole-batch wall ms at shape 2
+    srv._bucket_ms[("saat", 4, 2, srv.rho_ladder[-1])] = 50.0  # whole-batch wall ms at shape 2
     q = AdmissionQueue(srv, batch_shapes=(2,), clock=clock)
     t3, w3 = np.array([1, 2, 3], np.int32), np.ones(3, np.float32)
     # infeasible: 10 ms budget < 50 ms predicted -> due is before arrival
@@ -393,6 +394,249 @@ def test_queue_separates_infeasible_from_violation(bm25_index, bm25_queries):
     q.poll()
     assert q.flush_log[-1].violation and not q.flush_log[-1].infeasible
     assert q.n_violations == 1 and q.n_infeasible == 1
+
+
+# --------------------------------------------------------------------------
+# degrade-instead-of-violate: the anytime SLO autopilot
+# --------------------------------------------------------------------------
+
+
+def _overload_server(index, *, clock):
+    """SAAT server with a scripted per-(shape, rho) service model.
+
+    Ladder has three levels; only the smallest and the full budget are
+    *calibrated* (directly measured) — the middle level exists but was never
+    timed, so the degrade policy must never pick it on faith.
+    """
+    cfg = ServingConfig(k=10, rho_ladder=(200, 1000) + EXACT, lq_buckets=(4,))
+    srv = AnytimeServer(index, cfg, clock=clock)
+    small, full = srv.rho_ladder[0], srv.rho_ladder[-1]
+    srv._bucket_ms.update(
+        {
+            ("saat", 4, 2, full): 20.0,  # whole-flush wall ms
+            ("saat", 4, 4, full): 60.0,
+            ("saat", 4, 2, small): 5.0,
+            ("saat", 4, 4, small): 15.0,
+        }
+    )
+    return srv, small, full
+
+
+def _overload_schedule():
+    """Three requests, 100 ms deadlines, arrival rate sized so full-rho
+    service cannot meet them: the third arrival (t=75ms) jumps the covering
+    shape from 2 to 4, moving the due instant (oldest deadline - predicted
+    service) from t=80ms back to t=40ms — already in the past, but after the
+    oldest ARRIVAL (t=0), so missing it is a scheduling violation rather
+    than admission infeasibility. 25 ms remain; full rho needs 60."""
+    t3, w3 = np.array([1, 2, 3], np.int32), np.ones(3, np.float32)
+    return [0.0, 0.070, 0.075], [t3] * 3, [w3] * 3, [100.0] * 3
+
+
+def test_overload_replay_violates_without_degradation(bm25_index):
+    clock = SimulatedClock()
+    srv, small, full = _overload_server(bm25_index, clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(2, 4), clock=clock)
+    arrivals, ts, ws, dl = _overload_schedule()
+    comps = replay_arrivals(q, arrivals, ts, ws, dl)
+    assert q.n_violations >= 1 and q.n_degraded == 0
+    # every flush records the budget actually served (the full ladder level)
+    assert [f.rho for f in q.flush_log] == [full] * len(q.flush_log)
+    # at max rho, queue-served ids stay bit-identical to direct serving
+    ref = AnytimeServer(
+        bm25_index, ServingConfig(k=10, rho_ladder=(200, 1000) + EXACT, lq_buckets=(4,))
+    )
+    direct = ref.search_batch(jnp.asarray(ts[0][None, :]), jnp.asarray(ws[0][None, :]))
+    direct_ids = np.asarray(direct.doc_ids)[0]
+    for c in comps:
+        assert c.rho == full
+        assert np.array_equal(c.doc_ids, direct_ids)
+
+
+def test_overload_replay_degrades_instead_of_violating(bm25_index):
+    clock = SimulatedClock()
+    srv, small, full = _overload_server(bm25_index, clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(2, 4), clock=clock, degrade_rho=True)
+    arrivals, ts, ws, dl = _overload_schedule()
+    comps = replay_arrivals(q, arrivals, ts, ws, dl)
+    # the identical overload produces ZERO violations: the overloaded flush
+    # served the largest calibrated budget that still fit (the small level)
+    assert q.n_violations == 0
+    assert q.n_degraded >= 1
+    assert all(f.rho == small for f in q.flush_log if f.rho != full)
+    assert any(f.rho == small for f in q.flush_log)
+    # every completion met its deadline and audits the budget it was served
+    for c in comps:
+        assert c.flush_s <= c.deadline_s + 1e-9
+        assert c.rho in (small, full)
+    # degraded ids match direct serving at the SAME degraded budget
+    ref = AnytimeServer(
+        bm25_index, ServingConfig(k=10, rho_ladder=(200, 1000) + EXACT, lq_buckets=(4,))
+    )
+    direct = ref.search_batch(
+        jnp.asarray(ts[0][None, :]), jnp.asarray(ws[0][None, :]), rho=small
+    )
+    direct_ids = np.asarray(direct.doc_ids)[0]
+    for c in comps:
+        if c.rho == small:
+            assert np.array_equal(c.doc_ids, direct_ids)
+
+
+def test_pick_degraded_rho_prefers_largest_calibrated_fit(bm25_index):
+    clock = SimulatedClock()
+    srv, small, full = _overload_server(bm25_index, clock=clock)
+    mid = srv.rho_ladder[1]
+    assert srv.pick_degraded_rho(4, 4, 100.0) == full  # everything fits
+    assert srv.pick_degraded_rho(4, 4, 25.0) == small  # only small fits
+    # the uncalibrated middle level is never picked on faith, even though
+    # its (interpolated) cost-model guess might fit
+    assert mid not in (srv.pick_degraded_rho(4, 4, b) for b in (1.0, 25.0, 100.0))
+    # nothing fits -> the smallest calibrated level is the least-late choice
+    assert srv.pick_degraded_rho(4, 4, 1.0) == small
+    # nothing calibrated at all -> defer to pick_rho's deadline logic
+    cold = AnytimeServer(
+        bm25_index,
+        ServingConfig(k=10, rho_ladder=(200, 1000) + EXACT, lq_buckets=(4,)),
+        clock=SimulatedClock(),
+    )
+    assert cold.pick_degraded_rho(4, 4, 25.0) == cold.pick_rho(deadline_ms=25.0)
+
+
+def test_degrade_rho_policy_validation(bm25_index, bm25_queries):
+    qt, _ = bm25_queries
+    clock = SimulatedClock()
+    saat = _queue_server(bm25_index, qt.shape[1], clock=clock)
+    with pytest.raises(ValueError, match="at most one"):
+        AdmissionQueue(saat, clock=clock, dynamic_rho=True, degrade_rho=True)
+    daat = _queue_server(bm25_index, qt.shape[1], engine="daat", clock=clock)
+    with pytest.raises(ValueError, match="rho"):
+        AdmissionQueue(daat, clock=clock, degrade_rho=True)
+
+
+# --------------------------------------------------------------------------
+# the effectiveness harness, wired to real serving
+# --------------------------------------------------------------------------
+
+
+def test_rho_effectiveness_sweep_reports_per_level_loss(
+    tiny_corpus, bm25_index, bm25_queries
+):
+    from repro.metrics.ir_metrics import (
+        cheapest_rho_within_loss,
+        mrr_at_k,
+        rho_effectiveness_sweep,
+    )
+
+    qt, qw = bm25_queries
+    qrels = np.asarray(tiny_corpus.qrels)
+    srv = AnytimeServer(
+        bm25_index,
+        ServingConfig(k=20, rho_ladder=(200, 1000) + EXACT, batch_size=8),
+        clock=SimulatedClock(),
+    )
+    rows = rho_effectiveness_sweep(srv, qt, qw, qrels, recall_k=20)
+    assert [r["rho"] for r in rows] == list(srv.rho_ladder)
+    # the exhaustive level anchors the loss scale at exactly zero
+    assert rows[-1]["exact"] and rows[-1]["loss_mrr"] == 0.0
+    assert all(r["loss_mrr"] >= 0.0 and r["loss_recall"] >= 0.0 for r in rows)
+    # exact-level metrics equal the rank-safe exhaustive oracle's
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=20)
+    assert rows[-1]["mrr"] == pytest.approx(mrr_at_k(np.asarray(ex.doc_ids), qrels, 10))
+    # the 3%-tolerance selector always finds a level (exhaustive qualifies)
+    best = cheapest_rho_within_loss(rows, max_loss=0.03)
+    assert best in srv.rho_ladder
+
+
+def _replay_server(index, L, *, clock):
+    """Single-bucket SAAT server with a scripted per-(shape, rho) model."""
+    cfg = ServingConfig(k=10, rho_ladder=(200, 1000) + EXACT, lq_buckets=(L,))
+    srv = AnytimeServer(index, cfg, clock=clock)
+    small, full = srv.rho_ladder[0], srv.rho_ladder[-1]
+    srv._bucket_ms.update(
+        {
+            ("saat", L, 2, full): 20.0,
+            ("saat", L, 4, full): 60.0,
+            ("saat", L, 2, small): 5.0,
+            ("saat", L, 4, small): 15.0,
+        }
+    )
+    return srv, small, full
+
+
+def test_replay_effectiveness_accounts_per_served_rho(
+    tiny_corpus, bm25_index, bm25_queries
+):
+    """Two bursts through a degrading queue: the loose-deadline burst serves
+    the full budget, the tight one degrades — and the report groups
+    effectiveness by the rho each request was ACTUALLY served at."""
+    from repro.metrics.ir_metrics import replay_effectiveness
+
+    qt, qw = bm25_queries
+    L = qt.shape[1]
+    qrels = np.asarray(tiny_corpus.qrels)[:8]
+    clock = SimulatedClock()
+    srv, small, full = _replay_server(bm25_index, L, clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(2, 4), clock=clock, degrade_rho=True)
+    # burst A (t=0..3ms, 200 ms deadlines): fills to shape 4 and fits the
+    # full budget. burst B (t=50..53ms, 30 ms deadlines): the third arrival
+    # jumps the covering shape to 4, whose predicted full-rho service no
+    # longer fits the remaining ~28 ms -> that flush degrades to the small
+    # level; the straggler then flushes alone, on time, at full rho.
+    arrivals = [0.0, 0.001, 0.002, 0.003, 0.050, 0.051, 0.052, 0.053]
+    deadlines = [200.0] * 4 + [30.0] * 4
+    rep = replay_effectiveness(
+        q,
+        arrivals,
+        [qt[i] for i in range(8)],
+        [qw[i] for i in range(8)],
+        deadlines,
+        qrels,
+        recall_k=10,
+    )
+    assert rep["n_requests"] == 8
+    assert rep["violations"] == 0
+    assert rep["degraded_flushes"] == 1
+    assert {(g["rho"], g["n_queries"]) for g in rep["by_rho"]} == {(small, 3), (full, 5)}
+    for g in rep["by_rho"] + [rep["overall"]]:
+        assert 0.0 <= g["mrr"] <= 1.0 and 0.0 <= g["recall"] <= 1.0
+    assert "p99_ms" in rep["wait_ms"]
+
+
+def test_effectiveness_surface_shifts_traffic_down_the_ladder(
+    tiny_corpus, bm25_index, bm25_queries
+):
+    """Tightening the deadline moves served traffic down the rho ladder;
+    every deadline point gets a FRESH queue so rows are independent."""
+    from repro.metrics.ir_metrics import effectiveness_surface
+
+    qt, qw = bm25_queries
+    L = qt.shape[1]
+    qrels = np.asarray(tiny_corpus.qrels)[:4]
+    _, small, full = _replay_server(bm25_index, L, clock=SimulatedClock())
+
+    def factory(deadline_ms):
+        clock = SimulatedClock()
+        srv, _, _ = _replay_server(bm25_index, L, clock=clock)
+        return AdmissionQueue(srv, batch_shapes=(2, 4), clock=clock, degrade_rho=True)
+
+    arrivals = [0.0, 0.001, 0.002, 0.003]
+    rows = effectiveness_surface(
+        factory,
+        [200.0, 30.0],
+        arrivals,
+        [qt[i] for i in range(4)],
+        [qw[i] for i in range(4)],
+        qrels,
+        recall_k=10,
+    )
+    assert [r["deadline_ms"] for r in rows] == [200.0, 30.0]
+    loose, tight = rows
+    assert loose["degraded_flushes"] == 0 and loose["violations"] == 0
+    assert tight["degraded_flushes"] >= 1 and tight["violations"] == 0
+    # the loose deadline serves everything at the full budget; tightening it
+    # pushes part of the traffic down the ladder
+    assert {g["rho"] for g in loose["by_rho"]} == {full}
+    assert small in {g["rho"] for g in tight["by_rho"]}
 
 
 def test_flush_pads_with_inert_sentinel_rows(bm25_index, bm25_queries):
@@ -425,7 +669,7 @@ def test_flush_pads_with_inert_sentinel_rows(bm25_index, bm25_queries):
     # only the single real request reached the survivor predictor
     assert len(observed) == 1 and q.flush_log[-1].n_real == 1
     # the service-time EMA is keyed by the flushed executable shape
-    assert ("daat", 4, 4) in srv._bucket_ms
+    assert ("daat", 4, 4, None) in srv._bucket_ms
     # and the real row's results are untouched by the sentinel pads
     ref = AnytimeServer(
         bm25_index,

@@ -262,20 +262,30 @@ def test_predict_service_ms_is_shape_keyed_not_linear_in_b(bm25_index, bm25_quer
 
 
 @pytest.mark.serving
-def test_observe_bucket_ms_ema_is_per_shape():
-    """EMAs for different shapes never mix."""
+def test_observe_bucket_ms_ema_is_per_shape_and_per_rho():
+    """EMAs for different shapes — and different rho levels — never mix:
+    every SAAT ladder level is its own executable with its own wall time."""
 
     class _Srv(AnytimeServer):  # bypass engine setup; only the EMA matters
         def __init__(self):
             self.cfg = ServingConfig()
+            self.rho_ladder = (100, 1000)
             self._bucket_ms = {}
 
     srv = _Srv()
+    srv._observe_bucket_ms(4, 8, 10.0, rho=1000)
+    srv._observe_bucket_ms(4, 32, 16.0, rho=1000)
+    srv._observe_bucket_ms(4, 8, 10.0, rho=1000)
+    srv._observe_bucket_ms(4, 8, 2.0, rho=100)  # small budget, small time
+    assert srv._bucket_ms[("saat", 4, 8, 1000)] == pytest.approx(10.0)
+    assert srv._bucket_ms[("saat", 4, 32, 1000)] == pytest.approx(16.0)
+    assert srv._bucket_ms[("saat", 4, 8, 100)] == pytest.approx(2.0)
+    # default rho resolves to pick_rho() (= full ladder without a deadline)
     srv._observe_bucket_ms(4, 8, 10.0)
-    srv._observe_bucket_ms(4, 32, 16.0)
-    srv._observe_bucket_ms(4, 8, 10.0)
-    assert srv._bucket_ms[("saat", 4, 8)] == pytest.approx(10.0)
-    assert srv._bucket_ms[("saat", 4, 32)] == pytest.approx(16.0)
+    assert srv._bucket_ms[("saat", 4, 8, 1000)] == pytest.approx(10.0)
+    # predictions read the lane they were asked about, never a neighbor level
+    assert srv.predict_service_ms(8, 4, rho=100) == pytest.approx(2.0)
+    assert srv.predict_service_ms(8, 4, rho=1000) == pytest.approx(10.0)
 
 
 def test_server_daat_engine_matches_exhaustive(bm25_index, bm25_queries):
@@ -404,3 +414,153 @@ def test_sharded_rho_budget_is_per_shard(tiny_corpus, bm25_collection):
     with mesh:
         ss, si = serve(stacked, qt, qw)
     assert ss.shape == (1, 5) and si.shape == (1, 5)
+
+
+# ------------------------------------------------------------------------
+# sharded-path correctness regressions: pad-doc leak, metadata threading,
+# degenerate shard layouts
+# ------------------------------------------------------------------------
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def _hand_coo(postings):
+    """postings: [(doc, term, weight), ...] -> parallel COO arrays."""
+    d = np.array([p[0] for p in postings], dtype=np.int64)
+    t = np.array([p[1] for p in postings], dtype=np.int64)
+    w = np.array([p[2] for p in postings], dtype=np.float64)
+    return d, t, w
+
+
+def test_sharded_pad_docs_never_alias_real_ids():
+    """k > live docs per shard: pad docs (score 0.0) used to survive the
+    local top-k and globalize into the NEXT shard's real-id range. They must
+    come out as explicit (-inf, INT32_MAX) sentinels instead."""
+    from repro.core import build_impact_index
+
+    # 5 docs, one distinct term each, descending weights; 3 shards of 2 =>
+    # the final shard is short (1 live doc) AND every shard has fewer live
+    # docs than k
+    d, t, w = _hand_coo([(i, i, 5.0 - i) for i in range(5)])
+    n_docs, n_terms, k = 5, 6, 8
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, 3)
+    stacked = stack_indexes(shards)
+    serve, _, _ = make_sharded_serve_step(
+        mesh,
+        k=k,
+        rho_per_shard=max(s.n_postings for s in shards),
+        max_segs_per_term=max(max_segments_per_term(s) for s in shards),
+        docs_per_shard=dps,
+        n_docs_total=n_docs,
+    )
+    qt = jnp.asarray(np.arange(5, dtype=np.int32)[None, :])
+    qw = jnp.ones((1, 5), jnp.float32)
+    with mesh:
+        ss, si = serve(stacked, qt, qw)
+    ss, si = np.asarray(ss)[0], np.asarray(si)[0]
+    oracle = build_impact_index(d, t, w, n_docs, n_terms)
+    ex = exhaustive_search(oracle, qt, qw, k=n_docs)
+    # the live prefix matches the unsharded oracle doc-for-doc ...
+    np.testing.assert_allclose(ss[:n_docs], np.asarray(ex.scores)[0], rtol=1e-4, atol=1e-4)
+    assert si[:n_docs].tolist() == np.asarray(ex.doc_ids)[0].tolist()
+    # ... and the k - n_docs overflow slots are sentinels, NOT aliased docs
+    assert np.all(si[n_docs:] == _I32_MAX)
+    assert np.all(np.isneginf(ss[n_docs:]))
+    assert len(set(si[:n_docs].tolist())) == n_docs  # no duplicate real ids
+
+
+def test_sharded_meta_threads_real_build_constants(
+    tiny_corpus, bm25_collection, bm25_index, bm25_queries
+):
+    """block_size=64 + non-unit quant scale: the per-shard indexes rebuilt
+    inside the shard_map must carry the REAL build constants (the old
+    hardcoded 128/1.0/8 mis-mapped block ids to doc ranges and broke the
+    sharded DAAT engine on non-default corpora)."""
+    enc = bm25_collection
+    qt, qw = bm25_queries
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards, dps = shard_corpus(
+        enc.doc_idx, enc.term_idx, enc.weights, tiny_corpus.n_docs, enc.n_terms, 2,
+        block_size=64,
+    )
+    stacked = stack_indexes(shards)
+    assert stacked.block_size == 64  # precondition: non-default build
+    assert stacked.scale != 1.0  # precondition: non-unit quant scale
+    serve, _, _ = make_sharded_serve_step(
+        mesh,
+        k=10,
+        rho_per_shard=0,
+        max_segs_per_term=0,
+        docs_per_shard=dps,
+        engine="daat",
+        daat_est_blocks=2,
+        daat_block_budget=2,
+        max_bm_per_term=stacked.max_bm,
+        n_docs_total=tiny_corpus.n_docs,
+    )
+    with mesh:
+        ss, _ = serve(stacked, jnp.asarray(qt), jnp.asarray(qw))
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_short_final_shard_matches_exhaustive(
+    tiny_corpus, bm25_collection, bm25_index, bm25_queries
+):
+    """n_shards not dividing n_docs: the short final shard's out-of-corpus
+    tail is masked via n_docs_total and results match the unsharded oracle."""
+    enc = bm25_collection
+    qt, qw = bm25_queries
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards, dps = shard_corpus(
+        enc.doc_idx, enc.term_idx, enc.weights, tiny_corpus.n_docs, enc.n_terms, 3
+    )
+    assert 3 * dps > tiny_corpus.n_docs  # precondition: final shard is short
+    stacked = stack_indexes(shards)
+    serve, _, _ = make_sharded_serve_step(
+        mesh,
+        k=10,
+        rho_per_shard=max(s.n_postings for s in shards),
+        max_segs_per_term=max(max_segments_per_term(s) for s in shards),
+        docs_per_shard=dps,
+        n_docs_total=tiny_corpus.n_docs,
+    )
+    with mesh:
+        ss, si = serve(stacked, jnp.asarray(qt), jnp.asarray(qw))
+    ex = exhaustive_search(bm25_index, jnp.asarray(qt), jnp.asarray(qw), k=10)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ex.scores), rtol=1e-4, atol=1e-4)
+    assert np.asarray(si).max() < tiny_corpus.n_docs  # no out-of-corpus ids
+    assert (np.asarray(si) == np.asarray(ex.doc_ids)).mean() > 0.95
+
+
+def test_sharded_empty_shard_serves(tiny_corpus):
+    """A shard whose COO mask is empty must build, stack, and serve — and the
+    merge must match the unsharded oracle."""
+    from repro.core import build_impact_index
+
+    # postings only in docs 0..1; 2 shards of 2 => shard 1 is empty
+    d, t, w = _hand_coo([(0, 0, 2.0), (0, 1, 1.0), (1, 2, 3.0)])
+    n_docs, n_terms = 4, 5
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, 2)
+    assert shards[1].max_segs == 0  # precondition: second shard IS empty
+    stacked = stack_indexes(shards)
+    serve, _, _ = make_sharded_serve_step(
+        mesh,
+        k=n_docs,
+        rho_per_shard=max(s.n_postings for s in shards),
+        max_segs_per_term=max(1, max(max_segments_per_term(s) for s in shards)),
+        docs_per_shard=dps,
+        n_docs_total=n_docs,
+    )
+    qt = jnp.asarray(np.array([[0, 2]], dtype=np.int32))
+    qw = jnp.ones((1, 2), jnp.float32)
+    with mesh:
+        ss, si = serve(stacked, qt, qw)
+    ss, si = np.asarray(ss)[0], np.asarray(si)[0]
+    oracle = build_impact_index(d, t, w, n_docs, n_terms)
+    ex = exhaustive_search(oracle, qt, qw, k=n_docs)
+    np.testing.assert_allclose(ss, np.asarray(ex.scores)[0], rtol=1e-4, atol=1e-4)
+    assert si[0] == 1 and si[1] == 0  # scored docs lead; zero-score docs trail
+    assert set(si.tolist()) == set(range(n_docs))
