@@ -58,6 +58,7 @@ def main(argv=None) -> None:
         side_degrade_vs_violate,
         side_fused_chunk_vs_split,
         side_fused_vs_unfused,
+        side_pod_merge,
         table1_models_systems,
         table2_term_stats,
     )
@@ -75,6 +76,7 @@ def main(argv=None) -> None:
         ("side_fused_chunk_vs_split", side_fused_chunk_vs_split),
         ("side_bucketed_vs_padded", side_bucketed_vs_padded),
         ("side_degrade_vs_violate", side_degrade_vs_violate),
+        ("side_pod_merge", side_pod_merge),
         ("roofline", roofline),
     ]
     if args.only:

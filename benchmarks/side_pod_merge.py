@@ -1,0 +1,126 @@
+"""Side experiment: pod-scale cross-host k-merge vs the unsharded engine.
+
+The pod serve step answers every query on every document shard of a
+(pod, model) mesh, then k-merges the per-rank candidate pools with the
+id-canonical ``canonical_topk_merge``. This bench measures what that buys
+and costs on a simulated multi-host mesh (CPU devices stand in for hosts —
+run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to unlock
+the larger layouts; on a plain 1-device CPU only the (1, 1) layout runs):
+
+  * **parity first**: pod-merged doc ids are asserted BIT-IDENTICAL to the
+    unsharded exact-SAAT oracle on every layout before any timing — the
+    speed numbers cannot come from a wrong-answer merge;
+  * **merge fan-in**: candidates entering each merge (ranks * k) — the
+    all-gather payload the rank-safe merge pays per query;
+  * **throughput**: per-query wall ms and qps per layout. CPU wall times
+    are RELATIVE as everywhere in benchmarks/; the faithful signal is the
+    fan-in column and the layout-to-layout ratio, not the absolute ms.
+
+``REPRO_BENCH_TINY=1`` shrinks batches/repeats to CI-sized work.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from benchmarks import common as C
+from repro.core.saat import max_segments_per_term, saat_search
+from repro.serving.sharded import make_pod_serve_step, shard_corpus, stack_indexes
+
+TINY = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+
+MODEL = "bm25"
+K = 10
+B = 8
+LAYOUTS = ((1, 1), (2, 1), (2, 2), (4, 2))  # (pod hosts, model ranks)
+N_BATCHES = 1 if TINY else 3
+REPEATS = 1 if TINY else 5
+PARITY_ASSERTED = True  # pod ids bitwise == unsharded oracle, pre-timing
+
+
+def _query_batches(qt: np.ndarray, qw: np.ndarray):
+    out = []
+    for i in range(N_BATCHES):
+        rows = (np.arange(B) + i * B) % qt.shape[0]
+        out.append((np.ascontiguousarray(qt[rows]), np.ascontiguousarray(qw[rows])))
+    return out
+
+
+def run() -> list[dict]:
+    enc = C.encoded(MODEL)
+    index = C.index_for(MODEL)
+    n_docs = C.corpus().n_docs
+    qt, qw = C.queries_for(MODEL)
+    batches = _query_batches(np.asarray(qt), np.asarray(qw))
+
+    ms = max_segments_per_term(index)
+    oracle = [
+        saat_search(
+            index, jnp.asarray(bt), jnp.asarray(bw), k=K,
+            rho=index.n_postings, max_segs_per_term=ms,
+        )
+        for bt, bw in batches
+    ]
+
+    rows = []
+    for n_pod, n_model in LAYOUTS:
+        ranks = n_pod * n_model
+        if jax.device_count() < ranks:
+            continue
+        mesh = Mesh(np.array(jax.devices()[:ranks]).reshape(n_pod, n_model), ("pod", "model"))
+        shards, dps = shard_corpus(
+            enc.doc_idx, enc.term_idx, enc.weights, n_docs, enc.n_terms, ranks
+        )
+        stacked = stack_indexes(shards)
+        serve, _, _ = make_pod_serve_step(
+            mesh, k=K,
+            rho_per_shard=int(stacked.doc_ids.shape[1]),
+            max_segs_per_term=max(max_segments_per_term(s) for s in shards),
+            docs_per_shard=dps, n_docs_total=n_docs,
+        )
+        step = jax.jit(serve)
+
+        # parity BEFORE timing, every batch, ids bit-identical
+        for (bt, bw), ref in zip(batches, oracle):
+            _, ids = step(stacked, jnp.asarray(bt), jnp.asarray(bw))
+            np.testing.assert_array_equal(np.asarray(ids), np.asarray(ref.doc_ids))
+
+        samples = []
+        for _ in range(REPEATS):
+            for bt, bw in batches:
+                t0 = time.perf_counter()
+                ss, _ = step(stacked, jnp.asarray(bt), jnp.asarray(bw))
+                jax.block_until_ready(ss)
+                samples.append((time.perf_counter() - t0) * 1e3 / B)
+        per_q = float(np.median(samples))
+        rows.append(
+            {
+                "layout": f"{n_pod}x{n_model}",
+                "hosts": n_pod,
+                "model_ranks": n_model,
+                "docs_per_shard": dps,
+                "merge_fanin": serve.statics["merge_fanin"],
+                "ms_per_query": round(per_q, 4),
+                "qps": round(1e3 / per_q, 1) if per_q > 0 else float("inf"),
+                "ids_bit_identical": True,
+            }
+        )
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import print_csv
+
+    print_csv(
+        "side: pod cross-host k-merge vs unsharded oracle (id parity asserted)",
+        run(),
+    )
+
+
+if __name__ == "__main__":
+    main()

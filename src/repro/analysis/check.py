@@ -170,8 +170,40 @@ def run_serving_checks(batch_sizes: Sequence[int] = (2, 4)) -> list:
         max_segs_per_term=max_segments_per_term(shards[0]),
         docs_per_shard=docs_per_shard,
     )
-    vs = lint_sharded_serve(serve, stack_indexes(shards), batch_sizes=(2,))
+    key_reg: dict = {}
+    vs = lint_sharded_serve(
+        serve, stack_indexes(shards), batch_sizes=(2,), key_registry=key_reg,
+    )
     print(f"  sharded+bucketed serve: {len(vs)} violations")
+    out.extend(vs)
+
+    # the pod step proper: a "pod" mesh axis routes make_bucketed_serve_step
+    # to make_pod_serve_step (cross-host gather + canonical k-merge). A 2x2
+    # mesh when the host platform simulates >=4 devices, else 1x1 — the
+    # shard_map body traces identically, so the lint matrix stays covered on
+    # single-device CI lanes too. Same key_registry as the sharded step: the
+    # pod statics must name a distinct executable from the single-host one.
+    if jax.device_count() >= 4:
+        pod_devs, pod_shape = jax.devices()[:4], (2, 2)
+    else:
+        pod_devs, pod_shape = jax.devices()[:1], (1, 1)
+    n_shards = pod_shape[0] * pod_shape[1]
+    pod_shards, pod_dps = shard_corpus(
+        rng.integers(0, n_docs, n_post), rng.integers(0, n_terms, n_post),
+        rng.uniform(0.1, 5.0, n_post).astype(np.float32),
+        n_docs, n_terms, n_shards, block_size=32,
+    )
+    pod_mesh = Mesh(np.array(pod_devs).reshape(pod_shape), ("pod", "model"))
+    pod_serve, _, _ = make_bucketed_serve_step(
+        pod_mesh, lq_buckets=(4, 8), n_terms=n_terms, k=5, rho_per_shard=500,
+        max_segs_per_term=max_segments_per_term(pod_shards[0]),
+        docs_per_shard=pod_dps, n_docs_total=n_docs,
+    )
+    vs = lint_sharded_serve(
+        pod_serve, stack_indexes(pod_shards), batch_sizes=(2,),
+        label=f"pod{pod_shape[0]}x{pod_shape[1]}", key_registry=key_reg,
+    )
+    print(f"  pod{pod_shape[0]}x{pod_shape[1]} serve: {len(vs)} violations")
     out.extend(vs)
     return out
 

@@ -269,13 +269,23 @@ def lint_sharded_serve(
     batch_sizes: Sequence[int] = (2,),
     buckets: Optional[Sequence[int]] = None,
     label: str = "sharded",
+    key_registry: Optional[dict] = None,
 ) -> list:
-    """Lint a (possibly bucketed) sharded serve step at every bucket width.
+    """Lint a (possibly bucketed) sharded/pod serve step at every bucket width.
 
     ``make_bucketed_serve_step``'s wrapper does host-side numpy bucketization
     and cannot be traced; its tagged ``.inner`` is the actual executable, so
     that is what gets traced — at each ``.buckets`` width, exactly the shapes
     the wrapper can dispatch.
+
+    The step's tagged ``.statics`` dict names its compiled executable the
+    same way ``AnytimeServer.executable_key`` does, so the one-executable-
+    per-key bijection is asserted here too: (statics, bucket, B) keys must
+    fingerprint 1:1. Pass one ``key_registry`` dict across several
+    ``lint_sharded_serve`` calls and the bijection spans the whole serve
+    surface — two steps whose statics differ (say, a pod mesh vs a
+    single-host mesh at equal engine config) must never alias one program,
+    and equal statics must never trace two.
     """
     inner = getattr(serve, "inner", serve)
     if buckets is None:
@@ -286,15 +296,45 @@ def lint_sharded_serve(
                 "given; pass buckets=(...) matching the widths it will serve"
             )
         buckets = tagged
+    statics = getattr(serve, "statics", None)
+    statics_key = (
+        tuple(sorted(statics.items())) if isinstance(statics, dict) else None
+    )
+    reg = key_registry if key_registry is not None else {}
+    by_key = reg.setdefault("by_key", {})
+    by_fp = reg.setdefault("by_fp", {})
     out: list = []
     for bucket in buckets:
         for B in batch_sizes:
             case = f"lq{bucket}_b{B}"
-            vs, _ = lint_trace(
+            vs, fp = lint_trace(
                 lambda qt, qw: inner(index_stack, qt, qw),
                 _query_structs(B, bucket),
                 label,
                 case,
             )
             out.extend(vs)
+            if fp is None or statics_key is None:
+                continue
+            key = statics_key + (int(bucket), int(B))
+            if key in by_key and by_key[key] != fp:
+                out.append(
+                    Violation(
+                        label, case, "executable_key",
+                        "equal serve statics and shape traced two different "
+                        "programs; the warmup grid cannot cover a "
+                        "nondeterministic executable",
+                    )
+                )
+            elif key not in by_key and fp in by_fp:
+                out.append(
+                    Violation(
+                        label, case, "executable_key",
+                        f"distinct serve statics/shape ({label}:{case} vs "
+                        f"{by_fp[fp]}) name the SAME program; the key "
+                        "distinguishes a config the executable ignores",
+                    )
+                )
+            by_key[key] = fp
+            by_fp.setdefault(fp, f"{label}:{case}")
     return out

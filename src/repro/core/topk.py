@@ -78,8 +78,50 @@ def sharded_topk_merge(
     mesh axis: each chip computes top-k over its local shard (with globalized
     doc ids), then the k-sized pools — not the accumulators — cross the ICI.
     Communication = ``shards * k * 8`` bytes instead of ``n_docs * 4``.
+
+    Ties break by *pool position* (rank-major), which is NOT the unsharded
+    engines' tie order once pad sentinels enter the pool: a sentinel
+    ``(NEG_INF, INT32_MAX)`` from an early rank outranks a real ``-inf``
+    document from a later rank. Serve paths that promise bit-identity to the
+    unsharded oracle must use :func:`canonical_topk_merge` instead.
     """
     gs = jax.lax.all_gather(local_scores, axis_name, axis=-1, tiled=True)
     gi = jax.lax.all_gather(local_ids, axis_name, axis=-1, tiled=True)
     ms, mi = jax.lax.top_k(gs, k)
+    return ms, jnp.take_along_axis(gi, mi, axis=-1)
+
+
+def canonical_topk_merge(
+    local_scores: jax.Array,
+    local_ids: jax.Array,
+    k: int,
+    axis_name,
+) -> Tuple[jax.Array, jax.Array]:
+    """Distributed top-k with ties canonicalized to global-doc-id order.
+
+    The cross-shard/cross-host merge boundary: per-rank candidate pools are
+    all-gathered over ``axis_name`` (a mesh axis name or a tuple of names —
+    the pod case gathers over ``("pod", "model")`` at once), the pooled
+    candidates are stably reordered by global doc id ascending, and the
+    global top-k is re-selected with :func:`tiled_topk` (one tile per rank,
+    so the sort working set stays ``ranks * k``).
+
+    Why the reorder makes the result layout-invariant: ``lax.top_k`` breaks
+    equal-score ties toward the lower input position, both per tile and in
+    the tile-merge. After the id-ascending reorder, position order *is* id
+    order — within a tile directly, and across tiles because each tile is a
+    contiguous id range — so tied candidates surface in ascending-id order
+    no matter how many ranks contributed them. That is exactly the unsharded
+    engines' tie order (a top-k over the accumulator breaks ties toward the
+    lower doc id), and it demotes pad sentinels (``INT32_MAX``) behind every
+    real ``-inf`` document. 1 rank, 8 ranks, ragged or empty shards: one
+    merged answer, bit-identical to the unsharded oracle.
+    """
+    gs = jax.lax.all_gather(local_scores, axis_name, axis=-1, tiled=True)
+    gi = jax.lax.all_gather(local_ids, axis_name, axis=-1, tiled=True)
+    order = jnp.argsort(gi, axis=-1)  # jnp.argsort is stable
+    gs = jnp.take_along_axis(gs, order, axis=-1)
+    gi = jnp.take_along_axis(gi, order, axis=-1)
+    n_ranks = max(gs.shape[-1] // local_scores.shape[-1], 1)
+    ms, mi = tiled_topk(gs, k, num_tiles=n_ranks)
     return ms, jnp.take_along_axis(gi, mi, axis=-1)

@@ -116,6 +116,13 @@ def main() -> None:
         "oldest-arrival + this many seconds (keeps deadline-less traffic "
         "from starving in a never-full bucket)",
     )
+    ap.add_argument(
+        "--counters", action="store_true",
+        help="export the serving counter families (Prometheus text exposition "
+        "to stderr, structured copy under report['counters']); with --queue "
+        "this includes the admission-queue flush/violation/served-rho "
+        "families, otherwise the server-side families only",
+    )
     ap.add_argument("--seed", type=int, default=0, help="arrival-schedule RNG seed")
     args = ap.parse_args()
     if args.queue and args.lq_buckets is None:
@@ -189,6 +196,8 @@ def main() -> None:
             for row in sweep
         ]
         report["rho_within_3pct_mrr_loss"] = cheapest_rho_within_loss(sweep, max_loss=0.03)
+    if args.counters:
+        report["counters"] = _export_counters(server)
     print(json.dumps(report, indent=1))
 
 
@@ -276,7 +285,30 @@ def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
             }
             for rho, cs in sorted(groups.items(), key=lambda kv: (kv[0] is None, kv[0] or 0))
         ]
+    if args.counters:
+        report["counters"] = _export_counters(server, queue)
     print(json.dumps(report, indent=1))
+
+
+def _export_counters(server, queue=None) -> dict:
+    """Scrape the serving counter families once, post-run.
+
+    Counters are *derived* at scrape time from the flush log and server
+    tallies — the hot path carries no instrumentation (the purity lint in
+    ``repro.analysis.hot_path`` would flag it). The Prometheus text
+    exposition goes to stderr so the stdout JSON report stays parseable;
+    a structured copy lands in the report for jq-style assertions.
+    """
+    import sys
+
+    from repro.serving.counters import CounterRegistry
+
+    registry = CounterRegistry()
+    if queue is not None:
+        queue.export_counters(registry)
+    server.export_counters(registry)
+    sys.stderr.write(registry.render())
+    return registry.as_dict()
 
 
 if __name__ == "__main__":

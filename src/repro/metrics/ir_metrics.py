@@ -49,6 +49,8 @@ def mrr_at_k(ranked_doc_ids: np.ndarray, qrels: np.ndarray, k: int = 10) -> floa
       qrels: [n_queries] the single relevant doc per query (MS MARCO style).
     """
     ranked = np.asarray(ranked_doc_ids)[:, :k]
+    if ranked.shape[0] == 0:
+        return 0.0  # empty query set: defined as 0, not a nan mean
     rel = np.asarray(qrels).reshape(-1, 1)
     hits = ranked == rel
     ranks = np.argmax(hits, axis=1) + 1
@@ -58,6 +60,8 @@ def mrr_at_k(ranked_doc_ids: np.ndarray, qrels: np.ndarray, k: int = 10) -> floa
 
 def recall_at_k(ranked_doc_ids: np.ndarray, qrels: np.ndarray, k: int = 1000) -> float:
     ranked = np.asarray(ranked_doc_ids)[:, :k]
+    if ranked.shape[0] == 0:
+        return 0.0
     rel = np.asarray(qrels).reshape(-1, 1)
     return float((ranked == rel).any(axis=1).mean())
 
@@ -86,6 +90,8 @@ def ndcg_at_k(
     unjudged queries can only lower the mean — never inflate it.
     """
     ranked = np.asarray(ranked_doc_ids)[:, :k]
+    if ranked.shape[0] == 0:
+        return 0.0
     rels = np.asarray(qrel_ids)
     if rels.ndim == 1:
         rels = rels.reshape(-1, 1)
@@ -219,18 +225,28 @@ def rho_effectiveness_sweep(
 
 def cheapest_rho_within_loss(
     sweep_rows: Sequence[dict], *, max_loss: float = 0.03, metric: str = "mrr"
-) -> Optional[int]:
+) -> int:
     """Smallest ladder level within ``max_loss`` relative loss of exhaustive.
 
     This is "the largest tolerable degradation": the most aggressive posting
     budget the paper's ≤3%-effectiveness-loss tolerance admits (every level
     at or above it also qualifies — the sweep's losses are what make the
-    claim auditable). Returns None when no level qualifies, which can only
-    happen if ``max_loss`` excludes even the exhaustive level's own 0.0.
+    claim auditable). When NO level is within tolerance (a ``max_loss``
+    below the exhaustive level's own 0.0, or a partial sweep that lost its
+    exact row) the answer is the exact budget itself — the level that
+    *defines* zero loss — never ``None``: callers feed the result straight
+    into a rho ladder, and "no tolerable degradation" means "don't degrade",
+    not "crash the serving config".
     """
+    rows = list(sweep_rows)
+    if not rows:
+        raise ValueError("cheapest_rho_within_loss needs a non-empty sweep")
     key = f"loss_{metric}"
-    fits = [r for r in sweep_rows if r[key] <= max_loss]
-    return int(min(fits, key=lambda r: r["rho"])["rho"]) if fits else None
+    fits = [r for r in rows if r[key] <= max_loss]
+    if fits:
+        return int(min(fits, key=lambda r: r["rho"])["rho"])
+    exact_rows = [r for r in rows if r.get("exact")] or rows
+    return int(max(exact_rows, key=lambda r: r["rho"])["rho"])
 
 
 def replay_effectiveness(
@@ -272,12 +288,29 @@ def replay_effectiveness(
         )
     comps = replay_arrivals(queue, arrivals_s, q_terms_list, q_weights_list, deadlines_ms)
     comps = sorted(comps, key=lambda c: c.rid)
+    if not comps:
+        # an empty schedule served nothing at any rho: a well-formed all-zero
+        # report, not an np.stack([]) crash deep in the accounting
+        return {
+            "n_requests": 0,
+            "violations": queue.n_violations,
+            "infeasible": queue.n_infeasible,
+            "degraded_flushes": queue.n_degraded,
+            "wait_ms": {k: round(v, 4) for k, v in summarize_latencies([]).row().items()},
+            "overall": effectiveness_report(
+                np.zeros((0, 1), np.int32), rels[:0],
+                recall_k=recall_k, mrr_k=mrr_k, ndcg_k=ndcg_k,
+            ),
+            "by_rho": [],
+        }
     ids = np.stack([c.doc_ids for c in comps])
     served_rho = [c.rho for c in comps]
     waits = summarize_latencies([c.wait_ms for c in comps])
     by_rho = []
     for rho in sorted({r for r in served_rho if r is not None}):
         pick = np.asarray([r == rho for r in served_rho])
+        if not pick.any():
+            continue  # a level nothing completed at contributes no row
         by_rho.append(
             {
                 "rho": int(rho),

@@ -6,6 +6,15 @@ from repro.serving.bucketing import (  # noqa: F401
     effective_lq,
     normalize_buckets,
     pad_to_width,
+    sentinel_rows,
+)
+from repro.serving.counters import CounterRegistry  # noqa: F401
+from repro.serving.pod import (  # noqa: F401
+    PodFrontEnd,
+    PodResult,
+    PodServer,
+    pod_hosts,
+    warmup_pod,
 )
 from repro.serving.queue import (  # noqa: F401
     AdmissionQueue,
@@ -17,6 +26,7 @@ from repro.serving.scheduler import AnytimeServer, ServingConfig, run_query_stre
 from repro.serving.sharded import (  # noqa: F401
     abstract_stacked_index,
     make_bucketed_serve_step,
+    make_pod_serve_step,
     make_sharded_serve_step,
     shard_corpus,
     stack_indexes,

@@ -85,6 +85,21 @@ def pad_to_width(
     return out_t, out_w
 
 
+def sentinel_rows(n_rows: int, width: int, n_terms: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Inert query rows: every slot is a pad (term id ``n_terms``, weight 0).
+
+    A sentinel row contributes no SAAT segments and no DAAT survivors, so it
+    is the free way to fill a batch to a compiled shape — the admission
+    queue's short flushes and the pod front end's absent-host blocks both
+    stamp real rows over this canvas. Returns ``(q_terms, q_weights)`` of
+    shape ``[n_rows, width]``.
+    """
+    return (
+        np.full((n_rows, width), n_terms, dtype=np.int32),
+        np.zeros((n_rows, width), dtype=np.float32),
+    )
+
+
 def bucketize_batch(
     q_terms: np.ndarray,
     q_weights: np.ndarray,

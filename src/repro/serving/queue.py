@@ -79,7 +79,14 @@ import jax
 import numpy as np
 
 from repro.metrics.latency import Clock, SimulatedClock, SystemClock  # noqa: F401  (re-export)
-from repro.serving.bucketing import bucket_for, effective_lq, normalize_buckets, pad_to_width
+from repro.serving.bucketing import (
+    bucket_for,
+    effective_lq,
+    normalize_buckets,
+    pad_to_width,
+    sentinel_rows,
+)
+from repro.serving.counters import CounterRegistry
 from repro.serving.scheduler import AnytimeServer
 
 _EPS_S = 1e-9  # float tolerance when judging "flushed after its due instant"
@@ -316,7 +323,12 @@ class AdmissionQueue:
         if not q:
             return None
         shape = self._shape_for(len(q))
-        predicted_ms = self.server.predict_service_ms(shape, bucket)
+        # an overfull lane (> largest shape) drains as ceil(n/shape) chunked
+        # launches, and the lane's deadlines are only safe once the LAST
+        # launch lands — predicting one launch made the due instant
+        # optimistic exactly when the lane was overloaded
+        launches = -(-len(q) // shape)
+        predicted_ms = self.server.predict_service_ms(shape, bucket) * launches
         oldest = min(r.deadline_s for r in q)
         due = oldest - predicted_ms / 1e3 - self.safety_s
         # age bound: deadline-less (inf) requests would otherwise push `due`
@@ -332,9 +344,14 @@ class AdmissionQueue:
 
     def poll(self) -> list[Completion]:
         """Flush every due bucket, then hand back (and clear) completions."""
-        now = self.clock.now()
         for bucket in sorted(self._pending):
             while True:
+                # Re-read the clock every iteration: under a real (or hybrid)
+                # clock an earlier bucket's flush accrues service time, which
+                # can make THIS bucket due *during* the same poll — judging
+                # every bucket against the poll's entry time flushed it one
+                # driver wakeup late.
+                now = self.clock.now()
                 due = self._due_instant(bucket)
                 if due is None or now < due - _EPS_S:
                     break
@@ -356,6 +373,18 @@ class AdmissionQueue:
     # ------------------------------- flushing ------------------------------
 
     def _flush(self, bucket: int, reason: str):
+        """Serve the pending lane: one launch, or — when the lane holds more
+        than the largest batch shape — every ceil(n/top) chunked launch it
+        takes to drain it. One ``FlushRecord`` per launch; each launch reads
+        the clock itself, so on a real clock a later chunk's violation
+        judgement sees the service time the earlier chunks actually spent.
+        """
+        top = self.batch_shapes[-1]
+        n_chunks = max(-(-len(self._pending[bucket]) // top), 1)
+        for _ in range(n_chunks):
+            self._flush_chunk(bucket, reason)
+
+    def _flush_chunk(self, bucket: int, reason: str):
         q = self._pending[bucket]
         if not q:
             return
@@ -372,8 +401,7 @@ class AdmissionQueue:
         # rows [n:] stay inert sentinels (all pad ids, zero weights): cheaper
         # than repeating the last request, which burned DAAT while_loop work
         # on a duplicate's survivors
-        qt = np.full((shape, bucket), self.server.index.n_terms, dtype=np.int32)
-        qw = np.zeros((shape, bucket), dtype=np.float32)
+        qt, qw = sentinel_rows(shape, bucket, self.server.index.n_terms)
         for i, r in enumerate(batch):
             t, w = pad_to_width(r.q_terms, r.q_weights, bucket, self.server.index.n_terms)
             qt[i], qw[i] = t, w
@@ -401,8 +429,11 @@ class AdmissionQueue:
         res = self.server.search_batch(qt, qw, rho=rho)
         scores = np.asarray(jax.device_get(res.scores))
         ids = np.asarray(jax.device_get(res.doc_ids))
-        if daat:
-            survivors = np.asarray(jax.device_get(res.stats.n_survivors))
+        # the pod serve step returns only the merged (scores, ids) — per-rank
+        # WorkStats never cross the merge — so survivor feedback is best-effort
+        stats = getattr(res, "stats", None) if daat else None
+        if stats is not None:
+            survivors = np.asarray(jax.device_get(stats.n_survivors))
             for i, r in enumerate(batch):
                 self.survivors.observe(r.lq_eff, float(survivors[i]))
         for i, r in enumerate(batch):
@@ -455,6 +486,57 @@ class AdmissionQueue:
             return 0
         top = self.server.rho_ladder[-1]
         return sum(1 for f in self.flush_log if f.rho is not None and f.rho < top)
+
+    def export_counters(
+        self,
+        registry: Optional[CounterRegistry] = None,
+        labels: Optional[dict] = None,
+    ) -> CounterRegistry:
+        """Scrape-time counter export, derived wholly from records this queue
+        already keeps (``flush_log``, admission tallies, pending lanes) — no
+        hot-path instrumentation anywhere. ``labels`` (e.g. ``{"host": "2"}``)
+        are attached to every sample so several queues can share a registry.
+        """
+        reg = registry if registry is not None else CounterRegistry()
+        base = {str(k): str(v) for k, v in (labels or {}).items()}
+        reg.counter("repro_queue_submitted_total", "Requests admitted").labels(**base).inc(
+            self.n_submitted
+        )
+        reg.counter("repro_queue_completed_total", "Requests served").labels(**base).inc(
+            self.n_completed
+        )
+        flushes = reg.counter(
+            "repro_queue_flush_total", "Flushes by Lq bucket and trigger reason"
+        )
+        occupancy = reg.histogram(
+            "repro_queue_flush_occupancy",
+            "Real rows / batch shape per flush (executable fill factor)",
+            buckets=(0.25, 0.5, 0.75, 1.0),
+        )
+        served_rho = reg.counter(
+            "repro_queue_served_rho_total",
+            "Flushes by served SAAT posting budget (daat flushes under rho=\"none\")",
+        )
+        for f in self.flush_log:
+            flushes.labels(**base, bucket=str(f.bucket), reason=f.reason).inc()
+            occupancy.labels(**base, bucket=str(f.bucket)).observe(f.n_real / f.batch_shape)
+            served_rho.labels(**base, rho="none" if f.rho is None else str(f.rho)).inc()
+        reg.counter(
+            "repro_queue_violations_total",
+            "Flushes later than the predicted-service deadline boundary",
+        ).labels(**base).inc(self.n_violations)
+        reg.counter(
+            "repro_queue_infeasible_total",
+            "Flushes whose oldest deadline was unmeetable at admission",
+        ).labels(**base).inc(self.n_infeasible)
+        reg.counter(
+            "repro_queue_degraded_total",
+            "Flushes served below the full posting budget",
+        ).labels(**base).inc(self.n_degraded)
+        depth = reg.gauge("repro_queue_depth", "Pending requests per Lq bucket lane")
+        for bucket, lane in sorted(self._pending.items()):
+            depth.labels(**base, bucket=str(bucket)).set(len(lane))
+        return reg
 
 
 def replay_arrivals(

@@ -502,6 +502,38 @@ class AnytimeServer:
         self._latencies_ms.clear()
         self._rhos.clear()
 
+    def export_counters(self, registry=None):
+        """Scrape-time serving counters for this server's dispatch surface.
+
+        Derived from state the server already keeps (query tallies, the
+        shape-keyed service-time EMA, the rho cost model) — never touched on
+        the hot path. Shares the registry conventions of
+        ``AdmissionQueue.export_counters`` / ``repro.serving.counters``.
+        """
+        from repro.serving.counters import CounterRegistry
+
+        reg = registry if registry is not None else CounterRegistry()
+        reg.counter(
+            "repro_server_queries_total", "Queries served (per-request rows)"
+        ).labels(engine=self.cfg.engine).inc(len(self._latencies_ms))
+        cal = reg.gauge(
+            "repro_server_calibrated_shapes",
+            "Directly measured (bucket, batch-shape, rho) executables",
+        )
+        cal.labels(engine=self.cfg.engine).set(len(self._bucket_ms))
+        ema = reg.gauge(
+            "repro_server_service_ms",
+            "EMA whole-batch wall ms per (bucket, batch shape, rho) executable",
+        )
+        for (eng, bucket, shape, rho), ms in sorted(
+            self._bucket_ms.items(), key=lambda kv: (kv[0][0], kv[0][1], kv[0][2], str(kv[0][3]))
+        ):
+            ema.labels(
+                engine=eng, bucket=str(bucket), shape=str(shape),
+                rho="none" if rho is None else str(rho),
+            ).set(ms)
+        return reg
+
 
 def run_query_stream(
     server: AnytimeServer,

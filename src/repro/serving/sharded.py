@@ -33,7 +33,7 @@ from repro.core.daat import daat_search_batched
 from repro.core.impact_index import ImpactIndex, META_FIELDS as _META_FIELDS, build_impact_index
 from repro.core.quantization import QuantConfig
 from repro.core.saat import saat_search
-from repro.core.topk import NEG_INF, merge_topk, sharded_topk_merge
+from repro.core.topk import NEG_INF, canonical_topk_merge, merge_topk
 from repro.distributed.sharding import mesh_axes
 
 
@@ -168,6 +168,101 @@ def abstract_stacked_index(
 # --------------------------------------------------------------------------
 
 
+def _validate_engine_cfg(
+    engine: str,
+    max_bm_per_term: int,
+    daat_use_kernels: bool,
+    daat_fused_chunk: bool,
+    daat_trips_per_launch: int,
+):
+    if engine not in ("saat", "daat"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "daat" and max_bm_per_term <= 0:
+        raise ValueError("engine='daat' needs the static max_bm_per_term bound")
+    if daat_fused_chunk and not daat_use_kernels:
+        raise ValueError(
+            "daat_fused_chunk fuses the kernel-mode chunk step; pass "
+            "daat_use_kernels=True"
+        )
+    if daat_trips_per_launch < 1:
+        raise ValueError(
+            f"daat_trips_per_launch={daat_trips_per_launch} must be >= 1"
+        )
+    if daat_trips_per_launch > 1 and not daat_fused_chunk:
+        raise ValueError(
+            "daat_trips_per_launch > 1 batches trips inside the fused "
+            "chunk_step kernel; pass daat_fused_chunk=True (and "
+            "daat_use_kernels=True)"
+        )
+
+
+def _scan_local_shards(idx_data: dict, qt, qw, *, shard_ord0, st: dict, meta_cell: dict):
+    """Search every doc shard resident on this rank; merge their k-pools.
+
+    Runs inside ``shard_map``. ``shard_ord0`` is this rank's flat position in
+    the shard partition order (the leading shard axis is laid out
+    major-to-minor along the partition spec, so consecutive flat ranks own
+    consecutive shard ranges); each local shard ``j`` is global shard
+    ``shard_ord0 * n_local + j``. Pad documents (block-padding slots, and —
+    on a short final shard — ids past the corpus end) are demoted to
+    ``(NEG_INF, INT32_MAX)`` *before* globalization so they can never alias
+    a real doc id in a later shard's range. Returns the rank's merged
+    ``(scores, gids)`` candidate pool, ``[B, k]``.
+    """
+    n_local = jax.tree.leaves(idx_data)[0].shape[0]
+    docs_per_shard = st["docs_per_shard"]
+    pool_s = pool_i = None
+    for j in range(n_local):
+        local = jax.tree.map(lambda x, _j=j: x[_j], idx_data)
+        index = ImpactIndex(
+            **local, **_static_meta_from(local, docs_per_shard, meta_cell)
+        )
+        if st["engine"] == "daat":
+            res = daat_search_batched(
+                index,
+                qt,
+                qw,
+                k=st["k"],
+                est_blocks=st["daat_est_blocks"],
+                block_budget=st["daat_block_budget"],
+                max_bm_per_term=st["max_bm_per_term"],
+                exact=st["daat_exact"],
+                use_kernels=st["daat_use_kernels"],
+                fused_chunk=st["daat_fused_chunk"],
+                trips_per_launch=st["daat_trips_per_launch"],
+            )
+        else:
+            res = saat_search(
+                index,
+                qt,
+                qw,
+                k=st["k"],
+                rho=st["rho_per_shard"],
+                max_segs_per_term=st["max_segs_per_term"],
+                scatter_impl=st["scatter_impl"],
+                fused_topk=st["fused_topk"],
+            )
+        shard_ord = shard_ord0 * n_local + j
+        if st["n_docs_total"] is None:
+            live = jnp.int32(docs_per_shard)
+        else:
+            live = jnp.clip(
+                st["n_docs_total"] - shard_ord * docs_per_shard, 0, docs_per_shard
+            ).astype(jnp.int32)
+        pad = res.doc_ids >= live
+        scores = jnp.where(pad, NEG_INF, res.scores)
+        gids = jnp.where(
+            pad,
+            jnp.iinfo(jnp.int32).max,
+            res.doc_ids + shard_ord * docs_per_shard,
+        )
+        if pool_s is None:
+            pool_s, pool_i = scores, gids
+        else:
+            pool_s, pool_i = merge_topk(pool_s, pool_i, scores, gids, st["k"])
+    return pool_s, pool_i
+
+
 def make_sharded_serve_step(
     mesh: Mesh,
     *,
@@ -219,25 +314,10 @@ def make_sharded_serve_step(
     a later shard's id range. Omitting it still masks the per-shard block
     padding (ids ``>= docs_per_shard``) but assumes every shard is full.
     """
-    if engine not in ("saat", "daat"):
-        raise ValueError(f"unknown engine {engine!r}")
-    if engine == "daat" and max_bm_per_term <= 0:
-        raise ValueError("engine='daat' needs the static max_bm_per_term bound")
-    if daat_fused_chunk and not daat_use_kernels:
-        raise ValueError(
-            "daat_fused_chunk fuses the kernel-mode chunk step; pass "
-            "daat_use_kernels=True"
-        )
-    if daat_trips_per_launch < 1:
-        raise ValueError(
-            f"daat_trips_per_launch={daat_trips_per_launch} must be >= 1"
-        )
-    if daat_trips_per_launch > 1 and not daat_fused_chunk:
-        raise ValueError(
-            "daat_trips_per_launch > 1 batches trips inside the fused "
-            "chunk_step kernel; pass daat_fused_chunk=True (and "
-            "daat_use_kernels=True)"
-        )
+    _validate_engine_cfg(
+        engine, max_bm_per_term, daat_use_kernels, daat_fused_chunk,
+        daat_trips_per_launch,
+    )
     axes = mesh_axes(mesh)
     dp = axes.data if len(axes.data) > 1 else axes.data[0]
     idx_specs = jax.tree.map(lambda _: P("model"), _index_data_template())
@@ -251,70 +331,30 @@ def make_sharded_serve_step(
     # bare data dict falls back to the historical defaults.
     meta_cell: dict = {}
 
+    # Static surface of this serve step, exposed for repro.analysis.hot_path:
+    # the lint traces `serve` at each (bucket, B) shape and keys executables
+    # on exactly this dict plus the shape. Keep it the full closure config —
+    # a knob missing here is a knob the one-executable-per-key check can't
+    # see. The same dict feeds `_scan_local_shards` under the trace.
+    statics = dict(
+        engine=engine, k=k, rho_per_shard=rho_per_shard,
+        max_segs_per_term=max_segs_per_term, docs_per_shard=docs_per_shard,
+        scatter_impl=scatter_impl, fused_topk=fused_topk,
+        daat_est_blocks=daat_est_blocks, daat_block_budget=daat_block_budget,
+        max_bm_per_term=max_bm_per_term, daat_exact=daat_exact,
+        daat_use_kernels=daat_use_kernels, daat_fused_chunk=daat_fused_chunk,
+        daat_trips_per_launch=daat_trips_per_launch, n_docs_total=n_docs_total,
+    )
+
     def body(idx_data: dict, qt, qw):
         # the block may hold SEVERAL shards when n_shards > model-axis size
         # (multiple doc ranges per chip): search each, merge locally, then
         # k-merge across chips
-        n_local = jax.tree.leaves(idx_data)[0].shape[0]
         rank = jax.lax.axis_index("model").astype(jnp.int32)
-        pool_s = pool_i = None
-        for j in range(n_local):
-            local = jax.tree.map(lambda x, _j=j: x[_j], idx_data)
-            index = ImpactIndex(
-                **local, **_static_meta_from(local, docs_per_shard, meta_cell)
-            )
-            if engine == "daat":
-                res = daat_search_batched(
-                    index,
-                    qt,
-                    qw,
-                    k=k,
-                    est_blocks=daat_est_blocks,
-                    block_budget=daat_block_budget,
-                    max_bm_per_term=max_bm_per_term,
-                    exact=daat_exact,
-                    use_kernels=daat_use_kernels,
-                    fused_chunk=daat_fused_chunk,
-                    trips_per_launch=daat_trips_per_launch,
-                )
-            else:
-                res = saat_search(
-                    index,
-                    qt,
-                    qw,
-                    k=k,
-                    rho=rho_per_shard,
-                    max_segs_per_term=max_segs_per_term,
-                    scatter_impl=scatter_impl,
-                    fused_topk=fused_topk,
-                )
-            # Pad documents (block-padding slots, and — on a short final
-            # shard — ids past the corpus end) score 0.0 locally, so with
-            # k > live candidates they survive the local top-k. Left
-            # unmasked, `pad_id + shard_offset` aliases a REAL doc id in
-            # the next shard's range after globalization. Demote them to
-            # (NEG_INF, INT32_MAX) so the cross-shard merge can only ever
-            # surface them as explicit sentinels when k exceeds the whole
-            # live corpus.
-            shard_ord = rank * n_local + j
-            if n_docs_total is None:
-                live = jnp.int32(docs_per_shard)
-            else:
-                live = jnp.clip(
-                    n_docs_total - shard_ord * docs_per_shard, 0, docs_per_shard
-                ).astype(jnp.int32)
-            pad = res.doc_ids >= live
-            scores = jnp.where(pad, NEG_INF, res.scores)
-            gids = jnp.where(
-                pad,
-                jnp.iinfo(jnp.int32).max,
-                res.doc_ids + shard_ord * docs_per_shard,
-            )
-            if pool_s is None:
-                pool_s, pool_i = scores, gids
-            else:
-                pool_s, pool_i = merge_topk(pool_s, pool_i, scores, gids, k)
-        return sharded_topk_merge(pool_s, pool_i, k, "model")
+        pool_s, pool_i = _scan_local_shards(
+            idx_data, qt, qw, shard_ord0=rank, st=statics, meta_cell=meta_cell
+        )
+        return canonical_topk_merge(pool_s, pool_i, k, "model")
 
     sm = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
@@ -330,12 +370,86 @@ def make_sharded_serve_step(
         data = _index_data_dict(index_stack)
         return sm(data, q_terms, q_weights)
 
-    # Static surface of this serve step, exposed for repro.analysis.hot_path:
-    # the lint traces `serve` at each (bucket, B) shape and keys executables
-    # on exactly this dict plus the shape. Keep it the full closure config —
-    # a knob missing here is a knob the one-executable-per-key check can't
-    # see.
-    serve.statics = dict(
+    serve.statics = statics
+    return serve, in_specs, out_specs
+
+
+def make_pod_serve_step(
+    mesh: Mesh,
+    *,
+    k: int,
+    rho_per_shard: int,
+    max_segs_per_term: int,
+    docs_per_shard: int,
+    scatter_impl: str = "sort",
+    fused_topk: bool = False,
+    engine: str = "saat",
+    daat_est_blocks: int = 8,
+    daat_block_budget: int = 16,
+    max_bm_per_term: int = 0,
+    daat_exact: bool = True,
+    daat_use_kernels: bool = False,
+    daat_fused_chunk: bool = False,
+    daat_trips_per_launch: int = 1,
+    n_docs_total: Optional[int] = None,
+):
+    """Multi-host pod serve: every host's query block, every rank's shard.
+
+    The mesh carries a ``"pod"`` axis (one position per ingestion host) in
+    the data group alongside the ``"model"`` axis; the stacked index's
+    leading shard axis is partitioned over *all* mesh axes pod-major, so the
+    whole pod is one document-sharded replica set. Each host contributes its
+    own ``B_local`` admission block (query in_spec shards the batch over the
+    data group); inside the step every rank
+
+      1. all-gathers the query blocks over the data group — the global
+         ``[hosts * B_local, Lq]`` batch, identical on every rank, so every
+         query is answered by every shard;
+      2. runs the engine over its local shard(s) via the shared
+         ``_scan_local_shards`` (identical rho-budgeted work per rank for
+         SAAT — the paper's no-straggler property, now pod-wide);
+      3. joins the rank-safe cross-host k-merge: per-rank ``[B_glob, k]``
+         candidate pools are gathered over ``("pod", ..., "model")`` at once
+         and re-selected with the id-canonical :func:`canonical_topk_merge`
+         (``tiled_topk`` over ``ranks * k`` candidates — ties and pad
+         sentinels resolve identically to the unsharded oracle no matter the
+         host/shard layout);
+      4. hands back its own host's ``B_local`` rows, so results land on the
+         host that admitted the queries.
+
+    Returns ``(serve, in_specs, out_specs)`` like
+    :func:`make_sharded_serve_step`; the caller's query batch is the
+    concatenation of all hosts' blocks (``hosts * B_local`` rows, pod-major)
+    — :class:`repro.serving.pod.PodServer` assembles it from one host's
+    admission queue plus inert sentinel rows for the absent hosts.
+    """
+    _validate_engine_cfg(
+        engine, max_bm_per_term, daat_use_kernels, daat_fused_chunk,
+        daat_trips_per_launch,
+    )
+    if "pod" not in mesh.axis_names:
+        raise ValueError(
+            f"pod serve step needs a 'pod' mesh axis, got {mesh.axis_names}"
+        )
+    if "model" not in mesh.axis_names:
+        raise ValueError(
+            f"pod serve step needs a 'model' mesh axis, got {mesh.axis_names}"
+        )
+    axes = mesh_axes(mesh)
+    data_axes = tuple(axes.data)  # every non-"model" axis, "pod" included
+    dp = data_axes if len(data_axes) > 1 else data_axes[0]
+    shard_axes = data_axes + ("model",)
+    idx_specs = jax.tree.map(lambda _: P(shard_axes), _index_data_template())
+    in_specs = (idx_specs, P(dp, None), P(dp, None))
+    out_specs = (P(dp, None), P(dp, None))
+    data_sizes = tuple(int(mesh.shape[name]) for name in data_axes)
+    n_hosts = 1
+    for s in data_sizes:
+        n_hosts *= s
+    n_model = int(mesh.shape["model"])
+    meta_cell: dict = {}
+
+    statics = dict(
         engine=engine, k=k, rho_per_shard=rho_per_shard,
         max_segs_per_term=max_segs_per_term, docs_per_shard=docs_per_shard,
         scatter_impl=scatter_impl, fused_topk=fused_topk,
@@ -343,7 +457,50 @@ def make_sharded_serve_step(
         max_bm_per_term=max_bm_per_term, daat_exact=daat_exact,
         daat_use_kernels=daat_use_kernels, daat_fused_chunk=daat_fused_chunk,
         daat_trips_per_launch=daat_trips_per_launch, n_docs_total=n_docs_total,
+        # pod identity: same engine statics on a different mesh is a
+        # DIFFERENT executable (different collectives), and the merge fan-in
+        # is the serving counter the host side reports per dispatch
+        pod_axes=shard_axes, pod_hosts=n_hosts, pod_model_ranks=n_model,
+        merge_fanin=n_hosts * n_model * k,
     )
+
+    def body(idx_data: dict, qt, qw):
+        # flat position of this rank's host in the data group — the same
+        # major-to-minor order P(shard_axes) partitions the shard axis in,
+        # so host blocks, shard ranges, and gather order all agree
+        drank = jnp.int32(0)
+        for name, size in zip(data_axes, data_sizes):
+            drank = drank * size + jax.lax.axis_index(name).astype(jnp.int32)
+        mrank = jax.lax.axis_index("model").astype(jnp.int32)
+        b_local = qt.shape[0]
+        qt_g = jax.lax.all_gather(qt, data_axes, axis=0, tiled=True)
+        qw_g = jax.lax.all_gather(qw, data_axes, axis=0, tiled=True)
+        pool_s, pool_i = _scan_local_shards(
+            idx_data, qt_g, qw_g,
+            shard_ord0=drank * n_model + mrank, st=statics, meta_cell=meta_cell,
+        )
+        ms, mi = canonical_topk_merge(pool_s, pool_i, k, shard_axes)
+        # every rank now holds the pod-global answer; hand back the rows of
+        # the host that admitted them
+        ms = jax.lax.dynamic_slice_in_dim(ms, drank * b_local, b_local, axis=0)
+        mi = jax.lax.dynamic_slice_in_dim(mi, drank * b_local, b_local, axis=0)
+        return ms, mi
+
+    sm = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+    def serve(index_stack: ImpactIndex, q_terms, q_weights):
+        meta_cell.clear()
+        meta_cell.update(
+            block_size=index_stack.block_size,
+            scale=index_stack.scale,
+            bits=index_stack.bits,
+            max_segs=index_stack.max_segs,
+            max_bm=index_stack.max_bm,
+        )
+        data = _index_data_dict(index_stack)
+        return sm(data, q_terms, q_weights)
+
+    serve.statics = statics
     return serve, in_specs, out_specs
 
 
@@ -354,7 +511,7 @@ def make_bucketed_serve_step(
     n_terms: int,
     **kwargs,
 ):
-    """Lq-bucketed wrapper over :func:`make_sharded_serve_step`.
+    """Lq-bucketed wrapper over the sharded (or pod) serve step.
 
     The underlying serve step is shape-polymorphic — one executable per
     query-batch shape — so bucketing at pod scale is purely a host-side
@@ -365,11 +522,16 @@ def make_bucketed_serve_step(
     across ranks because all ranks see the same padded batch shape. Results
     are bit-identical to padding at max Lq (trailing pad slots are inert in
     both engines).
+
+    A mesh with a ``"pod"`` axis routes to :func:`make_pod_serve_step`
+    (multi-host: query batch = concatenation of all hosts' blocks);
+    otherwise the single-host :func:`make_sharded_serve_step` applies.
     """
     from repro.serving.bucketing import bucketize_batch, normalize_buckets
 
     buckets = normalize_buckets(lq_buckets)
-    serve, in_specs, out_specs = make_sharded_serve_step(mesh, **kwargs)
+    step = make_pod_serve_step if "pod" in mesh.axis_names else make_sharded_serve_step
+    serve, in_specs, out_specs = step(mesh, **kwargs)
 
     def serve_bucketed(index_stack: ImpactIndex, q_terms, q_weights):
         qt, qw, _ = bucketize_batch(

@@ -167,5 +167,21 @@ def test_cheapest_rho_within_loss_selector():
     assert cheapest_rho_within_loss(rows, max_loss=0.5) == 100
     assert cheapest_rho_within_loss(rows, max_loss=0.001) == 1000
     assert cheapest_rho_within_loss(rows, max_loss=0.03, metric="recall") == 100
-    # a tolerance below even the exact level's 0.0 loss admits nothing
-    assert cheapest_rho_within_loss(rows, max_loss=-1.0) is None
+
+
+def test_cheapest_rho_nothing_within_tolerance_returns_exact_budget():
+    """Regression: a tolerance no level meets (even the exhaustive level's
+    own 0.0 loss) must answer with the exact budget — "don't degrade" —
+    never None or a crash: callers feed the result straight into a rho
+    ladder."""
+    rows = [
+        {"rho": 100, "loss_mrr": 0.10},
+        {"rho": 500, "loss_mrr": 0.02},
+        {"rho": 1000, "loss_mrr": 0.00, "exact": True},
+    ]
+    assert cheapest_rho_within_loss(rows, max_loss=-1.0) == 1000
+    # no row flagged exact: the largest swept budget stands in
+    del rows[2]["exact"]
+    assert cheapest_rho_within_loss(rows, max_loss=-1.0) == 1000
+    with pytest.raises(ValueError, match="non-empty"):
+        cheapest_rho_within_loss([], max_loss=0.03)

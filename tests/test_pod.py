@@ -1,0 +1,301 @@
+"""Pod-scale serving suite: cross-host k-merge vs the unsharded oracle.
+
+The acceptance bar is BIT-IDENTITY, not score parity: the pod step's
+id-canonical merge must return exactly the doc ids the unsharded SAAT
+oracle returns, ragged shard layouts and score ties included.
+
+Run the full mesh grid under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI ``pod``
+lane); on a plain 1-device CPU only the ``(1, 1)`` mesh cases run, so the
+pod code path still executes in tier-1.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import build_impact_index
+from repro.core.saat import max_segments_per_term, saat_search
+from repro.metrics.latency import SimulatedClock
+from repro.serving import (
+    PodFrontEnd,
+    PodServer,
+    ServingConfig,
+    make_bucketed_serve_step,
+    make_pod_serve_step,
+    pod_hosts,
+    shard_corpus,
+    stack_indexes,
+)
+
+pytestmark = pytest.mark.pod
+
+
+def _mesh(n_pod: int, n_model: int) -> Mesh:
+    need = n_pod * n_model
+    if jax.device_count() < need:
+        pytest.skip(
+            f"needs {need} devices (run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+    devs = np.array(jax.devices()[:need]).reshape(n_pod, n_model)
+    return Mesh(devs, ("pod", "model"))
+
+
+def _coo(seed=0, n_docs=37, n_terms=24, nnz=300):
+    """Random deduplicated COO postings (ragged against most shard counts)."""
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, n_docs, nnz).astype(np.int32)
+    t = rng.integers(0, n_terms, nnz).astype(np.int32)
+    w = rng.uniform(0.1, 5.0, nnz).astype(np.float32)
+    _, ix = np.unique(d.astype(np.int64) * n_terms + t, return_index=True)
+    return d[ix], t[ix], w[ix], n_docs, n_terms
+
+
+def _oracle(d, t, w, n_docs, n_terms, qt, qw, k):
+    """Unsharded exact SAAT: one accumulator, one top-k (ties -> lower id)."""
+    idx = build_impact_index(d, t, w, n_docs, n_terms)
+    res = saat_search(
+        idx, jnp.asarray(qt), jnp.asarray(qw), k=k,
+        rho=idx.n_postings, max_segs_per_term=max_segments_per_term(idx),
+    )
+    return np.asarray(res.scores), np.asarray(res.doc_ids)
+
+
+def _pod_step(mesh, shards, dps, n_docs, k, **kw):
+    kw.setdefault("rho_per_shard", int(stack_indexes(shards).doc_ids.shape[1]))
+    kw.setdefault(
+        "max_segs_per_term", max(max_segments_per_term(s) for s in shards)
+    )
+    return make_pod_serve_step(
+        mesh, k=k, docs_per_shard=dps, n_docs_total=n_docs, **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# tentpole: pod merge == unsharded oracle, bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", [(1, 1), (1, 2), (2, 4), (4, 2), (8, 1)])
+def test_pod_saat_bit_identical_to_oracle(layout):
+    """Every (pod, model) mesh layout over a ragged corpus returns exactly
+    the unsharded oracle's doc ids — scores and ids both."""
+    n_pod, n_model = layout
+    mesh = _mesh(n_pod, n_model)
+    d, t, w, n_docs, n_terms = _coo()
+    rng = np.random.default_rng(7)
+    B, Lq, k = 8, 6, 10
+    qt = rng.integers(0, n_terms, (B, Lq)).astype(np.int32)
+    qw = rng.uniform(0.1, 2.0, (B, Lq)).astype(np.float32)
+    os_, oi = _oracle(d, t, w, n_docs, n_terms, qt, qw, k)
+
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, n_pod * n_model)
+    serve, _, _ = _pod_step(mesh, shards, dps, n_docs, k)
+    ss, si = serve(stack_indexes(shards), jnp.asarray(qt), jnp.asarray(qw))
+    np.testing.assert_allclose(np.asarray(ss), os_, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(si), oi)
+
+
+@pytest.mark.parametrize("layout", [(1, 1), (2, 2)])
+def test_pod_daat_bit_identical_distinct_scores(layout):
+    """The DAAT engine under the pod merge: on a corpus whose per-doc scores
+    are all distinct quant levels, exact Block-Max must return the oracle's
+    ids bit-identically (no tie freedom to hide behind)."""
+    n_pod, n_model = layout
+    mesh = _mesh(n_pod, n_model)
+    n_docs, n_terms = 23, 8
+    d = np.arange(n_docs, dtype=np.int32)
+    t = np.zeros(n_docs, dtype=np.int32)
+    w = (d + 1).astype(np.float32) * 0.5  # doc-unique, quant-distinct
+    B, k = 4, 6
+    qt = np.full((B, 2), n_terms, np.int32)
+    qt[:, 0] = 0
+    qw = np.zeros((B, 2), np.float32)
+    qw[:, 0] = np.linspace(0.5, 2.0, B, dtype=np.float32)
+    os_, oi = _oracle(d, t, w, n_docs, n_terms, qt, qw, k)
+    assert all(len(np.unique(row)) == k for row in os_)  # genuinely tie-free
+
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, n_pod * n_model)
+    stacked = stack_indexes(shards)
+    serve, _, _ = _pod_step(
+        mesh, shards, dps, n_docs, k,
+        rho_per_shard=0, max_segs_per_term=0, engine="daat",
+        daat_est_blocks=2, daat_block_budget=2, max_bm_per_term=stacked.max_bm,
+    )
+    ss, si = serve(stacked, jnp.asarray(qt), jnp.asarray(qw))
+    np.testing.assert_allclose(np.asarray(ss), os_, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(si), oi)
+
+
+@pytest.mark.parametrize("layout", [(1, 1), (2, 1), (3, 1), (2, 2)])
+def test_pod_merge_tie_order_all_equal_scores(layout):
+    """Satellite: the merge canonicalizes ties to global-doc-id order.
+
+    Every doc scores exactly 1.0, so the ENTIRE top-k is tie-broken. The
+    unsharded oracle's top-k prefers lower accumulator position = lower doc
+    id; the pod merge must agree bit-identically at 1, 2 and 3 hosts — the
+    case the rank-concatenation merge order gets wrong (a sentinel or a
+    higher-id doc on an earlier rank would outrank a lower-id doc)."""
+    n_pod, n_model = layout
+    mesh = _mesh(n_pod, n_model)
+    n_docs, n_terms, k = 17, 4, 10
+    d = np.arange(n_docs, dtype=np.int32)
+    t = np.zeros(n_docs, dtype=np.int32)
+    w = np.ones(n_docs, dtype=np.float32)
+    B = 6  # divisible by 1, 2, 3 hosts
+    qt = np.full((B, 2), n_terms, np.int32)
+    qt[:, 0] = 0
+    qw = np.zeros((B, 2), np.float32)
+    qw[:, 0] = 1.0
+    os_, oi = _oracle(d, t, w, n_docs, n_terms, qt, qw, k)
+    np.testing.assert_array_equal(oi, np.tile(np.arange(k, dtype=np.int32), (B, 1)))
+
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, n_pod * n_model)
+    serve, _, _ = _pod_step(mesh, shards, dps, n_docs, k)
+    ss, si = serve(stack_indexes(shards), jnp.asarray(qt), jnp.asarray(qw))
+    np.testing.assert_allclose(np.asarray(ss), os_, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(si), oi)
+
+
+def test_pod_bucketed_routing_and_statics():
+    """A mesh with a "pod" axis routes make_bucketed_serve_step to the pod
+    step; the tagged statics carry the pod identity the lint bijection and
+    counters consume, and results still match the oracle."""
+    mesh = _mesh(1, 1)
+    d, t, w, n_docs, n_terms = _coo(seed=2)
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, 1)
+    stacked = stack_indexes(shards)
+    k = 5
+    serve, _, _ = make_bucketed_serve_step(
+        mesh, lq_buckets=(4, 8), n_terms=n_terms, k=k,
+        rho_per_shard=int(stacked.doc_ids.shape[1]),
+        max_segs_per_term=max_segments_per_term(shards[0]),
+        docs_per_shard=dps, n_docs_total=n_docs,
+    )
+    st = serve.statics
+    assert st["pod_axes"] == ("pod", "model")  # merge spans the whole mesh
+    assert st["pod_hosts"] == 1 and st["pod_model_ranks"] == 1
+    assert st["merge_fanin"] == 1 * 1 * k
+
+    rng = np.random.default_rng(3)
+    qt = rng.integers(0, n_terms, (4, 3)).astype(np.int32)
+    qw = rng.uniform(0.1, 2.0, (4, 3)).astype(np.float32)
+    os_, oi = _oracle(d, t, w, n_docs, n_terms, qt, qw, k)
+    ss, si = serve(stacked, qt, qw)
+    np.testing.assert_allclose(np.asarray(ss), os_, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(si), oi)
+
+
+# ---------------------------------------------------------------------------
+# host side: PodServer / PodFrontEnd / counters
+# ---------------------------------------------------------------------------
+
+
+def _front(layout, n_shards=None, **queue_kwargs):
+    mesh = _mesh(*layout)
+    d, t, w, n_docs, n_terms = _coo(seed=5, n_docs=30, n_terms=16, nnz=200)
+    shards, dps = shard_corpus(
+        d, t, w, n_docs, n_terms, n_shards or layout[0] * layout[1]
+    )
+    cfg = ServingConfig(k=5, rho_ladder=(10**9,), lq_buckets=(4, 8), batch_size=4)
+    queue_kwargs.setdefault("batch_shapes", (2, 4))
+    queue_kwargs.setdefault("max_wait_s", 0.05)
+    front = PodFrontEnd(
+        mesh, stack_indexes(shards), cfg, docs_per_shard=dps,
+        n_docs_total=n_docs, clock=SimulatedClock(),
+        queue_kwargs=queue_kwargs,
+    )
+    return front, (d, t, w, n_docs, n_terms)
+
+
+@pytest.mark.parametrize("layout", [(1, 1), (2, 2)])
+def test_pod_front_end_end_to_end(layout):
+    """Per-host admission queues over one mesh: every completion is
+    bit-identical to the unsharded oracle, whichever host admitted it."""
+    front, (d, t, w, n_docs, n_terms) = _front(layout)
+    rng = np.random.default_rng(11)
+    Q = 6
+    queries, owners = [], {h: [] for h in range(front.n_hosts)}
+    for i in range(Q):
+        lq = int(rng.integers(2, 5))
+        qt = rng.choice(n_terms, lq, replace=False).astype(np.int32)
+        qw = rng.uniform(0.2, 2.0, lq).astype(np.float32)
+        queries.append((qt, qw))
+        host = i % front.n_hosts
+        owners[host].append(i)
+        front.submit(host, qt, qw, deadline_ms=50.0)
+
+    comps = front.drain()
+    assert len(comps) == Q and front.pending() == 0
+    for host, c in comps:
+        qt, qw = queries[owners[host][c.rid]]
+        _, oi = _oracle(d, t, w, n_docs, n_terms, qt[None], qw[None], 5)
+        np.testing.assert_array_equal(c.doc_ids, oi[0])
+
+
+def test_pod_front_end_counters():
+    """The merged scrape exposes queue families per host plus the pod
+    dispatch/fan-in families, in Prometheus text exposition format."""
+    front, _ = _front((1, 1))
+    rng = np.random.default_rng(13)
+    for i in range(4):
+        qt = rng.choice(16, 3, replace=False).astype(np.int32)
+        front.submit(0, qt, rng.uniform(0.2, 2.0, 3).astype(np.float32), 50.0)
+    front.drain()
+    reg = front.export_counters()
+    text = reg.render()
+    d = reg.as_dict()
+    for fam in (
+        "repro_queue_submitted_total",
+        "repro_queue_completed_total",
+        "repro_queue_flush_total",
+        "repro_queue_violations_total",
+        "repro_queue_served_rho_total",
+        "repro_queue_flush_occupancy",
+        "repro_queue_depth",
+        "repro_pod_dispatch_total",
+        "repro_pod_merge_fanin",
+    ):
+        assert fam in d, sorted(d)
+    # queue families carry the host label
+    sub = d["repro_queue_submitted_total"]["samples"]
+    assert any(s["labels"].get("host") == "0" and s["value"] == 4 for s in sub)
+    assert "# TYPE repro_pod_dispatch_total counter" in text
+    assert 'repro_queue_submitted_total{host="0"} 4' in text
+    assert text.endswith("\n")
+    # fan-in gauge reports ranks * k
+    fanin = [s["value"] for s in d["repro_pod_merge_fanin"]["samples"]]
+    assert fanin and all(v == pod_hosts(front.mesh) * 1 * 5 for v in fanin)
+
+
+def test_pod_server_rho_ladder_is_per_shard():
+    """On a stacked index, n_postings is the SHARD count — the ladder must
+    cap at the per-shard posting budget instead, topped by the exact level."""
+    mesh = _mesh(1, 1)
+    d, t, w, n_docs, n_terms = _coo(seed=4)
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, 1)
+    stacked = stack_indexes(shards)
+    cfg = ServingConfig(k=5, rho_ladder=(10, 10**9), lq_buckets=(4,))
+    srv = PodServer(mesh, stacked, cfg, docs_per_shard=dps, n_docs_total=n_docs)
+    exact = int(stacked.doc_ids.shape[1])
+    assert srv.rho_ladder == (10, exact)
+    assert srv.rho_ladder[-1] > stacked.n_postings  # would be shard count
+
+
+def test_pod_server_executable_key_embeds_pod_identity():
+    mesh = _mesh(1, 1)
+    d, t, w, n_docs, n_terms = _coo(seed=6)
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, 1)
+    cfg = ServingConfig(k=5, rho_ladder=(10**9,), lq_buckets=(4,))
+    srv = PodServer(
+        mesh, stack_indexes(shards), cfg, docs_per_shard=dps, n_docs_total=n_docs
+    )
+    key = srv.executable_key(4, 2, srv.rho_ladder[-1])
+    assert key[0] == "pod" and key[1] == 1 and key[3] == dps
+    other = PodServer(
+        mesh, stack_indexes(shards), cfg, docs_per_shard=dps + 1,
+        n_docs_total=n_docs,
+    )
+    assert other.executable_key(4, 2, other.rho_ladder[-1]) != key

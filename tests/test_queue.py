@@ -891,3 +891,99 @@ def test_prop_queue_lossless_and_on_time(bm25_index, bm25_queries, seed, n, qps)
     assert q.n_violations == 0
     for f in q.flush_log:
         assert f.flush_s <= f.oldest_deadline_s + 1e-9
+
+
+# --------------------------------------------------------------------------
+# regression: flush-time clock semantics
+# --------------------------------------------------------------------------
+
+
+def test_queue_poll_rereads_clock_between_buckets(bm25_index):
+    """Regression: ``poll()`` captured ``now`` once, so a bucket whose
+    deadline expired DURING an earlier bucket's flush (real service time on a
+    hybrid clock) waited for the next driver wakeup instead of flushing in
+    the same poll. The clock must be re-read per bucket iteration."""
+    clock = HybridClock(0.0)
+    srv = _queue_server(bm25_index, 16, clock=clock, buckets=(4, 16))
+    q = AdmissionQueue(srv, batch_shapes=(2,), clock=clock)
+
+    orig = srv.search_batch
+
+    def search_and_accrue(qt, qw, rho=None):
+        res = orig(qt, qw, rho=rho)
+        clock.advance(10.0)  # this flush's service time, in simulated seconds
+        return res
+
+    srv.search_batch = search_and_accrue
+
+    # bucket 4: due almost immediately; bucket 16: due only after the first
+    # flush's 10 s of service time has accrued
+    q.submit(np.array([1, 2], np.int32), np.ones(2, np.float32), deadline_ms=5.0)
+    q.submit(np.arange(1, 8, dtype=np.int32), np.ones(7, np.float32), deadline_ms=5000.0)
+    clock.advance(0.006)
+    assert clock.now() < q._due_instant(16)  # not yet due at poll entry
+
+    comps = q.poll()  # ONE poll must serve both
+    assert sorted(c.rid for c in comps) == [0, 1]
+    assert [f.bucket for f in q.flush_log] == [4, 16]
+    assert all(f.reason == "deadline" for f in q.flush_log)
+
+
+def test_queue_overfull_lane_predicts_chunked_launches(bm25_index):
+    """Regression: a lane holding more than the largest batch shape drains as
+    ceil(n/shape) launches, but ``_due_instant`` predicted ONE launch — the
+    lane flushed too late and every chunk after the first mis-accounted as a
+    violation. Seed the lane directly (``submit`` auto-flushes full lanes,
+    so an overfull lane only arises between poll wakeups)."""
+    from repro.serving.queue import _Request
+
+    clock = SimulatedClock()
+    srv = _queue_server(bm25_index, 4, clock=clock, buckets=(4,))
+    q = AdmissionQueue(srv, batch_shapes=(2, 4), clock=clock)
+    rho = srv.pick_rho()
+    pred_ms = 500.0
+    srv._observe_bucket_ms(4, 4, pred_ms, rho=rho)
+    assert srv.predict_service_ms(4, 4) == pytest.approx(pred_ms)
+
+    now = clock.now()
+    deadline = now + 2 * pred_ms / 1e3 + 0.010  # meetable only as 2 launches
+    for _ in range(7):  # ceil(7/4) = 2 launches
+        q._pending[4].append(
+            _Request(
+                rid=q._next_rid,
+                q_terms=np.array([1, 2, 3], np.int32),
+                q_weights=np.ones(3, np.float32),
+                arrival_s=now,
+                deadline_s=deadline,
+                lq_eff=3,
+                bucket=4,
+            )
+        )
+        q._next_rid += 1
+        q.n_submitted += 1
+
+    # the due instant must reserve BOTH launches' predicted service
+    assert q.next_due() == pytest.approx(deadline - 2 * pred_ms / 1e3)
+    clock.advance_to(q.next_due())
+    comps = q.poll()
+    assert len(comps) == 7 and q.pending() == 0
+    recs = q.flush_log[-2:]
+    assert [r.n_real for r in recs] == [4, 3]
+    assert all(r.reason == "deadline" for r in recs)
+    assert not any(r.violation or r.infeasible for r in recs)
+
+
+def test_replay_effectiveness_empty_schedule(bm25_index, bm25_queries):
+    """Regression: a replay that completes nothing (empty schedule) must
+    return a well-formed all-zero report, not crash in np.stack([])."""
+    from repro.metrics.ir_metrics import replay_effectiveness
+
+    qt, _ = bm25_queries
+    clock = SimulatedClock()
+    srv = _queue_server(bm25_index, qt.shape[1], clock=clock)
+    q = AdmissionQueue(srv, batch_shapes=(2,), clock=clock)
+    rep = replay_effectiveness(q, [], [], [], [], np.zeros(0, np.int64), recall_k=10)
+    assert rep["n_requests"] == 0 and rep["by_rho"] == []
+    assert rep["violations"] == 0 and rep["infeasible"] == 0
+    assert rep["overall"]["mrr"] == 0.0 and rep["overall"]["recall"] == 0.0
+    assert rep["wait_ms"]["p99_ms"] == 0.0
