@@ -56,6 +56,7 @@ def main(argv=None) -> None:
         side_bucketed_vs_padded,
         side_daat_vs_saat_batched,
         side_degrade_vs_violate,
+        side_delta_vs_rebuild,
         side_fused_chunk_vs_split,
         side_fused_vs_unfused,
         side_pod_merge,
@@ -76,6 +77,7 @@ def main(argv=None) -> None:
         ("side_fused_chunk_vs_split", side_fused_chunk_vs_split),
         ("side_bucketed_vs_padded", side_bucketed_vs_padded),
         ("side_degrade_vs_violate", side_degrade_vs_violate),
+        ("side_delta_vs_rebuild", side_delta_vs_rebuild),
         ("side_pod_merge", side_pod_merge),
         ("roofline", roofline),
     ]

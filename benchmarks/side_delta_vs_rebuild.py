@@ -1,0 +1,233 @@
+"""Side experiment: delta/tombstone mutation vs from-scratch rebuild.
+
+The index-lifecycle claim: an ``IndexHandle`` absorbs corpus churn at a
+per-mutation cost that is tiny and roughly constant (rebuild a small delta
+segment, flip a tombstone bit), while serving answers id-identical to a
+brute-force rebuild of the post-mutation corpus — whose cost grows with
+the whole corpus, not the churn. This bench applies the SAME mutation
+batches to both paths and times (a) applying one batch + serving one query
+batch through the handle vs (b) rebuilding the full index from the
+mutated corpus + serving the same queries over it.
+
+Doc-id parity is asserted before any rows are emitted: after EVERY
+mutation batch, handle-served ids must be bitwise-identical to the
+brute-force-rebuilt oracle (same pinned quantization grid, handle's live
+mask) — the bench refuses to time two paths that disagree.
+
+REPRO_BENCH_TINY=1 shrinks the corpus/churn to CI-sized shapes; the
+parity assert and the growth contrast are the lane's value there, not the
+absolute wall times.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_impact_index, pad_queries, saat
+from repro.core.index_handle import IndexHandle
+from repro.data.synthetic import CorpusConfig, generate_corpus
+from repro.models.treatments import apply_treatment
+
+TINY = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+
+MODEL = "spladev2"
+K = 10
+N_BATCHES = 3 if TINY else 6
+MUTATIONS_PER_BATCH = 8 if TINY else 64
+PARITY_ASSERTED = True  # handle ids bitwise == rebuilt-oracle ids, pre-rows
+
+
+def _corpus():
+    if TINY:
+        return generate_corpus(CorpusConfig(n_docs=400, n_queries=24, n_concepts=80, seed=5))
+    return generate_corpus(CorpusConfig(n_docs=8000, n_queries=120, n_concepts=500, seed=13))
+
+
+def _mutation_batches(rng, n_docs, n_terms):
+    """Deterministic add/update/delete batches, handle-gid-order faithful."""
+    alive = list(range(n_docs))
+    next_gid = n_docs
+    batches = []
+    for _ in range(N_BATCHES):
+        ops = []
+        for _ in range(MUTATIONS_PER_BATCH):
+            op = rng.choice(["add", "update", "delete"], p=[0.5, 0.25, 0.25])
+            if op != "add" and not alive:
+                op = "add"
+            if op == "add":
+                n = int(rng.integers(3, 9))
+                terms = rng.choice(n_terms, n, replace=False).astype(np.int64)
+                weights = rng.uniform(0.2, 4.0, n)
+                ops.append(("add", next_gid, terms, weights))
+                alive.append(next_gid)
+                next_gid += 1
+            elif op == "update":
+                gid = int(alive[int(rng.integers(len(alive)))])
+                n = int(rng.integers(3, 9))
+                terms = rng.choice(n_terms, n, replace=False).astype(np.int64)
+                weights = rng.uniform(0.2, 4.0, n)
+                ops.append(("update", gid, terms, weights))
+            else:
+                gid = alive.pop(int(rng.integers(len(alive))))
+                ops.append(("delete", gid, None, None))
+        batches.append(ops)
+    return batches
+
+
+class _Mirror:
+    """Raw post-mutation corpus: the oracle's build input."""
+
+    def __init__(self, d, t, w, n_docs):
+        self.docs = {}
+        for gid in range(n_docs):
+            sel = d == gid
+            self.docs[int(gid)] = (t[sel], w[sel])
+        self.n_docs = n_docs
+        self.dead: set[int] = set()
+
+    def apply(self, ops):
+        for op, gid, terms, weights in ops:
+            if op == "delete":
+                self.dead.add(gid)
+            else:
+                self.docs[gid] = (terms, weights)
+                self.n_docs = max(self.n_docs, gid + 1)
+
+    def coo(self):
+        d, t, w = [], [], []
+        for gid, (terms, weights) in self.docs.items():
+            if gid in self.dead:
+                continue
+            d.append(np.full(len(terms), gid, np.int64))
+            t.append(np.asarray(terms, np.int64))
+            w.append(np.asarray(weights, np.float64))
+        return np.concatenate(d), np.concatenate(t), np.concatenate(w)
+
+
+def _apply_to_handle(handle, ops):
+    for op, gid, terms, weights in ops:
+        if op == "add":
+            got = handle.add(terms, weights)
+            assert got == gid, "bench gid schedule diverged from handle"
+        elif op == "update":
+            handle.update(gid, terms, weights)
+        else:
+            handle.delete(gid)
+
+
+def _oracle_ids(mirror, handle, qt, qw):
+    d, t, w = mirror.coo()
+    index = build_impact_index(
+        d, t, w, mirror.n_docs, handle.n_terms,
+        quant_max_weight=handle.quant_max_weight,
+        block_size=handle.main.block_size,
+    )
+    live = jnp.asarray(handle.live_mask_full(int(index.doc_n_terms.shape[0])))
+    res = saat.saat_search(
+        index, qt, qw, k=K, rho=saat.exact_rho(index),
+        max_segs_per_term=saat.max_segments_per_term(index), live_mask=live,
+    )
+    return np.asarray(res.scores), np.asarray(res.doc_ids)
+
+
+def run() -> list[dict]:
+    corpus = _corpus()
+    enc = apply_treatment(corpus, MODEL)
+    handle = IndexHandle.from_corpus(
+        enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs, enc.n_terms
+    )
+    mirror = _Mirror(enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs)
+    max_q = max(len(t) for t in enc.query_terms)
+    qt_np, qw_np = pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)
+    B = 8 if TINY else 16
+    qt, qw = jnp.asarray(qt_np[:B]), jnp.asarray(qw_np[:B])
+
+    rng = np.random.default_rng(17)
+    batches = _mutation_batches(rng, corpus.n_docs, enc.n_terms)
+
+    rows = []
+    for i, ops in enumerate(batches):
+        # ---- delta path: apply to the handle, serve
+        t0 = time.perf_counter()
+        _apply_to_handle(handle, ops)
+        apply_ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        res = handle.saat_search(qt, qw, k=K)
+        jax.block_until_ready(res.scores)
+        serve_ms = (time.perf_counter() - t0) * 1e3
+
+        # ---- rebuild path: fold the mutated corpus from scratch, serve
+        mirror.apply(ops)
+        t0 = time.perf_counter()
+        oracle_scores, oracle_ids = _oracle_ids(mirror, handle, qt, qw)
+        rebuild_ms = (time.perf_counter() - t0) * 1e3
+
+        # ---- parity BEFORE the row lands: finite counts equal, ids bitwise
+        hs, hi = np.asarray(res.scores), np.asarray(res.doc_ids)
+        fin, fino = np.isfinite(hs), np.isfinite(oracle_scores)
+        assert np.array_equal(fin.sum(1), fino.sum(1)), (
+            f"batch {i}: live result count diverged from rebuilt oracle"
+        )
+        for b in range(hs.shape[0]):
+            assert np.array_equal(hi[b][fino[b]], oracle_ids[b][fino[b]]), (
+                f"batch {i} query {b}: handle ids diverged from rebuilt oracle"
+            )
+
+        rows.append(
+            {
+                "batch": i,
+                "mutations": len(ops),
+                "delta_docs": handle.delta_docs,
+                "tombstones": handle.tombstone_count,
+                "delta_apply_ms": round(apply_ms, 2),
+                "delta_serve_ms": round(serve_ms, 2),
+                "rebuild_and_serve_ms": round(rebuild_ms, 2),
+                "ids_bit_identical": True,
+            }
+        )
+
+    # ---- compaction epilogue: fold, re-verify, report the fold cost
+    t0 = time.perf_counter()
+    handle.compact()
+    compact_ms = (time.perf_counter() - t0) * 1e3
+    res = handle.saat_search(qt, qw, k=K)
+    oracle_scores, oracle_ids = _oracle_ids(mirror, handle, qt, qw)
+    hs, hi = np.asarray(res.scores), np.asarray(res.doc_ids)
+    fino = np.isfinite(oracle_scores)
+    assert np.array_equal(np.isfinite(hs).sum(1), fino.sum(1))
+    for b in range(hs.shape[0]):
+        assert np.array_equal(hi[b][fino[b]], oracle_ids[b][fino[b]]), (
+            f"post-compaction query {b}: ids diverged from rebuilt oracle"
+        )
+    rows.append(
+        {
+            "batch": "compact",
+            "mutations": 0,
+            "delta_docs": handle.delta_docs,
+            "tombstones": handle.tombstone_count,
+            "delta_apply_ms": round(compact_ms, 2),
+            "delta_serve_ms": "",
+            "rebuild_and_serve_ms": "",
+            "ids_bit_identical": True,
+        }
+    )
+    return rows
+
+
+def main() -> None:
+    from benchmarks.common import print_csv
+
+    rows = run()
+    print_csv(
+        "side: delta/tombstone mutation vs from-scratch rebuild "
+        "(id parity asserted per batch)",
+        rows,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -156,6 +156,50 @@ def run_serving_checks(batch_sizes: Sequence[int] = (2, 4)) -> list:
         print(f"  {label}: {len(vs)} violations")
         out.extend(vs)
 
+    # generation-extended matrix: one handle-backed server per engine, linted
+    # in its churned generation-0 state (main + delta + tombstones) and again
+    # after compact()+swap_index(), all into ONE shared key registry. The
+    # executable-key bijection must hold ACROSS generations: the pre-swap
+    # delta-merging program and the post-swap delta-free program are
+    # genuinely different executables, so their keys must differ — while a
+    # key that changed with the generation counter alone (same program both
+    # sides) would be flagged as two names for one executable.
+    from repro.core.index_handle import IndexHandle
+    from repro.serving.scheduler import ServingConfig
+
+    hrng = np.random.default_rng(3)
+    h_docs, h_terms, h_post = 220, 40, 1500
+    handle = IndexHandle.from_corpus(
+        hrng.integers(0, h_docs, h_post), hrng.integers(0, h_terms, h_post),
+        hrng.uniform(0.1, 5.0, h_post).astype(np.float32),
+        h_docs, h_terms, block_size=32,
+    )
+    for gid in (3, 11, 19):
+        handle.delete(gid)
+    handle.add(np.array([1, 4, 7]), np.array([1.0, 2.0, 0.5]))
+    handle.update(5, np.array([2, 6]), np.array([1.5, 2.5]))
+    gen_reg: dict = {}
+    gen_cfgs = (
+        ServingConfig(engine="saat", k=5, rho_ladder=(200, 1000),
+                      lq_buckets=(4, 8), scatter_impl="jnp"),
+        ServingConfig(engine="daat", k=5, daat_est_blocks=4,
+                      daat_block_budget=4, lq_buckets=(4, 8)),
+    )
+    gen_servers = [AnytimeServer(handle, cfg) for cfg in gen_cfgs]
+    for phase in ("gen0", "gen1"):
+        for cfg, server in zip(gen_cfgs, gen_servers):
+            label = f"server:handle:{cfg.engine}:{phase}"
+            vs = lint_server(
+                server, batch_sizes=batch_sizes, label=label,
+                key_registry=gen_reg,
+            )
+            print(f"  {label}: {len(vs)} violations")
+            out.extend(vs)
+        if phase == "gen0":
+            handle.compact()
+            for server in gen_servers:
+                server.swap_index()
+
     # the pod-scale step: 1-device mesh is enough to trace the shard_map body
     rng = np.random.default_rng(1)
     n_docs, n_terms, n_post = 256, 32, 1200

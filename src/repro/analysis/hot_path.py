@@ -199,6 +199,7 @@ def lint_server(
     batch_sizes: Sequence[int] = (2, 4),
     rhos: Optional[Sequence[Optional[int]]] = None,
     label: Optional[str] = None,
+    key_registry: Optional[dict] = None,
 ) -> list:
     """Lint every executable an :class:`AnytimeServer` can dispatch.
 
@@ -209,6 +210,14 @@ def lint_server(
     fingerprint identically, distinct keys must fingerprint distinctly (a key
     that splits finer than the program means the cost model is learning two
     names for one executable).
+
+    Pass one ``key_registry`` dict across several calls to extend the
+    bijection over server *states* that never coexist in one dispatch grid —
+    e.g. the same handle-backed server before and after a hot-swap
+    compaction: each generation's (key, fingerprint) pairs land in the shared
+    registry, so a key that fails to distinguish two generations' genuinely
+    different programs (or splits one shared program in two) is a violation
+    even though no single lint call sees both.
     """
     cfg = server.cfg
     if label is None:
@@ -220,8 +229,9 @@ def lint_server(
         rhos = [None] if cfg.engine == "daat" else list(server.rho_ladder)
     buckets = list(server.lq_buckets) if server.lq_buckets is not None else [8]
     out: list = []
-    by_key: dict = {}
-    by_fp: dict = {}
+    reg = key_registry if key_registry is not None else {}
+    by_key: dict = reg.setdefault("by_key", {})
+    by_fp: dict = reg.setdefault("by_fp", {})
     for bucket in buckets:
         for B in batch_sizes:
             for rho in dict.fromkeys(rhos):
@@ -270,6 +280,7 @@ def lint_sharded_serve(
     buckets: Optional[Sequence[int]] = None,
     label: str = "sharded",
     key_registry: Optional[dict] = None,
+    live_stack=None,
 ) -> list:
     """Lint a (possibly bucketed) sharded/pod serve step at every bucket width.
 
@@ -285,7 +296,8 @@ def lint_sharded_serve(
     ``lint_sharded_serve`` calls and the bijection spans the whole serve
     surface — two steps whose statics differ (say, a pod mesh vs a
     single-host mesh at equal engine config) must never alias one program,
-    and equal statics must never trace two.
+    and equal statics must never trace two. For a ``live_masked=True`` step
+    pass the ``live_stack`` it will serve with; it rides as a traced operand.
     """
     inner = getattr(serve, "inner", serve)
     if buckets is None:
@@ -307,12 +319,11 @@ def lint_sharded_serve(
     for bucket in buckets:
         for B in batch_sizes:
             case = f"lq{bucket}_b{B}"
-            vs, fp = lint_trace(
-                lambda qt, qw: inner(index_stack, qt, qw),
-                _query_structs(B, bucket),
-                label,
-                case,
-            )
+            if live_stack is not None:
+                fn = lambda qt, qw: inner(index_stack, qt, qw, live_stack=live_stack)  # noqa: E731
+            else:
+                fn = lambda qt, qw: inner(index_stack, qt, qw)  # noqa: E731
+            vs, fp = lint_trace(fn, _query_structs(B, bucket), label, case)
             out.extend(vs)
             if fp is None or statics_key is None:
                 continue

@@ -4,6 +4,7 @@ with anytime SAAT and block-max DAAT query evaluation, TPU-native.
 Public API:
     QuantConfig, quantize, dequantize     impact quantization
     ImpactIndex, build_impact_index       JASS-style impact-ordered index
+    IndexHandle                           mutable lifecycle (delta/tombstones/compaction)
     saat_search, exact_rho                anytime SAAT (rho posting budget)
     daat_search_batched                   natively batched Block-Max DAAT
     blockmax_search / daat_search_vmap    vmapped Block-Max DAAT (parity oracle)
@@ -28,8 +29,14 @@ from repro.core.exhaustive import ExhaustiveResult, exhaustive_search, score_all
 from repro.core.impact_index import (  # noqa: F401
     ImpactIndex,
     build_impact_index,
+    extract_doc_coo,
     pad_queries,
     query_vector,
+)
+from repro.core.index_handle import (  # noqa: F401
+    HandleResult,
+    IndexHandle,
+    search_delta_pool,
 )
 from repro.core.pareto import OperatingPoint, frontier_table, pareto_frontier  # noqa: F401
 from repro.core.quantization import (  # noqa: F401
@@ -47,4 +54,10 @@ from repro.core.saat import (  # noqa: F401
     saat_search,
     saat_search_vmap,
 )
-from repro.core.topk import merge_topk, sharded_topk_merge, tiled_topk, topk  # noqa: F401
+from repro.core.topk import (  # noqa: F401
+    merge_pools_by_id,
+    merge_topk,
+    sharded_topk_merge,
+    tiled_topk,
+    topk,
+)

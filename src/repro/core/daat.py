@@ -174,11 +174,13 @@ def max_blocks_per_term(index: ImpactIndex) -> int:
     ``build_impact_index`` records this as ``index.max_bm`` so DAAT serving
     setup never blocks on a device sync (mirroring ``max_segs`` for SAAT);
     the reduction below only runs for indexes assembled by hand without the
-    metadata.
+    metadata. Clamped to >= 1 so a zero-posting corpus (every doc
+    tombstoned, then compacted) still yields an indexable bound — the padded
+    slot has block count 0 and never survives pruning.
     """
     if index.max_bm > 0:
         return int(index.max_bm)
-    return int(jax.device_get(index.term_bm_count.max()))
+    return max(1, int(jax.device_get(index.term_bm_count.max())))
 
 
 def query_vectors(index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array) -> jax.Array:
@@ -272,16 +274,23 @@ def daat_plan(
 
 
 def score_blocks(
-    index: ImpactIndex, qvec: jax.Array, block_ids: jax.Array
+    index: ImpactIndex,
+    qvec: jax.Array,
+    block_ids: jax.Array,
+    live_mask: jax.Array | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Exact scores for whole blocks of documents via the doc-major store.
 
     ``qvec[V+1], block_ids[nb]`` returns
     ``(scores[nb, block_size], doc_ids[nb, block_size])``; the batched case
     ``qvec[B, V+1], block_ids[B, nb]`` returns ``[B, nb, block_size]`` pairs.
-    Padded documents are masked to -inf. The inner op is a gather of query
-    weights by term id + a weighted row reduction — the ``block_score`` Pallas
-    kernel implements the same contraction with VMEM-tiled blocks.
+    Padded documents are masked to -inf, as are documents whose slot in the
+    optional ``live_mask`` (i32/bool ``[n_docs_pad]`` lifecycle tombstone
+    bitmap; nonzero = live) is 0 — masking happens at selection, never inside
+    the score sum, so surviving docs' f32 scores are bit-identical with or
+    without the mask. The inner op is a gather of query weights by term id +
+    a weighted row reduction — the ``block_score`` Pallas kernel implements
+    the same contraction with VMEM-tiled blocks.
     """
     bs = index.block_size
     docs = block_ids[..., :, None] * bs + jnp.arange(bs, dtype=jnp.int32)
@@ -294,6 +303,8 @@ def score_blocks(
         qv = qvec[rows, terms]
     scores = jnp.sum(qv * w, axis=-1)
     scores = jnp.where(docs < index.n_docs, scores, -jnp.inf)
+    if live_mask is not None:
+        scores = jnp.where(live_mask[docs] != 0, scores, -jnp.inf)
     return scores, docs
 
 
@@ -323,14 +334,19 @@ def _dense_blockmax_rows(
 
 
 def _score_blocks_kernel_batched(
-    index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array, block_ids: jax.Array
+    index: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    block_ids: jax.Array,
+    live_mask: jax.Array | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Kernel-backed :func:`score_blocks`: one ``sparse_score_batched`` launch.
 
     Gathers the selected blocks' doc-major rows (exactly as the jnp scorer
     does) and hands the ``[B, nb * block_size, Tmax]`` tile to the
-    match-and-accumulate kernel; padded documents mask to ``-inf`` outside
-    the kernel, matching the jnp path.
+    match-and-accumulate kernel; padded and tombstoned documents mask to
+    ``-inf`` outside the kernel, matching the jnp path (selection-time
+    masking, never inside the score sum).
     """
     from repro.kernels.sparse_score import ops as score_ops
 
@@ -344,7 +360,27 @@ def _score_blocks_kernel_batched(
     qw = jnp.where(q_weights > 0, q_weights.astype(jnp.float32), 0.0)
     scores = score_ops.sparse_score_batched(dt, dw, q_terms, qw)
     scores = jnp.where(flat < index.n_docs, scores, -jnp.inf)
+    if live_mask is not None:
+        scores = jnp.where(live_mask[flat] != 0, scores, -jnp.inf)
     return scores.reshape(docs.shape), docs
+
+
+def _mask_dead_blocks(
+    index: ImpactIndex, ub: jax.Array, live_mask: jax.Array
+) -> jax.Array:
+    """``ub -> -inf`` for blocks whose every document is tombstoned.
+
+    Applied identically in every mode right after phase 0 (the
+    ``block_prune_csr`` kernel itself is untouched — a stale-high bound over
+    a partially-dead block is still a valid upper bound, and uniform
+    post-phase-0 masking keeps ``WorkStats`` mode-identical): a fully-dead
+    block can never contribute a candidate, so dropping it from selection
+    keeps survivor counts meaningful and lets ``rank_safe`` converge without
+    scoring blocks that only contain ``-inf``.
+    """
+    bs = index.block_size
+    blk_live = live_mask.reshape(index.n_blocks, bs).max(axis=-1)
+    return jnp.where(blk_live != 0, ub, -jnp.inf)
 
 
 def _resolve_daat_shapes(
@@ -378,12 +414,15 @@ def daat_search_vmap(
     max_bm_per_term: int,
     exact: bool = True,
     max_chunks: int | None = None,
+    live_mask: jax.Array | None = None,
 ) -> DaatResult:
     """Legacy ``jax.vmap(one-query)`` block-max DAAT — the parity oracle.
 
     ``q_terms/q_weights: [B, Lq]``. Semantically identical to
     :func:`daat_search_batched`; kept so the batched engine can be validated
-    bit-for-bit on doc ids and raced in the side benchmarks.
+    bit-for-bit on doc ids and raced in the side benchmarks. ``live_mask``
+    (optional ``[n_docs_pad]`` tombstone bitmap, shared by the batch) masks
+    deleted docs to ``-inf`` and drops fully-dead blocks from selection.
     """
     n_blocks = index.n_blocks
     est_blocks, block_budget, max_chunks = _resolve_daat_shapes(
@@ -393,10 +432,12 @@ def daat_search_vmap(
     def one(qt, qw):
         qvec = query_vector(index, qt, qw)
         ub = block_upper_bounds(index, qt, qw, max_bm_per_term)
+        if live_mask is not None:
+            ub = _mask_dead_blocks(index, ub, live_mask)
 
         # ---- phase 1: seed the top-k pool from the most promising blocks ----
         _, b1 = topk(ub, est_blocks)
-        s1, d1 = score_blocks(index, qvec, b1)
+        s1, d1 = score_blocks(index, qvec, b1, live_mask)
         pool_s, pool_i = topk(s1.reshape(-1), k)
         pool_i = d1.reshape(-1)[pool_i].astype(jnp.int32)
         theta = pool_s[k - 1]
@@ -417,7 +458,7 @@ def daat_search_vmap(
             rub = remaining_ub(processed, theta)
             ub_c, b_c = topk(rub, block_budget)
             live = ub_c > theta  # only these can change the top-k
-            s_c, d_c = score_blocks(index, qvec, b_c)
+            s_c, d_c = score_blocks(index, qvec, b_c, live_mask)
             s_c = jnp.where(live[:, None], s_c, -jnp.inf)
             pool_s, pool_i = merge_topk(
                 pool_s, pool_i, s_c.reshape(-1), d_c.reshape(-1).astype(jnp.int32), k
@@ -469,6 +510,7 @@ def daat_search_batched(
     use_kernels: bool = False,
     fused_chunk: bool = False,
     trips_per_launch: int = 1,
+    live_mask: jax.Array | None = None,
 ) -> DaatResult:
     """Natively batched block-max DAAT top-k. ``q_terms/q_weights: [B, Lq]``.
 
@@ -487,6 +529,14 @@ def daat_search_batched(
     (fused mode only) runs up to N trips per launch inside that kernel (see
     module docstring); the jnp formulation stays the parity oracle for every
     combination.
+
+    ``live_mask`` (optional i32/bool ``[n_docs_pad]`` lifecycle tombstone
+    bitmap; nonzero = live, shared by the batch) threads through every mode:
+    fully-dead blocks drop out of selection right after phase 0
+    (:func:`_mask_dead_blocks`), and dead docs mask to ``-inf`` at
+    selection time — via the jnp/kernel scorers' gather or the fused
+    ``chunk_step`` kernel's DMA'd live rows — so ids, theta, and
+    ``WorkStats`` stay bit-identical across all kernel modes for any mask.
     """
     if q_terms.ndim != 2:
         raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
@@ -529,7 +579,9 @@ def daat_search_batched(
             return topk_ops.block_topk_batched(scores_vec, n)
 
         def _score(block_ids):
-            return _score_blocks_kernel_batched(index, q_terms, q_weights, block_ids)
+            return _score_blocks_kernel_batched(
+                index, q_terms, q_weights, block_ids, live_mask
+            )
 
     else:
         plan = daat_plan(index, q_terms, q_weights, max_bm_per_term)
@@ -539,7 +591,10 @@ def daat_search_batched(
             return topk(scores_vec, n)
 
         def _score(block_ids):
-            return score_blocks(index, qvec, block_ids)
+            return score_blocks(index, qvec, block_ids, live_mask)
+
+    if live_mask is not None:
+        ub = _mask_dead_blocks(index, ub, live_mask)
 
     # ---- phase 1: seed every query's top-k pool in one batched pass ----
     _, b1 = _select(ub, est_blocks)  # [B, est_blocks]
@@ -582,6 +637,7 @@ def daat_search_batched(
                 block_budget=block_budget,
                 block_size=index.block_size,
                 n_live=index.n_docs,
+                live=live_mask,
             )
 
         if trip_cap > 1:
@@ -609,6 +665,7 @@ def daat_search_batched(
                         block_budget=block_budget,
                         block_size=index.block_size,
                         n_live=index.n_docs,
+                        live=live_mask,
                     )
                 )
                 # the kernel freezes trips_left == 0 rows itself; the masks

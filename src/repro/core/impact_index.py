@@ -338,6 +338,31 @@ def build_impact_index(
     )
 
 
+def extract_doc_coo(
+    index: ImpactIndex, live: np.ndarray | None = None
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Recover host-side COO postings from the doc-major store.
+
+    The index-lifecycle compactor's read path: returns
+    ``(doc_idx, term_idx, weights)`` over the real (non-pad) documents, with
+    weights on the index's dequantized impact grid. ``live`` (optional bool/i32
+    ``[>= n_docs]`` bitmap; nonzero = live) drops tombstoned documents
+    entirely.
+
+    Round-trip caveat: the doc-major store truncates documents longer than
+    ``max_doc_terms`` at build time, so extraction only recovers what the
+    store kept. Lifecycle rebuilds that must be lossless should build with
+    the default ``max_doc_terms=None`` (no truncation).
+    """
+    dt = np.asarray(jax.device_get(index.doc_terms))[: index.n_docs]
+    dw = np.asarray(jax.device_get(index.doc_weights))[: index.n_docs]
+    keep = (dt != index.n_terms) & (dw > 0)
+    if live is not None:
+        keep &= np.asarray(live)[: index.n_docs].astype(bool)[:, None]
+    d, slot = np.nonzero(keep)
+    return d.astype(np.int64), dt[d, slot].astype(np.int64), dw[d, slot].astype(np.float64)
+
+
 def query_vector(index: ImpactIndex, q_terms: jax.Array, q_weights: jax.Array) -> jax.Array:
     """Dense query vector over V+1 slots (pad slot stays 0)."""
     qvec = jnp.zeros(index.n_terms + 1, dtype=jnp.float32)

@@ -1,0 +1,478 @@
+"""Generation-based mutable index lifecycle over immutable ``ImpactIndex``es.
+
+Every engine in this repo consumes an immutable :class:`ImpactIndex` — the
+right contract for jitted kernels, but a non-starter for a living corpus.
+``IndexHandle`` closes the gap with the classic LSM-ish triple:
+
+  * a **main** segment: the big immutable ``ImpactIndex`` (global doc id
+    ``gid`` == main-local doc id);
+  * a **delta** segment: a small ``ImpactIndex`` rebuilt host-side on every
+    mutation from the raw added/updated documents, with local ids assigned in
+    ascending-gid order and the SAME quantization grid / block constants as
+    main (so every kernel CONTRACT and the cross-segment score units hold);
+  * a **tombstone bitmap**: deleted (or updated-in-place) main docs flip a
+    bit; the engines' ``live_mask`` paths score them ``-inf`` with zero
+    rebuild work.
+
+Search = engine over main (tombstones masked) + exact search over delta
+(delta-local ids mapped back to gids) + :func:`repro.core.topk.merge_pools_by_id`,
+whose stable id-ascending reorder reproduces the dense-accumulator tie order
+— so a mutated handle answers bit-identically (ids and scores at finite
+positions) to a from-scratch rebuild of the post-mutation corpus over the
+same gid space with the same tombstone mask.
+
+Compaction (:meth:`IndexHandle.compact`) folds main + delta − tombstones into
+a fresh main segment off the serving path and bumps ``generation``; the
+serving layers hot-swap on that counter between admission-queue flushes.
+Tombstoned gids stay dead after compaction (the gid space never re-uses ids),
+which is exactly what keeps the same-docspace parity oracle valid across
+generations.
+
+Quantization idempotence across compactions: the doc-major store holds
+*dequantized* impacts ``q * scale``. The compactor recovers the integer
+impacts (``q = round(w / scale)`` — exact, the f32 rounding error is ~1e-7
+of a level) and feeds the builder mid-step weights ``(q - 0.5) * scale``
+with the pinned grid, which re-quantize to exactly ``q`` (``ceil`` lands on
+``q`` with half a level of slack on either side, instead of razor-edge on
+the boundary like the raw dequantized values). Result: compaction is
+bit-stable — impacts, segment weights, and block maxima never drift, no
+matter how many generations pass.
+
+Scope: uniform quantization scheme only (the repo default); the ``log``
+scheme's dequantize is not an affine map so the mid-step trick above does
+not apply.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daat, saat
+from repro.core.impact_index import ImpactIndex, build_impact_index, extract_doc_coo
+from repro.core.quantization import QuantConfig
+from repro.core.topk import merge_pools_by_id, topk
+
+
+class HandleResult(NamedTuple):
+    """Merged top-k over (main − tombstones) ∪ delta.
+
+    ``main`` is the full engine result over the main segment (its
+    ``WorkStats`` describe the anytime/budgeted part of the search); ``delta``
+    is the delta-segment pool (``None`` when the delta is empty — the merge
+    is skipped entirely and ``scores/doc_ids`` alias the main pool).
+    """
+
+    scores: jax.Array  # f32[B, <=k]
+    doc_ids: jax.Array  # i32[B, <=k] global doc ids
+    main: Any  # SaatResult | DaatResult over the main segment
+    delta: Tuple[jax.Array, jax.Array] | None  # delta (scores, gids) pool
+
+    @property
+    def stats(self):
+        """Main-segment ``WorkStats`` passthrough (DAAT only, else ``None``).
+
+        The serving queue's survivor predictor reads ``res.stats`` — the
+        budgeted main-segment search is the part whose work the predictor
+        models; the delta's exhaustive pass is shape-fixed noise.
+        """
+        return getattr(self.main, "stats", None)
+
+
+def search_delta_pool(
+    delta: ImpactIndex,
+    q_terms: jax.Array,
+    q_weights: jax.Array,
+    *,
+    k: int,
+    engine: str = "saat",
+    scatter_impl: str = "jnp",
+    fused_topk: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact top-k pool over a delta segment: ``(scores, local_ids)``.
+
+    The delta is tiny, so both engines search it exhaustively: SAAT at its
+    own ``exact_rho``; DAAT as a phase-1-only pass over every delta block
+    (no pruning — selection order is ascending flat position, i.e. ascending
+    local id, which is exactly the canonical merge's tie order). Shared by
+    :class:`IndexHandle` and the pod front end's host-local delta merge.
+    """
+    if engine == "saat":
+        res = saat.saat_search(
+            delta, q_terms, q_weights, k=k, rho=saat.exact_rho(delta),
+            max_segs_per_term=saat.max_segments_per_term(delta),
+            scatter_impl=scatter_impl, fused_topk=fused_topk,
+        )
+        return res.scores, res.doc_ids
+    B = q_terms.shape[0]
+    qvec = daat.query_vectors(delta, q_terms, q_weights)
+    block_ids = jnp.broadcast_to(
+        jnp.arange(delta.n_blocks, dtype=jnp.int32)[None, :], (B, delta.n_blocks)
+    )
+    s, d = daat.score_blocks(delta, qvec, block_ids)
+    ds, dpos = topk(s.reshape(B, -1), k)
+    dlocal = jnp.take_along_axis(d.reshape(B, -1), dpos, axis=-1)
+    return ds, dlocal
+
+
+class IndexHandle:
+    """Mutable corpus facade: main segment + delta segment + tombstones.
+
+    Host-side mutable object (NOT a pytree): mutations rebuild the small
+    delta index synchronously; searches launch the same jitted engines the
+    immutable path uses. Global doc ids are stable forever — ``add`` assigns
+    ``next_gid`` and ids are never re-used, so external id maps survive any
+    number of mutations and compactions.
+    """
+
+    def __init__(
+        self,
+        main: ImpactIndex,
+        *,
+        quant_max_weight: float | None = None,
+    ):
+        if main.n_blocks * main.block_size != main.doc_terms.shape[0]:
+            raise ValueError("main index doc-major store is not block-aligned")
+        self.main = main
+        self.generation = 0
+        # pinned quantization grid: every delta build and every compaction
+        # quantizes onto main's grid so impacts stay comparable across
+        # segments and bit-stable across generations
+        self.quant_max_weight = (
+            float(quant_max_weight)
+            if quant_max_weight is not None
+            else float(main.scale) * QuantConfig(bits=main.bits).levels
+        )
+        self._next_gid = main.n_docs
+        self._dead: set[int] = set()
+        # raw (terms, weights) per delta gid — the delta index is derived
+        self._delta: dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._delta_index: ImpactIndex | None = None
+        self._delta_gids: jax.Array | None = None
+        self._live_np = np.zeros(main.doc_terms.shape[0], np.int32)
+        self._live_np[: main.n_docs] = 1
+        self._live_dev = jnp.asarray(self._live_np)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def from_corpus(
+        cls,
+        doc_idx: np.ndarray,
+        term_idx: np.ndarray,
+        weights: np.ndarray,
+        n_docs: int,
+        n_terms: int,
+        *,
+        quant: QuantConfig = QuantConfig(bits=8),
+        block_size: int = 128,
+        quant_max_weight: float | None = None,
+        **build_kwargs,
+    ) -> "IndexHandle":
+        """Build the generation-0 handle from COO postings.
+
+        For an empty corpus (``n_docs`` may still be > 0) pass
+        ``quant_max_weight`` explicitly — otherwise the grid pins to the
+        empty build's default max weight of 1.0 and later heavier documents
+        quantize clipped.
+        """
+        if quant.scheme != "uniform":
+            raise ValueError("IndexHandle requires the uniform quantization scheme")
+        main = build_impact_index(
+            doc_idx, term_idx, weights, n_docs, n_terms,
+            quant=quant, block_size=block_size,
+            quant_max_weight=quant_max_weight, **build_kwargs,
+        )
+        return cls(main, quant_max_weight=quant_max_weight)
+
+    # ------------------------------------------------------------- properties
+    @property
+    def n_docs(self) -> int:
+        """Size of the global doc-id space (monotone; includes dead gids)."""
+        return self._next_gid
+
+    @property
+    def n_terms(self) -> int:
+        return self.main.n_terms
+
+    @property
+    def live_mask(self) -> jax.Array:
+        """i32[main n_docs_pad] tombstone bitmap the engines consume."""
+        return self._live_dev
+
+    @property
+    def delta(self) -> ImpactIndex | None:
+        """The delta segment index (``None`` when no docs are pending)."""
+        return self._delta_index
+
+    @property
+    def delta_docs(self) -> int:
+        return len(self._delta)
+
+    @property
+    def delta_gids(self) -> jax.Array | None:
+        """local->gid map for the delta segment (``None`` with no delta).
+
+        Padded to the delta's doc pad with gid 0 — safe because pad slots
+        score ``-inf`` and the canonical merge lets every finite candidate
+        beat them. Hand this (with :attr:`delta`) to a pod front end's
+        ``set_lifecycle`` so remote hosts run the same gid mapping.
+        """
+        return self._delta_gids
+
+    @property
+    def tombstone_count(self) -> int:
+        return len(self._dead)
+
+    @property
+    def dead_gids(self) -> frozenset[int]:
+        return frozenset(self._dead)
+
+    def live_mask_full(self, pad_to: int | None = None) -> np.ndarray:
+        """i32 live bitmap over the FULL gid space — the parity oracle's mask.
+
+        A from-scratch rebuild of the post-mutation corpus over
+        ``n_docs = handle.n_docs`` must be searched with exactly this mask to
+        reproduce the handle's answers: live gids 1, tombstoned gids 0, pad
+        slots (``>= n_docs``) 0.
+        """
+        n = self._next_gid
+        mask = np.ones(max(pad_to or n, n), np.int32)
+        mask[n:] = 0
+        for gid in self._dead:
+            mask[gid] = 0
+        return mask
+
+    # -------------------------------------------------------------- mutations
+    def add(self, terms: np.ndarray, weights: np.ndarray) -> int:
+        """Add a new document; returns its (stable, never re-used) gid."""
+        gid = self._next_gid
+        self._next_gid += 1
+        self._set_delta_doc(gid, terms, weights)
+        return gid
+
+    def update(self, gid: int, terms: np.ndarray, weights: np.ndarray) -> None:
+        """Replace a document's sparse vector in place (same gid).
+
+        A main-resident doc is tombstoned in main and reborn in the delta —
+        the precondition :func:`repro.core.topk.merge_pools_by_id` relies on
+        (a live doc appears in at most one pool).
+        """
+        if not 0 <= gid < self._next_gid:
+            raise KeyError(f"gid {gid} was never allocated")
+        self._dead.discard(gid)
+        self._set_delta_doc(gid, terms, weights)
+
+    def delete(self, gid: int) -> None:
+        """Tombstone a document (idempotent; the gid is never re-used)."""
+        if not 0 <= gid < self._next_gid:
+            raise KeyError(f"gid {gid} was never allocated")
+        self._dead.add(gid)
+        dropped = self._delta.pop(gid, None)
+        if gid < self.main.n_docs and self._live_np[gid]:
+            self._live_np[gid] = 0
+            self._live_dev = jnp.asarray(self._live_np)
+        if dropped is not None:
+            self._rebuild_delta()
+
+    def _set_delta_doc(self, gid: int, terms: np.ndarray, weights: np.ndarray) -> None:
+        terms = np.asarray(terms, dtype=np.int64).ravel()
+        weights = np.asarray(weights, dtype=np.float64).ravel()
+        if terms.shape != weights.shape:
+            raise ValueError("terms/weights length mismatch")
+        if terms.size and (terms.min() < 0 or terms.max() >= self.n_terms):
+            raise ValueError("term id outside the handle's fixed vocabulary")
+        keep = weights > 0
+        self._delta[gid] = (terms[keep], weights[keep])
+        if gid < self.main.n_docs and self._live_np[gid]:
+            self._live_np[gid] = 0  # the delta copy supersedes the main copy
+            self._live_dev = jnp.asarray(self._live_np)
+        self._rebuild_delta()
+
+    def _rebuild_delta(self) -> None:
+        """Rebuild the delta segment from the raw pending docs.
+
+        Local ids are assigned in ascending-gid order so the delta engines'
+        tie order (ascending local id) maps to ascending gid — the invariant
+        that makes the canonical merge reproduce single-index tie order.
+        """
+        if not self._delta:
+            self._delta_index = None
+            self._delta_gids = None
+            return
+        gids = sorted(self._delta)
+        d, t, w = [], [], []
+        for local, gid in enumerate(gids):
+            terms, weights = self._delta[gid]
+            d.append(np.full(terms.size, local, np.int64))
+            t.append(terms)
+            w.append(weights)
+        self._delta_index = build_impact_index(
+            np.concatenate(d) if d else np.zeros(0, np.int64),
+            np.concatenate(t) if t else np.zeros(0, np.int64),
+            np.concatenate(w) if w else np.zeros(0, np.float64),
+            len(gids),
+            self.n_terms,
+            quant=QuantConfig(bits=self.main.bits),
+            block_size=self.main.block_size,
+            quant_max_weight=self.quant_max_weight,
+        )
+        pad = self._delta_index.doc_terms.shape[0]
+        gid_arr = np.zeros(pad, np.int32)
+        gid_arr[: len(gids)] = np.asarray(gids, np.int32)
+        self._delta_gids = jnp.asarray(gid_arr)
+
+    # ------------------------------------------------------------- compaction
+    def _grid_coo(
+        self, index: ImpactIndex, live: np.ndarray | None
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Extract COO from a segment with re-quantization-stable weights.
+
+        Recovers the integer impacts from the dequantized store and returns
+        mid-step weights ``(q - 0.5) * scale``: far from every ``ceil``
+        boundary, so building with the pinned grid reproduces ``q`` exactly
+        (see module docstring).
+        """
+        d, t, w = extract_doc_coo(index, live)
+        scale = self.quant_max_weight / QuantConfig(bits=index.bits).levels
+        q = np.round(w / scale)
+        return d, t, (q - 0.5) * scale
+
+    def export_coo(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Requantization-stable COO of the live MAIN segment.
+
+        The re-shard read path: feed this to ``shard_corpus(...,
+        quant_max_weight=handle.quant_max_weight)`` after a compaction and
+        the rebuilt shards carry bit-identical impacts to :attr:`main`
+        (mid-step weights, see :meth:`_grid_coo`). Raw
+        :func:`~repro.core.impact_index.extract_doc_coo` output is NOT
+        stable under a ``ceil`` rebuild — upper-step weights sit exactly on
+        the boundary and float error bumps half the postings a level.
+        Delta docs are excluded; compact first (or ship :attr:`delta` +
+        :attr:`delta_gids` alongside, as the pod front end does).
+        """
+        return self._grid_coo(self.main, self._live_np)
+
+    def compact(self) -> None:
+        """Fold main + delta − tombstones into a fresh main; bump generation.
+
+        Runs entirely off the serving path (host-side numpy + one index
+        build); the caller hot-swaps the handle into the serving stack
+        between admission-queue flushes. Tombstoned gids stay dead (ids are
+        never re-used), the delta empties, and the quantization grid is
+        unchanged — so post-compaction answers are bit-identical to
+        pre-compaction answers for every query.
+        """
+        parts = [self._grid_coo(self.main, self._live_np)]
+        if self._delta_index is not None:
+            gids = np.asarray(sorted(self._delta), np.int64)
+            d, t, w = self._grid_coo(self._delta_index, None)
+            parts.append((gids[d], t, w))
+        d = np.concatenate([p[0] for p in parts])
+        t = np.concatenate([p[1] for p in parts])
+        w = np.concatenate([p[2] for p in parts])
+        self.main = build_impact_index(
+            d, t, w, self._next_gid, self.n_terms,
+            quant=QuantConfig(bits=self.main.bits),
+            block_size=self.main.block_size,
+            quant_max_weight=self.quant_max_weight,
+        )
+        self._delta = {}
+        self._delta_index = None
+        self._delta_gids = None
+        self._live_np = np.zeros(self.main.doc_terms.shape[0], np.int32)
+        self._live_np[: self._next_gid] = 1
+        for gid in self._dead:
+            self._live_np[gid] = 0
+        self._live_dev = jnp.asarray(self._live_np)
+        self.generation += 1
+
+    # ---------------------------------------------------------------- search
+    def _merge_delta(
+        self,
+        main_scores: jax.Array,
+        main_ids: jax.Array,
+        delta_scores: jax.Array,
+        delta_local_ids: jax.Array,
+        k: int,
+    ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, jax.Array]]:
+        gids = self._delta_gids[delta_local_ids]
+        scores, ids = merge_pools_by_id(main_scores, main_ids, delta_scores, gids, k)
+        return scores, ids, (delta_scores, gids)
+
+    def saat_search(
+        self,
+        q_terms: jax.Array,
+        q_weights: jax.Array,
+        *,
+        k: int,
+        rho: int | None = None,
+        scatter_impl: str = "jnp",
+        fused_topk: bool = False,
+    ) -> HandleResult:
+        """Anytime SAAT over the live corpus. ``rho`` budgets MAIN only.
+
+        The delta segment is tiny and always searched exactly (its own
+        ``exact_rho``) — degrading a handful of just-written docs would buy
+        nothing and cost freshness. Tombstoned docs score ``-inf`` via the
+        engine's ``live_mask`` path; results merge rank-safely by gid.
+        """
+        main = self.main
+        res_m = saat.saat_search(
+            main, q_terms, q_weights, k=k,
+            rho=int(rho) if rho is not None else saat.exact_rho(main),
+            max_segs_per_term=saat.max_segments_per_term(main),
+            scatter_impl=scatter_impl, fused_topk=fused_topk,
+            live_mask=self._live_dev,
+        )
+        if self._delta_index is None:
+            return HandleResult(res_m.scores, res_m.doc_ids, res_m, None)
+        ds, dlocal = search_delta_pool(
+            self._delta_index, q_terms, q_weights, k=k, engine="saat",
+            scatter_impl=scatter_impl, fused_topk=fused_topk,
+        )
+        scores, ids, pool = self._merge_delta(
+            res_m.scores, res_m.doc_ids, ds, dlocal, k
+        )
+        return HandleResult(scores, ids, res_m, pool)
+
+    def daat_search(
+        self,
+        q_terms: jax.Array,
+        q_weights: jax.Array,
+        *,
+        k: int,
+        est_blocks: int,
+        block_budget: int,
+        exact: bool = True,
+        max_chunks: int | None = None,
+        use_kernels: bool = False,
+        fused_chunk: bool = False,
+        trips_per_launch: int = 1,
+    ) -> HandleResult:
+        """Block-max DAAT over the live corpus; skipping applies to MAIN only.
+
+        The delta segment is scored exhaustively (every delta block — i.e. a
+        phase-1-only pass; its tie order, ascending flat position == ascending
+        gid, is exactly the canonical merge order). Fully-dead main blocks
+        drop out of selection via the engine's ``live_mask`` path.
+        """
+        main = self.main
+        res_m = daat.daat_search_batched(
+            main, q_terms, q_weights, k=k, est_blocks=est_blocks,
+            block_budget=block_budget,
+            max_bm_per_term=daat.max_blocks_per_term(main),
+            exact=exact, max_chunks=max_chunks, use_kernels=use_kernels,
+            fused_chunk=fused_chunk, trips_per_launch=trips_per_launch,
+            live_mask=self._live_dev,
+        )
+        if self._delta_index is None:
+            return HandleResult(res_m.scores, res_m.doc_ids, res_m, None)
+        ds, dlocal = search_delta_pool(
+            self._delta_index, q_terms, q_weights, k=k, engine="daat"
+        )
+        scores, ids, pool = self._merge_delta(
+            res_m.scores, res_m.doc_ids, ds, dlocal, k
+        )
+        return HandleResult(scores, ids, res_m, pool)

@@ -73,11 +73,14 @@ def max_segments_per_term(index: ImpactIndex) -> int:
 
     ``build_impact_index`` records this as ``index.max_segs`` so the serving
     hot path never blocks on a device sync; the reduction below only runs for
-    indexes assembled by hand without the metadata.
+    indexes assembled by hand without the metadata. Clamped to >= 1: a
+    corpus with zero postings (all docs tombstoned then compacted away) has
+    no segments at all, and a 0-width plan axis cannot be indexed — the one
+    padded slot carries segment count 0 and is masked everywhere.
     """
     if index.max_segs > 0:
         return int(index.max_segs)
-    return int(jax.device_get(index.term_seg_count.max()))
+    return max(1, int(jax.device_get(index.term_seg_count.max())))
 
 
 def saat_plan(
@@ -227,21 +230,29 @@ def _accumulate_batched(
     return acc
 
 
-def _mask_pad_docs(index: ImpactIndex, acc: jax.Array) -> jax.Array:
+def _mask_pad_docs(
+    index: ImpactIndex, acc: jax.Array, live_mask: jax.Array | None = None
+) -> jax.Array:
     n_docs_pad = acc.shape[-1]
     live = jnp.arange(n_docs_pad, dtype=jnp.int32) < index.n_docs
+    if live_mask is not None:
+        live = live & (live_mask != 0)
     return jnp.where(live, acc, -jnp.inf)
 
 
 def _fused_scatter_topk_batched(
-    index: ImpactIndex, docs: jax.Array, contribs: jax.Array, k: int
+    index: ImpactIndex,
+    docs: jax.Array,
+    contribs: jax.Array,
+    k: int,
+    live_mask: jax.Array | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Scatter + pad-mask + top-k in ONE kernel: HBM sees only candidates."""
     from repro.kernels.impact_scatter_topk import ops as fused_ops
 
     n_docs_pad = index.doc_terms.shape[0]
     return fused_ops.impact_scatter_topk_batched(
-        docs, contribs, n_docs_pad, k, n_live=index.n_docs
+        docs, contribs, n_docs_pad, k, n_live=index.n_docs, live=live_mask
     )
 
 
@@ -263,6 +274,7 @@ def saat_search(
     max_segs_per_term: int,
     scatter_impl: str = "jnp",
     fused_topk: bool = False,
+    live_mask: jax.Array | None = None,
 ) -> SaatResult:
     """Natively batched anytime SAAT top-k. ``q_terms/q_weights: [B, Lq]``.
 
@@ -277,16 +289,24 @@ def saat_search(
     ``impact_scatter_topk`` kernel: the accumulator never materializes in HBM
     and doc ids stay bit-identical to the unfused path. ``scatter_impl`` is
     ignored in that mode (the fused Pallas kernel IS the scatter).
+
+    ``live_mask`` is the index lifecycle's tombstone gate: an i32/bool
+    ``[n_docs_pad]`` bitmap (nonzero = live) ANDed into the same candidate
+    mask that already demotes pad docs, so tombstoned docs score ``-inf``
+    with zero index rebuild. The accumulation itself is untouched — dead
+    docs' postings still scatter, they just can never surface — which keeps
+    per-doc f32 sums bit-identical to a rebuilt index (posting order
+    restricted to any surviving doc is unchanged by other docs' removal).
     """
     if q_terms.ndim != 2:
         raise ValueError(f"expected [B, Lq] query batch, got shape {q_terms.shape}")
     plan = saat_plan(index, q_terms, q_weights, max_segs_per_term)
     docs, contribs, n_proc = _gather_postings_batched(index, plan, rho)
     if fused_topk:
-        scores, ids = _fused_scatter_topk_batched(index, docs, contribs, k)
+        scores, ids = _fused_scatter_topk_batched(index, docs, contribs, k, live_mask)
     else:
         acc = _accumulate_batched(index, docs, contribs, scatter_impl)
-        scores, ids = topk(_mask_pad_docs(index, acc), k)
+        scores, ids = topk(_mask_pad_docs(index, acc, live_mask), k)
     return SaatResult(scores, ids.astype(jnp.int32), n_proc, plan.total_postings)
 
 
@@ -300,11 +320,13 @@ def saat_search_vmap(
     rho: int,
     max_segs_per_term: int,
     scatter_impl: str = "jnp",
+    live_mask: jax.Array | None = None,
 ) -> SaatResult:
     """Legacy ``jax.vmap(one-query)`` SAAT — parity oracle / benchmark baseline.
 
-    Semantically identical to :func:`saat_search`; kept so the batched engine
-    can be validated bit-for-bit on doc ids and raced in
+    Semantically identical to :func:`saat_search` (including the tombstone
+    ``live_mask``, shared across the batch); kept so the batched engine can be
+    validated bit-for-bit on doc ids and raced in
     ``benchmarks/side_batched_vs_vmap.py``.
     """
 
@@ -312,7 +334,7 @@ def saat_search_vmap(
         plan = saat_plan(index, qt, qw, max_segs_per_term)
         docs, contribs, n_proc = _gather_postings(index, plan, rho)
         acc = _accumulate(index, docs, contribs, scatter_impl)
-        scores, ids = topk(_mask_pad_docs(index, acc), k)
+        scores, ids = topk(_mask_pad_docs(index, acc, live_mask), k)
         return SaatResult(scores, ids.astype(jnp.int32), n_proc, plan.total_postings)
 
     return jax.vmap(one)(q_terms, q_weights)

@@ -69,6 +69,42 @@ def merge_topk(
     return ms, jnp.take_along_axis(i, mi, axis=-1)
 
 
+def merge_pools_by_id(
+    scores_a: jax.Array,
+    ids_a: jax.Array,
+    scores_b: jax.Array,
+    ids_b: jax.Array,
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge two candidate pools with ties canonicalized to doc-id order.
+
+    The host-local analogue of :func:`canonical_topk_merge` — no collective,
+    just two pools whose ids live in one global doc-id space. This is the
+    ``IndexHandle`` merge boundary: the main index's top-k pool and the delta
+    segment's top-k pool (delta-local ids already mapped to global ids) join
+    here, and the result must be bit-identical to a top-k over a single
+    accumulator covering both.
+
+    Same tie argument as :func:`canonical_topk_merge`: after the stable
+    id-ascending reorder, position order *is* id order, and ``lax.top_k``
+    breaks equal-score ties toward the lower input position — so tied
+    candidates surface in ascending-id order exactly as a dense-accumulator
+    top-k would, regardless of which pool contributed them. Pad sentinels
+    (``-inf`` score) lose to every finite candidate; positions holding
+    ``-inf`` carry no id guarantee.
+
+    Precondition: a live document appears in at most one pool (an updated doc
+    is tombstoned in main, so its stale main entry scores ``-inf`` and loses).
+    """
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1).astype(jnp.int32)
+    order = jnp.argsort(i, axis=-1)  # jnp.argsort is stable
+    s = jnp.take_along_axis(s, order, axis=-1)
+    i = jnp.take_along_axis(i, order, axis=-1)
+    ms, mi = topk(s, k)
+    return ms, jnp.take_along_axis(i, mi, axis=-1)
+
+
 def sharded_topk_merge(
     local_scores: jax.Array, local_ids: jax.Array, k: int, axis_name: str
 ) -> Tuple[jax.Array, jax.Array]:

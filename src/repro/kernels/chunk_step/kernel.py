@@ -70,12 +70,14 @@ def _trip_body(
     qw,  # f32[Lq]
     dt_hbm,
     dw_hbm,
+    lv_hbm,  # i32[nb, bs] tombstone bitmap rows in HBM, or None
     out_s_ref,
     out_i_ref,
     out_theta_ref,
     out_proc_ref,
     dt_buf,
     dw_buf,
+    lv_buf,  # VMEM (2, 1, bs) live-row double buffer, or None
     cand_ref,
     sems,
     *,
@@ -88,6 +90,11 @@ def _trip_body(
     Shared verbatim between the per-trip and multi-trip kernels so the parity
     contract (bit-identical ids/theta/processed vs the jnp while-body) is
     maintained in exactly one place.
+
+    When ``lv_hbm`` is present, each selected block's ``[bs]`` tombstone row
+    rides the same double-buffered DMA pipeline as its doc-major rows (third
+    semaphore lane) and masks dead docs' scores to ``-inf`` before the merge
+    — the in-kernel image of the jnp body's ``live_mask`` gather.
     """
     # ---- select: remaining-ub top-budget, entirely from the VMEM ub row ----
     rub = jnp.where(proc != 0, -jnp.inf, ub)
@@ -97,7 +104,7 @@ def _trip_body(
     # ---- score: doc-block revisiting loop, double-buffered HBM prefetch ----
     def doc_dma(slot, j):
         row0 = b_c[j] * bs
-        return (
+        copies = (
             pltpu.make_async_copy(
                 dt_hbm.at[pl.ds(row0, bs), :], dt_buf.at[slot], sems.at[slot, 0]
             ),
@@ -105,6 +112,13 @@ def _trip_body(
                 dw_hbm.at[pl.ds(row0, bs), :], dw_buf.at[slot], sems.at[slot, 1]
             ),
         )
+        if lv_hbm is not None:
+            copies += (
+                pltpu.make_async_copy(
+                    lv_hbm.at[pl.ds(b_c[j], 1), :], lv_buf.at[slot], sems.at[slot, 2]
+                ),
+            )
+        return copies
 
     for c in doc_dma(0, 0):  # warm up the pipeline
         c.start()
@@ -124,6 +138,8 @@ def _trip_body(
         s = jnp.sum(qv.reshape(bs, tmax) * w, axis=-1)  # f32[bs]
         docs = b_c[j] * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
         s = jnp.where(docs < n_live, s, -jnp.inf)  # padded docs never rank
+        if lv_hbm is not None:
+            s = jnp.where(lv_buf[slot][0] != 0, s, -jnp.inf)  # tombstoned docs
         s = jnp.where(live[j], s, -jnp.inf)  # dead blocks contribute nothing
         cand_ref[j, :] = s
 
@@ -157,19 +173,19 @@ def _chunk_step_kernel_batched(
     qw_ref,
     dt_hbm,
     dw_hbm,
-    out_s_ref,
-    out_i_ref,
-    out_theta_ref,
-    out_proc_ref,
-    dt_buf,
-    dw_buf,
-    cand_ref,
-    sems,
-    *,
+    *rest,
     budget: int,
     bs: int,
     n_live: int,
+    has_live: bool = False,
 ):
+    if has_live:
+        (lv_hbm, out_s_ref, out_i_ref, out_theta_ref, out_proc_ref,
+         dt_buf, dw_buf, cand_ref, lv_buf, sems) = rest
+    else:
+        (out_s_ref, out_i_ref, out_theta_ref, out_proc_ref,
+         dt_buf, dw_buf, cand_ref, sems) = rest
+        lv_hbm = lv_buf = None
     _trip_body(
         ub_ref[0, :],
         proc_ref[0, :],
@@ -180,12 +196,14 @@ def _chunk_step_kernel_batched(
         qw_ref[0, :].astype(jnp.float32),
         dt_hbm,
         dw_hbm,
+        lv_hbm,
         out_s_ref,
         out_i_ref,
         out_theta_ref,
         out_proc_ref,
         dt_buf,
         dw_buf,
+        lv_buf,
         cand_ref,
         sems,
         budget=budget,
@@ -205,20 +223,12 @@ def _chunk_step_multi_kernel_batched(
     qw_ref,
     dt_hbm,
     dw_hbm,
-    out_s_ref,
-    out_i_ref,
-    out_theta_ref,
-    out_proc_ref,
-    out_trips_ref,
-    dt_buf,
-    dw_buf,
-    cand_ref,
-    sems,
-    *,
+    *rest,
     trips: int,
     budget: int,
     bs: int,
     n_live: int,
+    has_live: bool = False,
 ):
     """Up to ``trips`` trip bodies in ONE launch; state revolves in VMEM.
 
@@ -229,6 +239,13 @@ def _chunk_step_multi_kernel_batched(
     budget, or already rank-safe (``max remaining ub <= theta``), skips the
     trip's DMAs and compute entirely — the in-kernel early exit.
     """
+    if has_live:
+        (lv_hbm, out_s_ref, out_i_ref, out_theta_ref, out_proc_ref,
+         out_trips_ref, dt_buf, dw_buf, cand_ref, lv_buf, sems) = rest
+    else:
+        (out_s_ref, out_i_ref, out_theta_ref, out_proc_ref,
+         out_trips_ref, dt_buf, dw_buf, cand_ref, sems) = rest
+        lv_hbm = lv_buf = None
     b = pl.program_id(0)
     out_s_ref[...] = pool_s_ref[...]
     out_i_ref[...] = pool_i_ref[...]
@@ -258,12 +275,14 @@ def _chunk_step_multi_kernel_batched(
                 qw,
                 dt_hbm,
                 dw_hbm,
+                lv_hbm,
                 out_s_ref,
                 out_i_ref,
                 out_theta_ref,
                 out_proc_ref,
                 dt_buf,
                 dw_buf,
+                lv_buf,
                 cand_ref,
                 sems,
                 budget=budget,
@@ -287,13 +306,16 @@ def chunk_step_batched_kernel(
     budget: int,
     bs: int,
     n_live: int,
+    live: jax.Array | None = None,  # i32[nb, bs] tombstone rows — HBM, DMA'd
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One fused phase-2 chunk step for a whole query batch: grid over B.
 
     Returns ``(pool_s, pool_i, theta, processed)`` — the only arrays that
     cross the HBM boundary per trip. The ``[B, budget, bs]`` candidate score
-    tensor and the selection finalists never leave VMEM.
+    tensor and the selection finalists never leave VMEM. ``live`` (optional)
+    is the lifecycle tombstone bitmap reshaped to block rows; like the doc
+    stores it stays in HBM and only the selected blocks' rows are DMA'd.
     """
     B, nbp = ub.shape
     k = pool_s.shape[1]
@@ -301,22 +323,37 @@ def chunk_step_batched_kernel(
     tmax = doc_terms.shape[1]
 
     row = lambda b: (b, 0)  # noqa: E731 — one query row per grid cell
+    in_specs = [
+        pl.BlockSpec((1, nbp), row),
+        pl.BlockSpec((1, nbp), row),
+        pl.BlockSpec((1, k), row),
+        pl.BlockSpec((1, k), row),
+        pl.BlockSpec((1, 1), row),
+        pl.BlockSpec((1, lq), row),
+        pl.BlockSpec((1, lq), row),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # doc-major store: DMA only
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    scratch = [
+        pltpu.VMEM((2, bs, tmax), jnp.int32),  # double-buffered doc terms
+        pltpu.VMEM((2, bs, tmax), jnp.float32),  # double-buffered doc weights
+        pltpu.VMEM((budget, bs), jnp.float32),  # candidate score tile
+        pltpu.SemaphoreType.DMA((2, 2)),  # (slot, terms/weights)
+    ]
+    args = [ub, processed, pool_s, pool_i, theta, q_terms, q_weights,
+            doc_terms, doc_weights]
+    if live is not None:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))  # live rows: DMA only
+        args.append(live.astype(jnp.int32))
+        scratch.insert(3, pltpu.VMEM((2, 1, bs), jnp.int32))  # live-row buffer
+        scratch[-1] = pltpu.SemaphoreType.DMA((2, 3))  # (slot, terms/weights/live)
     out = pl.pallas_call(
         functools.partial(
-            _chunk_step_kernel_batched, budget=budget, bs=bs, n_live=n_live
+            _chunk_step_kernel_batched, budget=budget, bs=bs, n_live=n_live,
+            has_live=live is not None,
         ),
         grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, nbp), row),
-            pl.BlockSpec((1, nbp), row),
-            pl.BlockSpec((1, k), row),
-            pl.BlockSpec((1, k), row),
-            pl.BlockSpec((1, 1), row),
-            pl.BlockSpec((1, lq), row),
-            pl.BlockSpec((1, lq), row),
-            pl.BlockSpec(memory_space=pltpu.ANY),  # doc-major store: DMA only
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, k), row),
             pl.BlockSpec((1, k), row),
@@ -329,14 +366,9 @@ def chunk_step_batched_kernel(
             jax.ShapeDtypeStruct((B, 1), jnp.float32),
             jax.ShapeDtypeStruct((B, nbp), jnp.int32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((2, bs, tmax), jnp.int32),  # double-buffered doc terms
-            pltpu.VMEM((2, bs, tmax), jnp.float32),  # double-buffered doc weights
-            pltpu.VMEM((budget, bs), jnp.float32),  # candidate score tile
-            pltpu.SemaphoreType.DMA((2, 2)),  # (slot, terms/weights)
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(ub, processed, pool_s, pool_i, theta, q_terms, q_weights, doc_terms, doc_weights)
+    )(*args)
     return out[0], out[1], out[2], out[3]
 
 
@@ -356,6 +388,7 @@ def chunk_step_multi_batched_kernel(
     budget: int,
     bs: int,
     n_live: int,
+    live: jax.Array | None = None,  # i32[nb, bs] tombstone rows — HBM, DMA'd
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Up to ``trips`` fused chunk steps per query in ONE launch: grid over B.
@@ -371,20 +404,34 @@ def chunk_step_multi_batched_kernel(
     tmax = doc_terms.shape[1]
 
     row = lambda b, *_: (b, 0)  # noqa: E731 — scalar refs trail the index args
+    in_specs = [
+        pl.BlockSpec((1, nbp), row),
+        pl.BlockSpec((1, nbp), row),
+        pl.BlockSpec((1, k), row),
+        pl.BlockSpec((1, k), row),
+        pl.BlockSpec((1, 1), row),
+        pl.BlockSpec((1, lq), row),
+        pl.BlockSpec((1, lq), row),
+        pl.BlockSpec(memory_space=pltpu.ANY),  # doc-major store: DMA only
+        pl.BlockSpec(memory_space=pltpu.ANY),
+    ]
+    scratch = [
+        pltpu.VMEM((2, bs, tmax), jnp.int32),  # double-buffered doc terms
+        pltpu.VMEM((2, bs, tmax), jnp.float32),  # double-buffered doc weights
+        pltpu.VMEM((budget, bs), jnp.float32),  # candidate score tile
+        pltpu.SemaphoreType.DMA((2, 2)),  # (slot, terms/weights)
+    ]
+    args = [trips_left, ub, processed, pool_s, pool_i, theta, q_terms,
+            q_weights, doc_terms, doc_weights]
+    if live is not None:
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))  # live rows: DMA only
+        args.append(live.astype(jnp.int32))
+        scratch.insert(3, pltpu.VMEM((2, 1, bs), jnp.int32))  # live-row buffer
+        scratch[-1] = pltpu.SemaphoreType.DMA((2, 3))  # (slot, terms/weights/live)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, nbp), row),
-            pl.BlockSpec((1, nbp), row),
-            pl.BlockSpec((1, k), row),
-            pl.BlockSpec((1, k), row),
-            pl.BlockSpec((1, 1), row),
-            pl.BlockSpec((1, lq), row),
-            pl.BlockSpec((1, lq), row),
-            pl.BlockSpec(memory_space=pltpu.ANY),  # doc-major store: DMA only
-            pl.BlockSpec(memory_space=pltpu.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, k), row),
             pl.BlockSpec((1, k), row),
@@ -392,17 +439,13 @@ def chunk_step_multi_batched_kernel(
             pl.BlockSpec((1, nbp), row),
             pl.BlockSpec((1, 1), row),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((2, bs, tmax), jnp.int32),  # double-buffered doc terms
-            pltpu.VMEM((2, bs, tmax), jnp.float32),  # double-buffered doc weights
-            pltpu.VMEM((budget, bs), jnp.float32),  # candidate score tile
-            pltpu.SemaphoreType.DMA((2, 2)),  # (slot, terms/weights)
-        ],
+        scratch_shapes=scratch,
     )
     out = pl.pallas_call(
         functools.partial(
             _chunk_step_multi_kernel_batched,
             trips=trips, budget=budget, bs=bs, n_live=n_live,
+            has_live=live is not None,
         ),
         grid_spec=grid_spec,
         out_shape=[
@@ -413,8 +456,5 @@ def chunk_step_multi_batched_kernel(
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(
-        trips_left, ub, processed, pool_s, pool_i, theta, q_terms, q_weights,
-        doc_terms, doc_weights,
-    )
+    )(*args)
     return out[0], out[1], out[2], out[3], out[4]

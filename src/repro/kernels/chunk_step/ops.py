@@ -42,6 +42,7 @@ def chunk_step_batched(
     block_budget: int,
     block_size: int,
     n_live: int,
+    live: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One fused phase-2 chunk step over the whole ``[B, ...]`` state.
@@ -53,6 +54,8 @@ def chunk_step_batched(
       processed: ``bool[B, n_blocks]`` blocks already scored.
       pool_s/pool_i: the current top-k pool ``[B, k]``.
       theta: ``f32[B]`` current thresholds.
+      live: optional i32/bool ``[n_docs_pad]`` lifecycle tombstone bitmap
+        (nonzero = live), reshaped to block rows and DMA'd per selected block.
 
     Returns ``(pool_s, pool_i, theta, processed)`` with identical shapes and
     dtypes to the inputs — a drop-in replacement for the jnp while-body's
@@ -68,6 +71,8 @@ def chunk_step_batched(
         )
     ubp = pad_axis(ub.astype(jnp.float32), 1, 128, fill=-jnp.inf)
     procp = pad_axis(processed.astype(jnp.int32), 1, 128, fill=1)
+    if live is not None:
+        live = live.astype(jnp.int32)[: nb * block_size].reshape(nb, block_size)
     ps, pi, th, pr = chunk_step_batched_kernel(
         ubp,
         procp,
@@ -81,6 +86,7 @@ def chunk_step_batched(
         budget=block_budget,
         bs=block_size,
         n_live=n_live,
+        live=live,
         interpret=interpret,
     )
     return ps, pi, th[:, 0], pr[:, :nb].astype(jnp.bool_)
@@ -108,6 +114,7 @@ def chunk_step_multi_batched(
     block_budget: int,
     block_size: int,
     n_live: int,
+    live: jax.Array | None = None,
     interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Up to ``trips_per_launch`` fused chunk steps in ONE kernel launch.
@@ -132,6 +139,8 @@ def chunk_step_multi_batched(
         )
     ubp = pad_axis(ub.astype(jnp.float32), 1, 128, fill=-jnp.inf)
     procp = pad_axis(processed.astype(jnp.int32), 1, 128, fill=1)
+    if live is not None:
+        live = live.astype(jnp.int32)[: nb * block_size].reshape(nb, block_size)
     ps, pi, th, pr, td = chunk_step_multi_batched_kernel(
         ubp,
         procp,
@@ -147,6 +156,7 @@ def chunk_step_multi_batched(
         budget=block_budget,
         bs=block_size,
         n_live=n_live,
+        live=live,
         interpret=interpret,
     )
     return ps, pi, th[:, 0], pr[:, :nb].astype(jnp.bool_), td[:, 0]
@@ -170,19 +180,25 @@ def _contract_call(dims):
         sds((B, k), jnp.float32), sds((B, k), jnp.int32),  # pool
         sds((B,), jnp.float32),  # theta
     )
+    live_sds = sds((ndp,), jnp.int32) if dims.get("live") else None
     if "trips" in dims:
-        fn = partial(
-            chunk_step_multi_batched,
+        kw = dict(
             trips_per_launch=dims["trips"], block_budget=dims["budget"],
             block_size=bs, n_live=dims["n_docs"], interpret=True,
         )
-        return fn, state + (sds((B,), jnp.int32),)  # + trips_left
-    fn = partial(
-        chunk_step_batched,
+        state = state + (sds((B,), jnp.int32),)  # + trips_left
+        if live_sds is not None:
+            fn = lambda *a: chunk_step_multi_batched(*a[:-1], live=a[-1], **kw)
+            return fn, state + (live_sds,)
+        return partial(chunk_step_multi_batched, **kw), state
+    kw = dict(
         block_budget=dims["budget"], block_size=bs, n_live=dims["n_docs"],
         interpret=True,
     )
-    return fn, state
+    if live_sds is not None:
+        fn = lambda *a: chunk_step_batched(*a[:-1], live=a[-1], **kw)
+        return fn, state + (live_sds,)
+    return partial(chunk_step_batched, **kw), state
 
 
 # Single source of truth for the sweep shapes in tests/test_chunk_step.py and
@@ -230,6 +246,21 @@ CONTRACT = KernelContract(
         ShapeCase(
             "multi_ragged_bs24",
             dict(B=2, trips=2, budget=5, k=3, n_docs=130, block_size=24, lq=4, tmax=8),
+            expect_scalar_prefetch=True,
+        ),
+        # tombstone-bitmap (live-masked) variants: the live rows must ride the
+        # same DMA discipline (third semaphore lane) the happens-before pass
+        # checks for the doc store
+        ShapeCase(
+            "live_b2_budget3",
+            dict(B=2, budget=3, k=5, n_docs=220, block_size=32, lq=6, tmax=8, live=1),
+        ),
+        ShapeCase(
+            "multi_live_b2_trips3",
+            dict(
+                B=2, trips=3, budget=3, k=5,
+                n_docs=220, block_size=32, lq=6, tmax=8, live=1,
+            ),
             expect_scalar_prefetch=True,
         ),
     ),

@@ -20,7 +20,14 @@ top-k, bit-identical in ids to ``lax.top_k`` over the dense accumulator
 
 Padded documents (``gid >= n_live``) are masked to ``-inf`` *inside* the
 kernel, before selection, so the candidate pool replicates the unfused
-engine's ``_mask_pad_docs`` + ``topk`` semantics.
+engine's ``_mask_pad_docs`` + ``topk`` semantics. The index lifecycle's
+tombstone bitmap rides the same gate: an optional ``[n_blocks, block_d]``
+i32 live input (nonzero = live, i32 because Mosaic has no bool VMEM tiles)
+is ANDed into the pad mask at selection time, so deleted documents score
+``-inf`` without touching the accumulation — and therefore without
+perturbing the surviving docs' bit-exact f32 sums. Masking only at select
+(not during accumulate) is what keeps the candidate pool rank-safe AND
+bit-identical to the unfused engine's masked accumulator.
 
 The skip-range optimization carries over unchanged from ``impact_scatter``:
 per-(query, tile) [min_doc, max_doc+1) bounds let non-overlapping (block,
@@ -41,14 +48,20 @@ def _scatter_topk_kernel(
     ranges_ref,
     docs_ref,
     contribs_ref,
-    out_s_ref,
-    out_i_ref,
-    acc_ref,
-    *,
+    *rest,
     block_d: int,
     n_tiles: int,
     n_live: int,
+    has_live: bool = False,
 ):
+    # `rest` unpacks to (live_ref?, out_s_ref, out_i_ref, acc_ref): the live
+    # bitmap is an optional trailing input, so the no-mask launch traces the
+    # exact same kernel it always has.
+    if has_live:
+        live_ref, out_s_ref, out_i_ref, acc_ref = rest
+    else:
+        live_ref = None
+        out_s_ref, out_i_ref, acc_ref = rest
     d = pl.program_id(0)
     t = pl.program_id(1)
 
@@ -79,7 +92,10 @@ def _scatter_topk_kernel(
         # 2-D iota: Mosaic rejects 1-D iota on real TPUs (same convention as
         # the scatter kernels' broadcasted_iota row ids)
         gid = block_start + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
-        scores = jnp.where(gid < n_live, acc_ref[...], -jnp.inf)
+        mask = gid < n_live
+        if live_ref is not None:
+            mask = mask & (live_ref[...] != 0)
+        scores = jnp.where(mask, acc_ref[...], -jnp.inf)
         s, i = jax.lax.top_k(scores[0], k)
         out_s_ref[0, :] = s
         out_i_ref[0, :] = i.astype(jnp.int32) + block_start
@@ -89,14 +105,17 @@ def _scatter_topk_kernel_batched(
     ranges_ref,
     docs_ref,
     contribs_ref,
-    out_s_ref,
-    out_i_ref,
-    acc_ref,
-    *,
+    *rest,
     block_d: int,
     n_tiles: int,
     n_live: int,
+    has_live: bool = False,
 ):
+    if has_live:
+        live_ref, out_s_ref, out_i_ref, acc_ref = rest
+    else:
+        live_ref = None
+        out_s_ref, out_i_ref, acc_ref = rest
     d = pl.program_id(1)
     t = pl.program_id(2)
 
@@ -126,7 +145,10 @@ def _scatter_topk_kernel_batched(
         k = out_s_ref.shape[2]
         # 2-D iota: Mosaic rejects 1-D iota on real TPUs
         gid = block_start + jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)
-        scores = jnp.where(gid < n_live, acc_ref[...], -jnp.inf)
+        mask = gid < n_live
+        if live_ref is not None:
+            mask = mask & (live_ref[...] != 0)
+        scores = jnp.where(mask, acc_ref[...], -jnp.inf)
         s, i = jax.lax.top_k(scores[0], k)
         out_s_ref[0, 0, :] = s
         out_i_ref[0, 0, :] = i.astype(jnp.int32) + block_start
@@ -142,6 +164,7 @@ def impact_scatter_topk_kernel(
     k: int,
     block_d: int = 512,
     tile_p: int = 512,
+    live: jax.Array | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused scatter → per-block top-k for one query. See module docstring.
@@ -153,6 +176,8 @@ def impact_scatter_topk_kernel(
       n_docs: accumulator length; must be % block_d == 0.
       n_live: real document count; ids >= n_live are masked to -inf.
       k: candidates kept per accumulator block; must be <= block_d.
+      live: optional i32[n_docs] tombstone bitmap (nonzero = live), ANDed
+        into the pad mask at selection time.
 
     Returns:
       (cand_scores f32[n_blocks, k], cand_ids i32[n_blocks, k]) — the only
@@ -169,16 +194,24 @@ def impact_scatter_topk_kernel(
     docs2d = doc_ids.reshape(n_tiles, tile_p)
     c2d = contribs.astype(jnp.float32).reshape(n_tiles, tile_p)
 
+    in_specs = [
+        pl.BlockSpec((1, 2), lambda d, t: (t, 0)),
+        pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
+        pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
+    ]
+    inputs = [tile_ranges, docs2d, c2d]
+    if live is not None:
+        assert live.shape == (n_docs,), (live.shape, n_docs)
+        in_specs.append(pl.BlockSpec((1, block_d), lambda d, t: (d, 0)))
+        inputs.append(live.astype(jnp.int32).reshape(n_blocks, block_d))
+
     out_s, out_i = pl.pallas_call(
         functools.partial(
-            _scatter_topk_kernel, block_d=block_d, n_tiles=n_tiles, n_live=n_live
+            _scatter_topk_kernel, block_d=block_d, n_tiles=n_tiles,
+            n_live=n_live, has_live=live is not None,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 2), lambda d, t: (t, 0)),
-            pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
-            pl.BlockSpec((1, tile_p), lambda d, t: (t, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, k), lambda d, t: (d, 0)),
             pl.BlockSpec((1, k), lambda d, t: (d, 0)),
@@ -189,7 +222,7 @@ def impact_scatter_topk_kernel(
         ],
         scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
         interpret=interpret,
-    )(tile_ranges, docs2d, c2d)
+    )(*inputs)
     return out_s, out_i
 
 
@@ -203,6 +236,7 @@ def impact_scatter_topk_batched_kernel(
     k: int,
     block_d: int = 512,
     tile_p: int = 512,
+    live: jax.Array | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Batched fused scatter → per-block top-k: grid over (query, block, tile).
@@ -214,6 +248,7 @@ def impact_scatter_topk_batched_kernel(
       n_docs: accumulator length; must be % block_d == 0.
       n_live: real document count; ids >= n_live are masked to -inf.
       k: candidates kept per accumulator block; must be <= block_d.
+      live: optional i32[n_docs] tombstone bitmap shared by the whole batch.
 
     Returns:
       (cand_scores f32[B, n_blocks, k], cand_ids i32[B, n_blocks, k]).
@@ -229,16 +264,24 @@ def impact_scatter_topk_batched_kernel(
     docs3d = doc_ids.reshape(B, n_tiles, tile_p)
     c3d = contribs.astype(jnp.float32).reshape(B, n_tiles, tile_p)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, 2), lambda b, d, t: (b, t, 0)),
+        pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
+        pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
+    ]
+    inputs = [tile_ranges, docs3d, c3d]
+    if live is not None:
+        assert live.shape == (n_docs,), (live.shape, n_docs)
+        in_specs.append(pl.BlockSpec((1, block_d), lambda b, d, t: (d, 0)))
+        inputs.append(live.astype(jnp.int32).reshape(n_blocks, block_d))
+
     out_s, out_i = pl.pallas_call(
         functools.partial(
-            _scatter_topk_kernel_batched, block_d=block_d, n_tiles=n_tiles, n_live=n_live
+            _scatter_topk_kernel_batched, block_d=block_d, n_tiles=n_tiles,
+            n_live=n_live, has_live=live is not None,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, 2), lambda b, d, t: (b, t, 0)),
-            pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
-            pl.BlockSpec((1, 1, tile_p), lambda b, d, t: (b, t, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, k), lambda b, d, t: (b, d, 0)),
             pl.BlockSpec((1, 1, k), lambda b, d, t: (b, d, 0)),
@@ -249,5 +292,5 @@ def impact_scatter_topk_batched_kernel(
         ],
         scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
         interpret=interpret,
-    )(tile_ranges, docs3d, c3d)
+    )(*inputs)
     return out_s, out_i

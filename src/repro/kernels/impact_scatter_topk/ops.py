@@ -21,7 +21,12 @@ import jax.numpy as jnp
 
 from repro.analysis.kernel_contracts import KernelContract, ShapeCase
 from repro.core.topk import tiled_topk
-from repro.kernels.common import interpret_default, round_up, sorted_posting_tiles
+from repro.kernels.common import (
+    interpret_default,
+    pad_axis,
+    round_up,
+    sorted_posting_tiles,
+)
 from repro.kernels.impact_scatter_topk.kernel import (
     impact_scatter_topk_batched_kernel,
     impact_scatter_topk_kernel,
@@ -55,6 +60,7 @@ def impact_scatter_topk(
     k: int,
     *,
     n_live: int | None = None,
+    live: jax.Array | None = None,
     block_d: int = 512,
     tile_p: int = 512,
     sort_by_doc: bool = True,
@@ -66,6 +72,10 @@ def impact_scatter_topk(
     with ids >= ``n_live`` masked to ``-inf`` — but the dense accumulator
     never leaves VMEM. Returns ``(scores, ids)`` of width ``min(k, n_docs)``
     (the same clamp as ``repro.core.topk.topk``).
+
+    ``live`` is the index lifecycle's tombstone bitmap (i32/bool, length
+    <= the padded accumulator; nonzero = live), ANDed into the pad mask at
+    in-kernel selection time so deleted docs score ``-inf``.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -75,6 +85,8 @@ def impact_scatter_topk(
     k_out = min(k, n_docs)
     k_blk = min(k_out, block_d)  # a block holds at most block_d of the top-k
     docs, c, ranges, _ = sorted_posting_tiles(doc_ids, contribs, n_docs_pad, tile_p, sort_by_doc)
+    if live is not None:
+        live = pad_axis(live.astype(jnp.int32), 0, n_docs_pad)[:n_docs_pad]
     cand_s, cand_i = impact_scatter_topk_kernel(
         docs,
         c,
@@ -84,6 +96,7 @@ def impact_scatter_topk(
         k=k_blk,
         block_d=block_d,
         tile_p=tile_p,
+        live=live,
         interpret=interpret,
     )
     return _merge_pool(cand_s, cand_i, k_out)
@@ -100,6 +113,7 @@ def impact_scatter_topk_batched(
     k: int,
     *,
     n_live: int | None = None,
+    live: jax.Array | None = None,
     block_d: int = 512,
     tile_p: int = 512,
     sort_by_doc: bool = True,
@@ -110,6 +124,7 @@ def impact_scatter_topk_batched(
     One kernel launch grids over (query, block, tile); per-query accumulator
     blocks live in VMEM scratch and only the ``[B, n_blocks * k]`` candidate
     pool reaches HBM. Returns ``([B, min(k, n_docs)]`` score/id pairs.
+    ``live`` is the optional tombstone bitmap, shared by the whole batch.
     """
     if interpret is None:
         interpret = interpret_default()
@@ -119,6 +134,8 @@ def impact_scatter_topk_batched(
     k_out = min(k, n_docs)
     k_blk = min(k_out, block_d)
     docs, c, ranges, _ = sorted_posting_tiles(doc_ids, contribs, n_docs_pad, tile_p, sort_by_doc)
+    if live is not None:
+        live = pad_axis(live.astype(jnp.int32), 0, n_docs_pad)[:n_docs_pad]
     cand_s, cand_i = impact_scatter_topk_batched_kernel(
         docs,
         c,
@@ -128,6 +145,7 @@ def impact_scatter_topk_batched(
         k=k_blk,
         block_d=block_d,
         tile_p=tile_p,
+        live=live,
         interpret=interpret,
     )
     return _merge_pool(cand_s, cand_i, k_out)
@@ -140,17 +158,25 @@ def _contract_call(dims):
         n_docs=dims["n_docs"], k=dims["k"], block_d=dims["block_d"],
         tile_p=dims["tile_p"], sort_by_doc=True, interpret=True,
     )
+    live_sds = sds((dims["n_docs"],), jnp.int32) if dims.get("live") else None
     if "batch" in dims:
         shape = (dims["batch"], dims["n_postings"])
-        return partial(impact_scatter_topk_batched, **kw), (
-            sds(shape, jnp.int32), sds(shape, jnp.float32))
+        qargs = (sds(shape, jnp.int32), sds(shape, jnp.float32))
+        if live_sds is not None:
+            fn = lambda d, c, l: impact_scatter_topk_batched(d, c, live=l, **kw)
+            return fn, qargs + (live_sds,)
+        return partial(impact_scatter_topk_batched, **kw), qargs
     shape = (dims["n_postings"],)
-    return partial(impact_scatter_topk, **kw), (
-        sds(shape, jnp.int32), sds(shape, jnp.float32))
+    qargs = (sds(shape, jnp.int32), sds(shape, jnp.float32))
+    if live_sds is not None:
+        fn = lambda d, c, l: impact_scatter_topk(d, c, live=l, **kw)
+        return fn, qargs + (live_sds,)
+    return partial(impact_scatter_topk, **kw), qargs
 
 
 # Single source of truth for the sweep shapes in tests/test_kernels.py and
-# the checker's trace grid: k from 1 to beyond block_d, ragged doc counts.
+# the checker's trace grid: k from 1 to beyond block_d, ragged doc counts,
+# and the tombstone-bitmap (live-masked) variants of both layouts.
 CONTRACT = KernelContract(
     name="impact_scatter_topk",
     description="fused scatter -> per-block top-k candidate pool (SAAT fused_topk)",
@@ -159,8 +185,10 @@ CONTRACT = KernelContract(
         ShapeCase("k1", dict(n_postings=128, n_docs=512, k=1, block_d=256, tile_p=128)),
         ShapeCase("k10_ragged", dict(n_postings=1000, n_docs=1000, k=10, block_d=256, tile_p=128)),
         ShapeCase("k300", dict(n_postings=4096, n_docs=512, k=300, block_d=256, tile_p=128)),
+        ShapeCase("live_ragged", dict(n_postings=1000, n_docs=1000, k=10, block_d=256, tile_p=128, live=1)),
         ShapeCase("b1", dict(batch=1, n_postings=1000, n_docs=700, k=13, block_d=256, tile_p=128)),
         ShapeCase("b3_ragged", dict(batch=3, n_postings=1000, n_docs=700, k=13, block_d=256, tile_p=128)),
         ShapeCase("b8", dict(batch=8, n_postings=1000, n_docs=700, k=13, block_d=256, tile_p=128)),
+        ShapeCase("b3_live", dict(batch=3, n_postings=1000, n_docs=700, k=13, block_d=256, tile_p=128, live=1)),
     ),
 )

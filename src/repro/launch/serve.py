@@ -14,6 +14,20 @@ count — which is falsifiable here, since service time genuinely consumes
 deadline budget. ``--lq-buckets`` turns on Lq-bucketed executables in
 either mode. (The fully deterministic SimulatedClock variant of this loop
 lives in tests/test_queue.py.)
+
+``--mutate-qps`` layers a seeded Poisson *mutation* stream (adds / updates /
+deletes over an ``IndexHandle``) onto the arrival stream: the replay runs on
+a ``SimulatedClock`` through :func:`repro.serving.lifecycle.replay_with_churn`
+with threshold compaction hot-swapping new generations between flushes. The
+report then adds the churn ledger: per-op counts, compactions, the final
+generation, and the generation span observed across flushes.
+
+``--counters-port`` starts a Prometheus-style scrape endpoint
+(``GET /metrics``) on localhost for the duration of the run: each scrape
+derives the counter families fresh from the live server/queue objects —
+including the index lifecycle gauges (``repro_index_generation``,
+``repro_index_tombstones``, ``repro_index_delta_docs``) when the corpus is
+mutable. Port 0 picks an ephemeral port (printed to stderr).
 """
 from __future__ import annotations
 
@@ -117,6 +131,29 @@ def main() -> None:
         "from starving in a never-full bucket)",
     )
     ap.add_argument(
+        "--mutate-qps", type=float, default=None, metavar="QPS",
+        help="with --queue: interleave a seeded Poisson mutation stream "
+        "(adds/updates/deletes on an IndexHandle) with the arrival stream; "
+        "threshold compaction hot-swaps generations between flushes. Runs "
+        "the deterministic SimulatedClock replay (service wall time is not "
+        "measured in this mode)",
+    )
+    ap.add_argument(
+        "--compact-delta-docs", type=int, default=64, metavar="N",
+        help="churn replay: compact once the delta segment holds N docs "
+        "(the tombstone-fraction trigger uses the policy defaults)",
+    )
+    ap.add_argument(
+        "--counters-port", type=int, default=None, metavar="PORT",
+        help="serve the counter families at http://127.0.0.1:PORT/metrics "
+        "for the duration of the run (0 = ephemeral port, printed to stderr)",
+    )
+    ap.add_argument(
+        "--counters-linger-s", type=float, default=0.0, metavar="S",
+        help="keep the --counters-port endpoint up S seconds after the "
+        "report prints (for external scrapers)",
+    )
+    ap.add_argument(
         "--counters", action="store_true",
         help="export the serving counter families (Prometheus text exposition "
         "to stderr, structured copy under report['counters']); with --queue "
@@ -146,12 +183,15 @@ def main() -> None:
         ap.error("--degrade-rho is a flush-time policy of the admission queue; add --queue")
     if args.degrade_rho and args.engine != "saat":
         ap.error("--degrade-rho trades the SAAT posting budget; use --engine saat")
+    if args.mutate_qps is not None and not args.queue:
+        ap.error("--mutate-qps interleaves mutations with queue flushes; add --queue")
+    if args.mutate_qps is not None and args.mutate_qps <= 0:
+        ap.error("--mutate-qps must be positive")
+    if args.counters_port is not None and not args.counters:
+        ap.error("--counters-port scrapes the counter families; add --counters")
 
     corpus = generate_corpus(CorpusConfig(n_docs=args.docs, n_queries=args.queries))
     enc = apply_treatment(corpus, args.model)
-    index = build_impact_index(
-        enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs, enc.n_terms
-    )
     max_q = max(len(t) for t in enc.query_terms)
     qt, qw = pad_queries(enc.query_terms, enc.query_weights, max_q, enc.n_terms)
 
@@ -166,10 +206,17 @@ def main() -> None:
         daat_trips_per_launch=args.daat_trips_per_launch,
         lq_buckets=args.lq_buckets,
     )
+    if args.queue and args.mutate_qps is not None:
+        _serve_churn(args, corpus, enc, cfg, qt, qw)
+        return
+    index = build_impact_index(
+        enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs, enc.n_terms
+    )
     if args.queue:
         _serve_queue(args, corpus, index, enc, cfg, qt, qw)
         return
     server = AnytimeServer(index, cfg)
+    endpoint = _maybe_counters_endpoint(args, server)
     server.warmup(jnp.asarray(qt[: args.batch]), jnp.asarray(qw[: args.batch]))
     server.reset_stats()
     scores, ids = run_query_stream(server, qt, qw)
@@ -199,6 +246,7 @@ def main() -> None:
     if args.counters:
         report["counters"] = _export_counters(server)
     print(json.dumps(report, indent=1))
+    _close_counters_endpoint(args, endpoint)
 
 
 def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
@@ -212,12 +260,6 @@ def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
     """
     clock = HybridClock()
     server = AnytimeServer(index, cfg, clock=clock)
-    server.warmup(
-        jnp.asarray(qt[: min(8, qt.shape[0])]),
-        jnp.asarray(qw[: min(8, qw.shape[0])]),
-        batch_sizes=args.queue_shapes,
-    )
-    server.reset_stats()
     queue = AdmissionQueue(
         server,
         batch_shapes=args.queue_shapes,
@@ -226,6 +268,14 @@ def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
         max_wait_s=args.queue_max_wait_s,
         degrade_rho=args.degrade_rho,
     )
+    # endpoint up before the (slow) warmup so scrapers see the whole run
+    endpoint = _maybe_counters_endpoint(args, server, queue)
+    server.warmup(
+        jnp.asarray(qt[: min(8, qt.shape[0])]),
+        jnp.asarray(qw[: min(8, qw.shape[0])]),
+        batch_sizes=args.queue_shapes,
+    )
+    server.reset_stats()
     rng = np.random.default_rng(args.seed)
     n = args.queries
     gaps = rng.exponential(1.0 / args.arrival_qps, size=n)
@@ -288,6 +338,193 @@ def _serve_queue(args, corpus, index, enc, cfg: ServingConfig, qt, qw) -> None:
     if args.counters:
         report["counters"] = _export_counters(server, queue)
     print(json.dumps(report, indent=1))
+    _close_counters_endpoint(args, endpoint)
+
+
+def _mutation_schedule(rng, n_docs: int, n_terms: int, horizon_s: float, qps: float):
+    """Seeded Poisson mutation stream over an evolving live-gid set.
+
+    The gid bookkeeping here mirrors the handle's (adds take sequential gids;
+    updates/deletes target currently-live gids only), so the schedule is
+    always applicable and the replay never hits a dead-gid mutation.
+    """
+    from repro.serving.lifecycle import MutationEvent
+
+    alive = list(range(n_docs))
+    next_gid = n_docs
+    events = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / qps))
+        if t >= horizon_s:
+            break
+        op = str(rng.choice(["add", "update", "delete"], p=[0.5, 0.25, 0.25]))
+        if not alive and op != "add":
+            op = "add"
+        if op == "delete":
+            gid = alive.pop(int(rng.integers(len(alive))))
+            events.append(MutationEvent(t_s=t, op="delete", gid=gid))
+            continue
+        n_term = int(rng.integers(2, 8))
+        terms = rng.choice(n_terms, size=n_term, replace=False).astype(np.int64)
+        weights = rng.uniform(0.2, 4.0, n_term)
+        if op == "add":
+            events.append(MutationEvent(t_s=t, op="add", terms=terms, weights=weights))
+            alive.append(next_gid)
+            next_gid += 1
+        else:
+            gid = int(alive[int(rng.integers(len(alive)))])
+            events.append(
+                MutationEvent(t_s=t, op="update", gid=gid, terms=terms, weights=weights)
+            )
+    return events
+
+
+def _serve_churn(args, corpus, enc, cfg: ServingConfig, qt, qw) -> None:
+    """Arrival + mutation replay over a generation-handled index.
+
+    Runs the deterministic :func:`replay_with_churn` loop on a
+    ``SimulatedClock``: queries and mutations interleave at their scheduled
+    instants, threshold compaction folds main+delta−tombstones and hot-swaps
+    the new generation between flushes, and the report carries the churn
+    ledger next to the usual queue metrics.
+    """
+    from repro.core.index_handle import IndexHandle
+    from repro.metrics.latency import SimulatedClock
+    from repro.serving.lifecycle import CompactionPolicy, Compactor, replay_with_churn
+
+    clock = SimulatedClock()
+    handle = IndexHandle.from_corpus(
+        enc.doc_idx, enc.term_idx, enc.weights, corpus.n_docs, enc.n_terms
+    )
+    server = AnytimeServer(handle, cfg, clock=clock)
+    queue = AdmissionQueue(
+        server,
+        batch_shapes=args.queue_shapes,
+        clock=clock,
+        safety_ms=args.queue_safety_ms,
+        max_wait_s=args.queue_max_wait_s,
+        degrade_rho=args.degrade_rho,
+    )
+    # endpoint up before the (slow) warmup so scrapers see the whole run
+    endpoint = _maybe_counters_endpoint(args, server, queue)
+    server.warmup(
+        jnp.asarray(qt[: min(8, qt.shape[0])]),
+        jnp.asarray(qw[: min(8, qw.shape[0])]),
+        batch_sizes=args.queue_shapes,
+    )
+    server.reset_stats()
+    rng = np.random.default_rng(args.seed)
+    n = args.queries
+    arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_qps, size=n))
+    order = rng.integers(0, qt.shape[0], size=n)
+    mutations = _mutation_schedule(
+        np.random.default_rng(args.seed + 1), corpus.n_docs, enc.n_terms,
+        float(arrivals[-1]), args.mutate_qps,
+    )
+    compactor = Compactor(
+        queue, handle, CompactionPolicy(max_delta_docs=args.compact_delta_docs)
+    )
+    completions, mutation_log = replay_with_churn(
+        queue,
+        handle,
+        arrivals.tolist(),
+        [qt[i] for i in order],
+        [qw[i] for i in order],
+        [args.request_deadline_ms] * n,
+        mutations,
+        compactor=compactor,
+    )
+    waits = summarize_latencies([c.wait_ms for c in completions])
+    by_rid = sorted(completions, key=lambda c: c.rid)
+    ids = np.stack([c.doc_ids for c in by_rid])
+    qrels = np.asarray(corpus.qrels)[order]
+    gens = [f.generation for f in queue.flush_log] or [handle.generation]
+    op_counts: dict = {}
+    for m in mutation_log:
+        op_counts[m["op"]] = op_counts.get(m["op"], 0) + 1
+    report = {
+        "model": args.model,
+        "mode": "admission-queue+churn",
+        "requests": n,
+        "completed": queue.n_completed,
+        "deadline_policy_violations": queue.n_violations,
+        "rr@10": round(mrr_at_k(ids, qrels, 10), 4),
+        "queue_wait_ms": {k: round(v, 3) for k, v in waits.row().items()},
+        "mutations": {
+            "total": len(mutation_log),
+            **dict(sorted(op_counts.items())),
+            "compactions": compactor.n_compactions,
+            "final_generation": handle.generation,
+            "flush_generation_span": [min(gens), max(gens)],
+            "pending_delta_docs": handle.delta_docs,
+            "tombstones": handle.tombstone_count,
+        },
+    }
+    if args.counters:
+        report["counters"] = _export_counters(server, queue)
+    print(json.dumps(report, indent=1))
+    _close_counters_endpoint(args, endpoint)
+
+
+def _maybe_counters_endpoint(args, server, queue=None):
+    """Start the localhost scrape endpoint when ``--counters-port`` is set.
+
+    Each ``GET /metrics`` derives the counter families fresh from the live
+    server/queue — the same scrape-time derivation ``--counters`` uses for
+    the final report, so the endpoint adds nothing to the hot path.
+    """
+    if args.counters_port is None:
+        return None
+    import sys
+    import threading
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    def render() -> str:
+        return _scrape_registry(server, queue).render()
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path not in ("/", "/metrics"):
+                self.send_error(404)
+                return
+            body = render().encode()
+            self.send_response(200)
+            self.send_header("Content-Type", "text/plain; version=0.0.4")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *_args):  # keep stdout JSON-clean
+            pass
+
+    httpd = ThreadingHTTPServer(("127.0.0.1", args.counters_port), Handler)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    sys.stderr.write(
+        f"counters endpoint: http://127.0.0.1:{httpd.server_address[1]}/metrics\n"
+    )
+    return httpd
+
+
+def _close_counters_endpoint(args, httpd) -> None:
+    if httpd is None:
+        return
+    if args.counters_linger_s > 0:
+        import time
+
+        time.sleep(args.counters_linger_s)
+    httpd.shutdown()
+    httpd.server_close()
+
+
+def _scrape_registry(server, queue=None):
+    from repro.serving.counters import CounterRegistry
+
+    registry = CounterRegistry()
+    if queue is not None:
+        queue.export_counters(registry)
+    server.export_counters(registry)
+    return registry
 
 
 def _export_counters(server, queue=None) -> dict:
@@ -301,12 +538,7 @@ def _export_counters(server, queue=None) -> dict:
     """
     import sys
 
-    from repro.serving.counters import CounterRegistry
-
-    registry = CounterRegistry()
-    if queue is not None:
-        queue.export_counters(registry)
-    server.export_counters(registry)
+    registry = _scrape_registry(server, queue)
     sys.stderr.write(registry.render())
     return registry.as_dict()
 

@@ -1,5 +1,6 @@
 """Anytime serving: deadline->rho control, batched streams, doc sharding,
-Lq-bucketed executables, and the continuous-batching admission queue."""
+Lq-bucketed executables, the continuous-batching admission queue, and the
+mutable-index lifecycle (tombstone-masked serve steps, hot-swap compaction)."""
 from repro.serving.bucketing import (  # noqa: F401
     bucket_for,
     bucketize_batch,
@@ -22,12 +23,24 @@ from repro.serving.queue import (  # noqa: F401
     FlushRecord,
     SurvivorPredictor,
 )
-from repro.serving.scheduler import AnytimeServer, ServingConfig, run_query_stream  # noqa: F401
+from repro.serving.lifecycle import (  # noqa: F401
+    CompactionPolicy,
+    Compactor,
+    MutationEvent,
+    replay_with_churn,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    AnytimeServer,
+    ServingConfig,
+    index_static_signature,
+    run_query_stream,
+)
 from repro.serving.sharded import (  # noqa: F401
     abstract_stacked_index,
     make_bucketed_serve_step,
     make_pod_serve_step,
     make_sharded_serve_step,
     shard_corpus,
+    shard_live_stack,
     stack_indexes,
 )

@@ -31,12 +31,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core.daat import max_blocks_per_term
 from repro.core.impact_index import ImpactIndex
+from repro.core.index_handle import search_delta_pool
+from repro.core.saat import max_segments_per_term
+from repro.core.topk import merge_pools_by_id
 from repro.metrics.latency import Clock
 from repro.serving.bucketing import sentinel_rows
 from repro.serving.counters import CounterRegistry
 from repro.serving.queue import AdmissionQueue, Completion
-from repro.serving.scheduler import AnytimeServer, ServingConfig
+from repro.serving.scheduler import AnytimeServer, ServingConfig, index_static_signature
 from repro.serving.sharded import make_pod_serve_step
 
 
@@ -106,6 +110,89 @@ class PodServer(AnytimeServer):
         self._steps: dict[Optional[int], object] = {}
         self._jitted: dict[Optional[int], object] = {}
         self.n_pod_dispatches: dict[tuple[str, Optional[int]], int] = {}
+        # index lifecycle at pod scale: a per-shard tombstone stack rides the
+        # live-masked serve step; the (corpus-global) delta pool is searched
+        # host-side and merged by gid AFTER the pod k-merge hands back this
+        # host's rows — the delta never crosses the ICI
+        self._live_stack: Optional[jax.Array] = None
+        self._delta_index: Optional[ImpactIndex] = None
+        self._delta_gids: Optional[jax.Array] = None
+
+    # --------------------------- index lifecycle ---------------------------
+
+    def set_lifecycle(
+        self,
+        *,
+        live_stack=None,
+        delta: Optional[ImpactIndex] = None,
+        delta_gids=None,
+        generation: Optional[int] = None,
+        decay: float = 0.5,
+    ):
+        """Install (or clear) this host's view of the mutable corpus.
+
+        ``live_stack`` is the per-shard tombstone bitmap
+        (:func:`repro.serving.sharded.shard_live_stack`); ``delta`` +
+        ``delta_gids`` the pending-docs segment with its local->gid map.
+        Toggling the live mask on or off switches between the masked and
+        unmasked serve-step programs, so the step cache is dropped on that
+        edge (same-program updates — new mask values, a changed delta — keep
+        every compiled step). A ``generation`` bump decays — never discards —
+        the calibration, exactly like :meth:`AnytimeServer.swap_index`.
+        """
+        if (delta is None) != (delta_gids is None):
+            raise ValueError("delta and delta_gids must be set (or cleared) together")
+        was_masked = self._live_stack is not None
+        self._live_stack = None if live_stack is None else jnp.asarray(live_stack, jnp.int32)
+        if (self._live_stack is not None) != was_masked:
+            self._steps.clear()
+            self._jitted.clear()
+        self._delta_index = delta
+        self._delta_gids = None if delta_gids is None else jnp.asarray(delta_gids, jnp.int32)
+        if generation is not None and generation != self.generation:
+            self.generation = int(generation)
+            self._decay_calibration(decay)
+
+    def swap_stack(
+        self,
+        index_stack: ImpactIndex,
+        *,
+        live_stack=None,
+        delta: Optional[ImpactIndex] = None,
+        delta_gids=None,
+        generation: Optional[int] = None,
+        decay: float = 0.5,
+        docs_per_shard: Optional[int] = None,
+        n_docs_total: Optional[int] = None,
+    ):
+        """Hot-swap a recompacted shard stack between admission-queue flushes.
+
+        Rebinds the stacked index and its build-time bounds, rebuilds the
+        per-shard rho ladder, drops the compiled step cache (the stack's
+        shapes/bounds are baked into every step), and installs the new
+        lifecycle state. A compaction usually changes the shard geometry
+        (docs fold out, the gid space grows), so pass the new
+        ``docs_per_shard`` / ``n_docs_total`` from the re-shard alongside the
+        stack. Calibration survives decayed, not discarded.
+        """
+        if docs_per_shard is not None:
+            self.docs_per_shard = int(docs_per_shard)
+        if n_docs_total is not None:
+            self.n_docs_total = int(n_docs_total)
+        self.index = index_stack
+        self.max_segs = max_segments_per_term(index_stack)
+        self.max_bm = max_blocks_per_term(index_stack)
+        exact = int(index_stack.doc_ids.shape[1])
+        self.rho_ladder = tuple(
+            sorted({min(r, exact) for r in self.cfg.rho_ladder} | {exact})
+        )
+        self._steps.clear()
+        self._jitted.clear()
+        gen = generation if generation is not None else self.generation + 1
+        self.set_lifecycle(
+            live_stack=live_stack, delta=delta, delta_gids=delta_gids,
+            generation=gen, decay=decay,
+        )
 
     # ------------------------- pod step plumbing ---------------------------
 
@@ -136,6 +223,7 @@ class PodServer(AnytimeServer):
                 daat_fused_chunk=cfg.daat_fused_chunk,
                 daat_trips_per_launch=cfg.daat_trips_per_launch,
                 n_docs_total=self.n_docs_total,
+                live_masked=self._live_stack is not None,
             )
             self._steps[key] = serve
             # ImpactIndex is a registered-dataclass pytree: the stack rides
@@ -152,14 +240,34 @@ class PodServer(AnytimeServer):
         gqt, gqw = sentinel_rows(self.n_hosts * B, width, self.index.n_terms)
         gqt[self.host * B : (self.host + 1) * B] = qt
         gqw[self.host * B : (self.host + 1) * B] = qw
-        scores, ids = self._jitted[key](
-            self.index, jnp.asarray(gqt, jnp.int32), jnp.asarray(gqw, jnp.float32)
-        )
+        if self._live_stack is not None:
+            scores, ids = self._jitted[key](
+                self.index, jnp.asarray(gqt, jnp.int32), jnp.asarray(gqw, jnp.float32),
+                live_stack=self._live_stack,
+            )
+        else:
+            scores, ids = self._jitted[key](
+                self.index, jnp.asarray(gqt, jnp.int32), jnp.asarray(gqw, jnp.float32)
+            )
         self.n_pod_dispatches[(self.cfg.engine, key)] = (
             self.n_pod_dispatches.get((self.cfg.engine, key), 0) + 1
         )
         lo, hi = self.host * B, (self.host + 1) * B
-        return PodResult(scores=scores[lo:hi], doc_ids=ids[lo:hi])
+        scores, ids = scores[lo:hi], ids[lo:hi]
+        if self._delta_index is not None:
+            # host-local freshness merge: the pending-docs pool is searched
+            # exactly on this host (it never crosses the ICI) and merged by
+            # gid with the pod answer — same canonical merge the single-host
+            # IndexHandle uses, so ties still resolve ascending-gid
+            ds, dlocal = search_delta_pool(
+                self._delta_index, jnp.asarray(qt, jnp.int32),
+                jnp.asarray(qw, jnp.float32), k=self.cfg.k,
+                engine=self.cfg.engine, scatter_impl=self.cfg.scatter_impl,
+                fused_topk=self.cfg.fused_topk,
+            )
+            dgids = self._delta_gids[dlocal]
+            scores, ids = merge_pools_by_id(scores, ids, ds, dgids, self.cfg.k)
+        return PodResult(scores=scores, doc_ids=ids)
 
     # ------------------------ AnytimeServer overrides ----------------------
 
@@ -182,10 +290,18 @@ class PodServer(AnytimeServer):
     ) -> tuple:
         # the pod program differs from the single-host engine at equal
         # engine statics (collectives, shard layout), and its batch is
-        # hosts * B wide — fold the pod identity into the key
+        # hosts * B wide — fold the pod identity AND the lifecycle state's
+        # static surface (mask presence, delta shapes) into the key; the
+        # generation counter itself stays out for the same reason as in
+        # AnytimeServer.executable_key
         base = super().executable_key(lq_bucket, batch_size, rho)
+        lifecycle = (
+            "live" if self._live_stack is not None else None,
+            None if self._delta_index is None
+            else index_static_signature(self._delta_index),
+        )
         return ("pod", self.n_hosts, int(self.mesh.shape["model"]),
-                self.docs_per_shard, self.n_docs_total) + base
+                self.docs_per_shard, self.n_docs_total) + lifecycle + base
 
     # ----------------------------- counters --------------------------------
 
@@ -263,6 +379,24 @@ class PodFrontEnd:
 
     def pending(self) -> int:
         return sum(q.pending() for q in self.queues)
+
+    def set_lifecycle(self, **kwargs):
+        """Install lifecycle state (tombstone stack / delta pool) on every
+        host's server; see :meth:`PodServer.set_lifecycle`."""
+        for srv in self.servers:
+            srv.set_lifecycle(**kwargs)
+        if kwargs.get("generation") is not None:
+            for q in self.queues:
+                q.survivors.decay(kwargs.get("decay", 0.5))
+
+    def swap_stack(self, index_stack: ImpactIndex, **kwargs):
+        """Hot-swap a recompacted shard stack on every host between flushes;
+        pending requests ride (see :meth:`AdmissionQueue.swap_index` for the
+        zero-loss argument — the same one applies per host queue)."""
+        for srv in self.servers:
+            srv.swap_stack(index_stack, **kwargs)
+        for q in self.queues:
+            q.survivors.decay(kwargs.get("decay", 0.5))
 
     def export_counters(self, registry: Optional[CounterRegistry] = None) -> CounterRegistry:
         reg = registry if registry is not None else CounterRegistry()

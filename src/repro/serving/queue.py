@@ -109,13 +109,31 @@ class SurvivorPredictor:
         self.alpha = alpha
         self._by_lq: dict[int, float] = {}
         self._global: Optional[float] = None
+        # per-key trust in [0, 1]: 1.0 is the steady state (observe smooths
+        # at exactly alpha). A hot swap decays trust instead of discarding
+        # the EMA — survivor counts over the compacted corpus are close to
+        # the pre-swap ones (the live docs are the same), so the old value
+        # is the right prior, it just re-converges faster.
+        self._conf: dict[int, float] = {}
+        self._gconf: float = 1.0
 
     def observe(self, lq_eff: int, survivors: float):
         s = float(survivors)
         a = self.alpha
+        conf = self._conf.get(lq_eff, 1.0)
+        a_eff = a + (1 - a) * (1 - conf)
         old = self._by_lq.get(lq_eff)
-        self._by_lq[lq_eff] = s if old is None else (1 - a) * old + a * s
-        self._global = s if self._global is None else (1 - a) * self._global + a * s
+        self._by_lq[lq_eff] = s if old is None else (1 - a_eff) * old + a_eff * s
+        self._conf[lq_eff] = 1 - (1 - conf) * (1 - a)
+        g_eff = a + (1 - a) * (1 - self._gconf)
+        self._global = s if self._global is None else (1 - g_eff) * self._global + g_eff * s
+        self._gconf = 1 - (1 - self._gconf) * (1 - a)
+
+    def decay(self, factor: float = 0.5):
+        """Generation bump: keep every EMA value, shrink its trust."""
+        for key in self._by_lq:
+            self._conf[key] = self._conf.get(key, 1.0) * factor
+        self._gconf *= factor
 
     def predict(self, lq_eff: int) -> float:
         v = self._by_lq.get(lq_eff)
@@ -180,6 +198,10 @@ class FlushRecord:
     # immediately, and the miss is admission infeasibility, not a scheduling
     # failure — counted separately from `violation`
     infeasible: bool
+    # index lifecycle generation the flush was served at (0 for an immutable
+    # server). Monotone non-decreasing across flush_log: swaps happen only
+    # between flushes, never under one — the hot-swap tests pin this.
+    generation: int = 0
 
 
 class AdmissionQueue:
@@ -309,6 +331,24 @@ class AdmissionQueue:
 
     def pending(self) -> int:
         return sum(len(q) for q in self._pending.values())
+
+    # --------------------------- index lifecycle ---------------------------
+
+    def swap_index(self, handle=None, *, decay: float = 0.5):
+        """Hot-swap the serving index between flushes; pending requests ride.
+
+        Delegates to :meth:`AnytimeServer.swap_index` (rebind main-segment
+        statics, bump generation, decay — never discard — the service-time
+        calibration) and applies the same decay to the survivor predictor.
+        Pending requests are host-side rows keyed by Lq bucket, a grid the
+        swap cannot change (the vocabulary is fixed for the handle's
+        lifetime), so a swap loses, duplicates, and reorders **zero**
+        requests: everything admitted before the swap flushes after it,
+        against the new generation — the invariant the hot-swap replay tests
+        pin via ``FlushRecord.generation`` monotonicity + rid accounting.
+        """
+        self.server.swap_index(handle, decay=decay)
+        self.survivors.decay(decay)
 
     # ----------------------------- flush policy ----------------------------
 
@@ -466,6 +506,7 @@ class AdmissionQueue:
                 reason=reason,
                 violation=bool(now > due + _EPS_S) and not infeasible and reason != "drain",
                 infeasible=infeasible,
+                generation=getattr(self.server, "generation", 0),
             )
         )
 

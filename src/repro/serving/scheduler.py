@@ -46,12 +46,30 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.daat import daat_search_batched, max_blocks_per_term
-from repro.core.impact_index import ImpactIndex
+from repro.core.impact_index import META_FIELDS, ImpactIndex
+from repro.core.index_handle import IndexHandle
 from repro.core.saat import max_segments_per_term, saat_search
 from repro.metrics.latency import Clock, LatencyStats, SystemClock, summarize_latencies
 from repro.serving.bucketing import bucketize_batch, normalize_buckets, pad_to_width
 
 _UNSET = object()  # pick_rho sentinel: "use cfg.deadline_ms"
+
+
+def index_static_signature(ix: ImpactIndex) -> tuple:
+    """Hashable shape-level signature of one ``ImpactIndex`` segment.
+
+    Meta fields plus every array field's shape — exactly the jit-visible
+    surface of the index pytree (array *values* are runtime operands and do
+    not fork compiled programs). Used by ``AnytimeServer.executable_key``
+    and the pod front end to fold segment identity into executable keys.
+    """
+    meta = tuple(getattr(ix, f) for f in META_FIELDS)
+    shapes = tuple(
+        tuple(np.shape(getattr(ix, f.name)))
+        for f in dataclasses.fields(ix)
+        if f.name not in META_FIELDS
+    )
+    return meta + shapes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,12 +130,27 @@ class _CostModel:
     alpha: float
     clock: Clock = dataclasses.field(default_factory=SystemClock)
     last_update_s: dict = dataclasses.field(default_factory=dict)
+    # per-level confidence in [0, 1]: 1.0 = the EMA is fully trusted (the
+    # steady state; update() then smooths at exactly `alpha`). A hot swap
+    # decays confidence instead of discarding the value — the old measurement
+    # is still the best available prior for the new generation's executable,
+    # but the next observations blend in faster (effective alpha rises toward
+    # 1 as confidence falls) until confidence recovers.
+    confidence: dict = dataclasses.field(default_factory=dict)
 
     def update(self, rho: int, elapsed_us: float):
         per = elapsed_us / max(rho / 1e6, 1e-9)
+        conf = self.confidence.get(rho, 1.0)
+        a = self.alpha + (1.0 - self.alpha) * (1.0 - conf)
         old = self.us_per_mpost.get(rho)
-        self.us_per_mpost[rho] = per if old is None else (1 - self.alpha) * old + self.alpha * per
+        self.us_per_mpost[rho] = per if old is None else (1 - a) * old + a * per
+        self.confidence[rho] = 1.0 - (1.0 - conf) * (1.0 - self.alpha)
         self.last_update_s[rho] = self.clock.now()
+
+    def decay(self, factor: float):
+        """Generation bump: keep every calibrated value, shrink its trust."""
+        for rho in self.us_per_mpost:
+            self.confidence[rho] = self.confidence.get(rho, 1.0) * factor
 
     def is_calibrated(self, rho: int) -> bool:
         return rho in self.us_per_mpost
@@ -147,15 +180,27 @@ class _CostModel:
 
 
 class AnytimeServer:
-    """Batched SAAT serving over one impact index.
+    """Batched SAAT serving over one impact index — or a mutable handle.
 
     Every ``search_batch`` call dispatches the natively batched engine; the
     per-rho executables are compiled once (``warmup``) and reused. The plan
     bound ``max_segs`` comes from index build-time metadata, so constructing
     a server never blocks on a device sync.
+
+    Passing an :class:`repro.core.index_handle.IndexHandle` makes the server
+    lifecycle-aware: dispatches serve (main − tombstones) ∪ delta through the
+    handle's merged search (rho budgets the MAIN segment only; the delta is
+    tiny and always exact), and :meth:`swap_index` hot-swaps to a freshly
+    compacted main between admission-queue flushes — bumping ``generation``
+    and *decaying* (never discarding) the service-time calibration.
     """
 
-    def __init__(self, index: ImpactIndex, cfg: ServingConfig, clock: Optional[Clock] = None):
+    def __init__(
+        self,
+        index: ImpactIndex | IndexHandle,
+        cfg: ServingConfig,
+        clock: Optional[Clock] = None,
+    ):
         if cfg.engine not in ("saat", "daat"):
             raise ValueError(f"unknown engine {cfg.engine!r}")
         if cfg.daat_fused_chunk and not cfg.daat_use_kernels:
@@ -173,12 +218,14 @@ class AnytimeServer:
                 "chunk_step kernel; set daat_fused_chunk=True (and "
                 "daat_use_kernels=True)"
             )
-        self.index = index
+        self.handle: Optional[IndexHandle] = None
+        if isinstance(index, IndexHandle):
+            self.handle = index
+        else:
+            self.index = index
         self.cfg = cfg
         self.clock: Clock = clock if clock is not None else SystemClock()
-        # both bounds come from index build-time metadata — no device sync
-        self.max_segs = max_segments_per_term(index)
-        self.max_bm = max_blocks_per_term(index)
+        self.generation = self.handle.generation if self.handle is not None else 0
         self._latencies_ms: list[float] = []
         self._rhos: list[int] = []
         self._cost = _CostModel({}, cfg.ema_alpha, clock=self.clock)
@@ -193,13 +240,70 @@ class AnytimeServer:
         # and keys with rho=None. SAAT falls back to the per-query rho model
         # only when no shape in the (engine, bucket, rho) lane is calibrated.
         self._bucket_ms: dict[tuple[str, int, int, Optional[int]], float] = {}
+        # per-key calibration confidence (1.0 = steady state; see _CostModel)
+        self._bucket_conf: dict[tuple[str, int, int, Optional[int]], float] = {}
         self.lq_buckets = (
             normalize_buckets(cfg.lq_buckets) if cfg.lq_buckets is not None else None
         )
+        self._bind_main_segment()
+
+    def _bind_main_segment(self):
+        """(Re)derive everything that depends on the current main segment:
+        the plan bounds (build-time metadata — no device sync) and the rho
+        ladder cap (the exact level IS the main segment's posting count).
+        Called at construction and on every :meth:`swap_index`.
+        """
+        index = self.handle.main if self.handle is not None else self.index
+        self.index = index
+        self.max_segs = max_segments_per_term(index)
+        self.max_bm = max_blocks_per_term(index)
         # cap the ladder at the index's own posting count (exact level)
         exact = index.n_postings
-        ladder = sorted({min(r, exact) for r in cfg.rho_ladder} | {exact})
+        ladder = sorted({min(r, exact) for r in self.cfg.rho_ladder} | {exact})
         self.rho_ladder = tuple(ladder)
+
+    # -------------------------- index lifecycle ----------------------------
+
+    def swap_index(self, handle: Optional[IndexHandle] = None, *, decay: float = 0.5):
+        """Hot-swap the serving index to the handle's current main segment.
+
+        Called between admission-queue flushes after a background
+        :meth:`~repro.core.index_handle.IndexHandle.compact` (or to adopt a
+        replacement handle). Rebinds the main-segment statics (plan bounds,
+        rho-ladder cap) and takes the handle's ``generation``.
+
+        Calibration survives the swap **decayed, not discarded**: every
+        service-time EMA keyed by shape — and every rho cost-model level —
+        keeps its value but has its confidence multiplied by ``decay``, so the
+        next observation of each executable blends in faster (effective alpha
+        rises toward 1 as confidence falls) while the queue's flush policy
+        still has a usable prediction from the first post-swap request.
+        Resetting instead would re-open the cold-start window on every
+        compaction — ``predict_service_ms`` returning 0.0 makes the queue
+        flush exactly at the deadline, which a warm system has no reason to
+        regress to.
+        """
+        if handle is not None:
+            self.handle = handle
+        if self.handle is None:
+            raise ValueError(
+                "swap_index needs a handle-backed server; construct the "
+                "AnytimeServer with an IndexHandle"
+            )
+        if not 0.0 <= decay <= 1.0:
+            raise ValueError(f"decay must be in [0, 1], got {decay}")
+        self._bind_main_segment()
+        self.generation = self.handle.generation
+        self._decay_calibration(decay)
+
+    def _decay_calibration(self, decay: float):
+        """Shrink trust in every calibrated value without discarding it
+        (service-time EMAs by shape, and the per-rho cost model)."""
+        if not 0.0 <= decay <= 1.0:
+            raise ValueError(f"decay must be in [0, 1], got {decay}")
+        for key in self._bucket_ms:
+            self._bucket_conf[key] = self._bucket_conf.get(key, 1.0) * decay
+        self._cost.decay(decay)
 
     # -------------------------- rho selection -----------------------------
 
@@ -321,8 +425,14 @@ class AnytimeServer:
     ):
         key = (self.cfg.engine, int(lq_bucket), int(batch_shape), self._rho_key(rho))
         old = self._bucket_ms.get(key)
-        a = self.cfg.ema_alpha
+        conf = self._bucket_conf.get(key, 1.0)
+        # confidence-weighted smoothing: at full confidence (no swap since the
+        # last observation settled) this is exactly cfg.ema_alpha; after a
+        # generation bump the decayed confidence raises the effective alpha so
+        # the stale-but-kept value re-converges quickly
+        a = self.cfg.ema_alpha + (1.0 - self.cfg.ema_alpha) * (1.0 - conf)
         self._bucket_ms[key] = batch_ms if old is None else (1 - a) * old + a * batch_ms
+        self._bucket_conf[key] = 1.0 - (1.0 - conf) * (1.0 - self.cfg.ema_alpha)
 
     # ----------------------------- serving --------------------------------
 
@@ -350,7 +460,14 @@ class AnytimeServer:
         callable at each (Lq bucket, B) shape, so serving MUST route through
         it: anything dispatched some other way is invisible to the purity
         gate.
+
+        Handle-backed servers dispatch the handle's merged search (main with
+        tombstone mask + exact delta + canonical merge); the handle's current
+        segment arrays are closed over at call time, so every dispatch sees
+        the latest mutations with no server-side bookkeeping.
         """
+        if self.handle is not None:
+            return self._handle_engine(rho)
         if self.cfg.engine == "daat":
             return self._daat_search
         if rho is None:
@@ -365,6 +482,33 @@ class AnytimeServer:
             fused_topk=self.cfg.fused_topk,
         )
 
+    def _handle_engine(self, rho: Optional[int] = None):
+        """Merged lifecycle dispatch: ``(qt, qw) -> HandleResult``.
+
+        rho budgets the MAIN segment only — the delta segment is tiny and
+        always searched exactly, so the anytime knob trades effectiveness
+        on the bulk corpus without ever degrading freshly written docs.
+        """
+        cfg = self.cfg
+        if cfg.engine == "daat":
+            return functools.partial(
+                self.handle.daat_search,
+                k=cfg.k,
+                est_blocks=cfg.daat_est_blocks,
+                block_budget=cfg.daat_block_budget,
+                exact=cfg.daat_exact,
+                use_kernels=cfg.daat_use_kernels,
+                fused_chunk=cfg.daat_fused_chunk,
+                trips_per_launch=cfg.daat_trips_per_launch,
+            )
+        return functools.partial(
+            self.handle.saat_search,
+            k=cfg.k,
+            rho=self.rho_ladder[-1] if rho is None else rho,
+            scatter_impl=cfg.scatter_impl,
+            fused_topk=cfg.fused_topk,
+        )
+
     def executable_key(
         self, lq_bucket: int, batch_size: int, rho: Optional[int] = None
     ) -> tuple:
@@ -374,8 +518,17 @@ class AnytimeServer:
         **one executable per key**: equal keys must hit the same compiled
         program (never a silent retrace), distinct keys must be distinct
         programs. The tuple mirrors the engines' ``SAAT_STATICS`` /
-        ``DAAT_STATICS`` jit surface plus the batch shape; the analysis lint
-        verifies the invariant by tracing every key twice.
+        ``DAAT_STATICS`` jit surface plus the batch shape — plus the **index
+        static signature**: the segments' meta fields and array shapes are
+        part of the jit cache key (the index rides the trace as pytree
+        leaves whose treedef/avals are shape-derived), so a delta growing a
+        block or a compaction changing the main pad width forks the compiled
+        program and must fork the key. The lifecycle ``generation`` counter
+        is deliberately NOT in the key: two generations with identical
+        signatures trace to the identical program (array *values* are
+        runtime inputs), so folding them into one key is what keeps the
+        lint's key <-> fingerprint bijection true across hot swaps. The
+        analysis lint verifies the invariant by tracing every key twice.
         """
         cfg = self.cfg
         if cfg.engine == "daat":
@@ -389,7 +542,26 @@ class AnytimeServer:
                 "saat", cfg.k, self.rho_ladder[-1] if rho is None else rho,
                 self.max_segs, cfg.scatter_impl, cfg.fused_topk,
             )
-        return statics + (int(lq_bucket), int(batch_size))
+        return statics + self._index_signature() + (int(lq_bucket), int(batch_size))
+
+    def _index_signature(self) -> tuple:
+        """Static (shape-level) signature of the index the dispatch closes over.
+
+        One entry per segment: the ``ImpactIndex`` meta fields plus every
+        array field's shape — exactly the jit-visible surface of the index
+        pytree. Handle-backed servers contribute the main segment, a marker
+        for the always-present tombstone mask, and the delta segment (or
+        ``None`` when empty: the merge is skipped, a genuinely different
+        program).
+        """
+        if self.handle is None:
+            return (index_static_signature(self.index),)
+        d = self.handle.delta
+        return (
+            index_static_signature(self.handle.main),
+            "live",
+            None if d is None else index_static_signature(d),
+        )
 
     def _bucketize(self, q_terms, q_weights) -> tuple[jax.Array, jax.Array, int]:
         """Pad the batch to its Lq bucket and canonicalize dtypes.
@@ -420,7 +592,7 @@ class AnytimeServer:
                 )
             t0 = self.clock.now()  # bucketize is service cost: keep it timed
             q_terms, q_weights, bucket = self._bucketize(q_terms, q_weights)
-            res = self._daat_search(q_terms, q_weights)
+            res = self.engine_fn()(q_terms, q_weights)
             jax.block_until_ready(res.scores)
             elapsed = (self.clock.now() - t0) * 1e3
             per_query = elapsed / q_terms.shape[0]
@@ -480,7 +652,7 @@ class AnytimeServer:
                 if self.cfg.engine == "daat":
                     for _ in range(repeats):
                         t0 = self.clock.now()
-                        jax.block_until_ready(self._daat_search(qt, qw).scores)
+                        jax.block_until_ready(self.engine_fn()(qt, qw).scores)
                         batch_ms = (self.clock.now() - t0) * 1e3
                     self._observe_bucket_ms(bucket, B, batch_ms)
                     continue
@@ -532,6 +704,21 @@ class AnytimeServer:
                 engine=eng, bucket=str(bucket), shape=str(shape),
                 rho="none" if rho is None else str(rho),
             ).set(ms)
+        # index lifecycle: generation is meaningful (0) even for an immutable
+        # server; tombstone/delta families only exist on a handle-backed one
+        reg.gauge(
+            "repro_index_generation",
+            "Index lifecycle generation (bumped by each hot-swapped compaction)",
+        ).labels(engine=self.cfg.engine).set(self.generation)
+        if self.handle is not None:
+            reg.gauge(
+                "repro_index_tombstones",
+                "Deleted/updated docs masked -inf in the main segment",
+            ).labels(engine=self.cfg.engine).set(self.handle.tombstone_count)
+            reg.gauge(
+                "repro_index_delta_docs",
+                "Docs pending in the append-only delta segment",
+            ).labels(engine=self.cfg.engine).set(self.handle.delta_docs)
         return reg
 
 

@@ -54,10 +54,16 @@ def shard_corpus(
     """Split a COO corpus into per-shard impact indexes (equal doc ranges).
 
     All shards quantize against the GLOBAL max weight so their impact grids
-    (and therefore merged scores) are identical to a global index's.
+    (and therefore merged scores) are identical to a global index's. Pass an
+    explicit ``quant_max_weight`` to pin a different grid — re-sharding a
+    compacted :class:`~repro.core.index_handle.IndexHandle` must reuse the
+    handle's pinned grid, not re-derive one from the folded (mid-step)
+    weights' max.
     """
     docs_per_shard = -(-n_docs // n_shards)
-    global_max = float(np.max(weights)) if len(weights) else 1.0
+    global_max = build_kwargs.pop(
+        "quant_max_weight", float(np.max(weights)) if len(weights) else 1.0
+    )
     shards = []
     for s in range(n_shards):
         lo, hi = s * docs_per_shard, min((s + 1) * docs_per_shard, n_docs)
@@ -76,6 +82,41 @@ def _pad_cat(arrs: Sequence[np.ndarray], fill) -> np.ndarray:
     out = np.full((len(arrs), n) + arrs[0].shape[1:], fill, dtype=arrs[0].dtype)
     for i, a in enumerate(arrs):
         out[i, : a.shape[0]] = a
+    return out
+
+
+def shard_live_stack(
+    live_full: np.ndarray,
+    *,
+    n_shards: int,
+    docs_per_shard: int,
+    n_docs_pad: int,
+) -> np.ndarray:
+    """Slice a global live bitmap into the per-shard tombstone stack.
+
+    ``live_full`` is the corpus-wide i32/bool bitmap over global doc ids
+    (e.g. ``IndexHandle.live_mask_full()``); the result is
+    ``i32[n_shards, n_docs_pad]`` — shard ``s`` holds gids
+    ``[s * docs_per_shard, (s+1) * docs_per_shard)``, trailing pad slots
+    (block padding, and the short final shard's tail) forced dead so a pad
+    doc can never out-compete a real one inside the engines' masked scans.
+    ``n_docs_pad`` is the per-shard DOC pad — the engines' accumulator
+    length, i.e. ``index_stack.doc_n_terms.shape[1]`` of the stacked index
+    (NOT the posting-store width).
+    Partition it over the same axes as the index stack and hand it to a
+    ``live_masked=True`` serve step.
+    """
+    if n_docs_pad < docs_per_shard:
+        raise ValueError(
+            f"n_docs_pad={n_docs_pad} smaller than docs_per_shard={docs_per_shard}"
+        )
+    live_full = np.asarray(live_full).astype(np.int32).ravel()
+    out = np.zeros((n_shards, n_docs_pad), np.int32)
+    for s in range(n_shards):
+        lo = s * docs_per_shard
+        hi = min(lo + docs_per_shard, live_full.shape[0])
+        if hi > lo:
+            out[s, : hi - lo] = live_full[lo:hi]
     return out
 
 
@@ -196,7 +237,9 @@ def _validate_engine_cfg(
         )
 
 
-def _scan_local_shards(idx_data: dict, qt, qw, *, shard_ord0, st: dict, meta_cell: dict):
+def _scan_local_shards(
+    idx_data: dict, qt, qw, *, shard_ord0, st: dict, meta_cell: dict, live=None
+):
     """Search every doc shard resident on this rank; merge their k-pools.
 
     Runs inside ``shard_map``. ``shard_ord0`` is this rank's flat position in
@@ -206,8 +249,13 @@ def _scan_local_shards(idx_data: dict, qt, qw, *, shard_ord0, st: dict, meta_cel
     ``shard_ord0 * n_local + j``. Pad documents (block-padding slots, and —
     on a short final shard — ids past the corpus end) are demoted to
     ``(NEG_INF, INT32_MAX)`` *before* globalization so they can never alias
-    a real doc id in a later shard's range. Returns the rank's merged
-    ``(scores, gids)`` candidate pool, ``[B, k]``.
+    a real doc id in a later shard's range. ``live`` is the optional
+    per-shard tombstone stack ``i32[n_local, n_docs_pad]`` (same leading
+    order as ``idx_data``'s shard rows): shard ``j``'s row
+    rides the engines' ``live_mask`` paths, so deleted docs score ``-inf``
+    inside the budgeted scan itself (never reaching the pool) rather than
+    being filtered after the fact. Returns the rank's merged ``(scores,
+    gids)`` candidate pool, ``[B, k]``.
     """
     n_local = jax.tree.leaves(idx_data)[0].shape[0]
     docs_per_shard = st["docs_per_shard"]
@@ -217,6 +265,7 @@ def _scan_local_shards(idx_data: dict, qt, qw, *, shard_ord0, st: dict, meta_cel
         index = ImpactIndex(
             **local, **_static_meta_from(local, docs_per_shard, meta_cell)
         )
+        lv = live[j] if live is not None else None
         if st["engine"] == "daat":
             res = daat_search_batched(
                 index,
@@ -230,6 +279,7 @@ def _scan_local_shards(idx_data: dict, qt, qw, *, shard_ord0, st: dict, meta_cel
                 use_kernels=st["daat_use_kernels"],
                 fused_chunk=st["daat_fused_chunk"],
                 trips_per_launch=st["daat_trips_per_launch"],
+                live_mask=lv,
             )
         else:
             res = saat_search(
@@ -241,15 +291,16 @@ def _scan_local_shards(idx_data: dict, qt, qw, *, shard_ord0, st: dict, meta_cel
                 max_segs_per_term=st["max_segs_per_term"],
                 scatter_impl=st["scatter_impl"],
                 fused_topk=st["fused_topk"],
+                live_mask=lv,
             )
         shard_ord = shard_ord0 * n_local + j
         if st["n_docs_total"] is None:
-            live = jnp.int32(docs_per_shard)
+            n_live = jnp.int32(docs_per_shard)
         else:
-            live = jnp.clip(
+            n_live = jnp.clip(
                 st["n_docs_total"] - shard_ord * docs_per_shard, 0, docs_per_shard
             ).astype(jnp.int32)
-        pad = res.doc_ids >= live
+        pad = res.doc_ids >= n_live
         scores = jnp.where(pad, NEG_INF, res.scores)
         gids = jnp.where(
             pad,
@@ -281,6 +332,7 @@ def make_sharded_serve_step(
     daat_fused_chunk: bool = False,
     daat_trips_per_launch: int = 1,
     n_docs_total: Optional[int] = None,
+    live_masked: bool = False,
 ):
     """Builds ``serve(index_stack, q_terms, q_weights) -> (scores, ids)``.
 
@@ -313,6 +365,17 @@ def make_sharded_serve_step(
     local ids are globalized, so a pad doc can never alias a real document in
     a later shard's id range. Omitting it still masks the per-shard block
     padding (ids ``>= docs_per_shard``) but assumes every shard is full.
+
+    ``live_masked=True`` builds the *lifecycle* variant of the step: ``serve``
+    then requires a ``live_stack`` — the per-shard tombstone bitmap
+    ``i32[n_shards, n_docs_pad]`` (see :func:`shard_live_stack`), laid out in
+    the SAME leading shard order as the index stack and placed on the mesh
+    the same way — and every rank threads its shard's row through the
+    engines' ``live_mask`` paths. The flag is a
+    constructor static (mirrored in ``serve.statics``) because masked and
+    unmasked dispatches are genuinely different traced programs: one serve
+    step is always exactly one program per batch shape, which is the
+    invariant the hot-path lint keys on.
     """
     _validate_engine_cfg(
         engine, max_bm_per_term, daat_use_kernels, daat_fused_chunk,
@@ -321,7 +384,15 @@ def make_sharded_serve_step(
     axes = mesh_axes(mesh)
     dp = axes.data if len(axes.data) > 1 else axes.data[0]
     idx_specs = jax.tree.map(lambda _: P("model"), _index_data_template())
-    in_specs = (idx_specs, P(dp, None), P(dp, None))
+    if live_masked:
+        # The live stack rides with the index stack: the idx specs replicate
+        # the stacked arrays onto every rank (each rank scans all local rows
+        # and globalizes by its own shard_ord), so the live rows must be
+        # replicated too — a partitioned spec would desynchronize live[j]
+        # from idx_data[...][j].
+        in_specs = (idx_specs, P(), P(dp, None), P(dp, None))
+    else:
+        in_specs = (idx_specs, P(dp, None), P(dp, None))
     out_specs = (P(dp, None), P(dp, None))
 
     # Real static metadata of the caller's index_stack (block_size, quant
@@ -344,6 +415,7 @@ def make_sharded_serve_step(
         max_bm_per_term=max_bm_per_term, daat_exact=daat_exact,
         daat_use_kernels=daat_use_kernels, daat_fused_chunk=daat_fused_chunk,
         daat_trips_per_launch=daat_trips_per_launch, n_docs_total=n_docs_total,
+        live_masked=live_masked,
     )
 
     def body(idx_data: dict, qt, qw):
@@ -356,9 +428,20 @@ def make_sharded_serve_step(
         )
         return canonical_topk_merge(pool_s, pool_i, k, "model")
 
-    sm = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    def body_live(idx_data: dict, live, qt, qw):
+        rank = jax.lax.axis_index("model").astype(jnp.int32)
+        pool_s, pool_i = _scan_local_shards(
+            idx_data, qt, qw, shard_ord0=rank, st=statics, meta_cell=meta_cell,
+            live=live,
+        )
+        return canonical_topk_merge(pool_s, pool_i, k, "model")
 
-    def serve(index_stack: ImpactIndex, q_terms, q_weights):
+    sm = shard_map(
+        body_live if live_masked else body,
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False,
+    )
+
+    def serve(index_stack: ImpactIndex, q_terms, q_weights, live_stack=None):
         meta_cell.clear()
         meta_cell.update(
             block_size=index_stack.block_size,
@@ -368,6 +451,18 @@ def make_sharded_serve_step(
             max_bm=index_stack.max_bm,
         )
         data = _index_data_dict(index_stack)
+        if live_masked:
+            if live_stack is None:
+                raise ValueError(
+                    "this serve step was built live_masked=True; pass the "
+                    "per-shard live_stack (see shard_live_stack)"
+                )
+            return sm(data, jnp.asarray(live_stack, jnp.int32), q_terms, q_weights)
+        if live_stack is not None:
+            raise ValueError(
+                "live_stack passed to a serve step built without "
+                "live_masked=True; rebuild the step with live_masked=True"
+            )
         return sm(data, q_terms, q_weights)
 
     serve.statics = statics
@@ -392,6 +487,7 @@ def make_pod_serve_step(
     daat_fused_chunk: bool = False,
     daat_trips_per_launch: int = 1,
     n_docs_total: Optional[int] = None,
+    live_masked: bool = False,
 ):
     """Multi-host pod serve: every host's query block, every rank's shard.
 
@@ -440,7 +536,13 @@ def make_pod_serve_step(
     dp = data_axes if len(data_axes) > 1 else data_axes[0]
     shard_axes = data_axes + ("model",)
     idx_specs = jax.tree.map(lambda _: P(shard_axes), _index_data_template())
-    in_specs = (idx_specs, P(dp, None), P(dp, None))
+    if live_masked:
+        # the tombstone stack rides replicated exactly like the index stack
+        # (idx specs replicate the stacked rows onto every rank), so
+        # rank-local shard j always meets its own mask row live[j]
+        in_specs = (idx_specs, P(), P(dp, None), P(dp, None))
+    else:
+        in_specs = (idx_specs, P(dp, None), P(dp, None))
     out_specs = (P(dp, None), P(dp, None))
     data_sizes = tuple(int(mesh.shape[name]) for name in data_axes)
     n_hosts = 1
@@ -462,9 +564,10 @@ def make_pod_serve_step(
         # is the serving counter the host side reports per dispatch
         pod_axes=shard_axes, pod_hosts=n_hosts, pod_model_ranks=n_model,
         merge_fanin=n_hosts * n_model * k,
+        live_masked=live_masked,
     )
 
-    def body(idx_data: dict, qt, qw):
+    def body(idx_data: dict, qt, qw, live=None):
         # flat position of this rank's host in the data group — the same
         # major-to-minor order P(shard_axes) partitions the shard axis in,
         # so host blocks, shard ranges, and gather order all agree
@@ -478,6 +581,7 @@ def make_pod_serve_step(
         pool_s, pool_i = _scan_local_shards(
             idx_data, qt_g, qw_g,
             shard_ord0=drank * n_model + mrank, st=statics, meta_cell=meta_cell,
+            live=live,
         )
         ms, mi = canonical_topk_merge(pool_s, pool_i, k, shard_axes)
         # every rank now holds the pod-global answer; hand back the rows of
@@ -486,9 +590,15 @@ def make_pod_serve_step(
         mi = jax.lax.dynamic_slice_in_dim(mi, drank * b_local, b_local, axis=0)
         return ms, mi
 
-    sm = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+    def body_live(idx_data: dict, live, qt, qw):
+        return body(idx_data, qt, qw, live=live)
 
-    def serve(index_stack: ImpactIndex, q_terms, q_weights):
+    sm = shard_map(
+        body_live if live_masked else body,
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False,
+    )
+
+    def serve(index_stack: ImpactIndex, q_terms, q_weights, live_stack=None):
         meta_cell.clear()
         meta_cell.update(
             block_size=index_stack.block_size,
@@ -498,6 +608,18 @@ def make_pod_serve_step(
             max_bm=index_stack.max_bm,
         )
         data = _index_data_dict(index_stack)
+        if live_masked:
+            if live_stack is None:
+                raise ValueError(
+                    "this pod serve step was built live_masked=True; pass "
+                    "the per-shard live_stack (see shard_live_stack)"
+                )
+            return sm(data, jnp.asarray(live_stack, jnp.int32), q_terms, q_weights)
+        if live_stack is not None:
+            raise ValueError(
+                "live_stack passed to a pod serve step built without "
+                "live_masked=True; rebuild the step with live_masked=True"
+            )
         return sm(data, q_terms, q_weights)
 
     serve.statics = statics
@@ -533,13 +655,16 @@ def make_bucketed_serve_step(
     step = make_pod_serve_step if "pod" in mesh.axis_names else make_sharded_serve_step
     serve, in_specs, out_specs = step(mesh, **kwargs)
 
-    def serve_bucketed(index_stack: ImpactIndex, q_terms, q_weights):
+    def serve_bucketed(index_stack: ImpactIndex, q_terms, q_weights, live_stack=None):
         qt, qw, _ = bucketize_batch(
             np.asarray(q_terms), np.asarray(q_weights), buckets, n_terms
         )
         # strong i32/f32, pre-dispatch: same compile-cache invariant as
         # AnytimeServer._bucketize (see its docstring)
-        return serve(index_stack, jnp.asarray(qt, jnp.int32), jnp.asarray(qw, jnp.float32))
+        return serve(
+            index_stack, jnp.asarray(qt, jnp.int32), jnp.asarray(qw, jnp.float32),
+            live_stack=live_stack,
+        )
 
     # serve_bucketed itself does host-side numpy bucketization and CANNOT be
     # traced; the lint must trace `.inner` at each `.buckets` width instead.

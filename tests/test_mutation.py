@@ -1,0 +1,551 @@
+"""Mutable index lifecycle suite: generation-handled indexes, delta
+segments, tombstones, and hot-swap compaction.
+
+The tentpole contract under test: for ANY mutation sequence, search results
+over the live :class:`~repro.core.index_handle.IndexHandle` are bit-identical
+(doc ids; scores to engine accumulation order) to a from-scratch rebuild of
+the post-mutation corpus searched with the handle's full live mask — across
+both engines and all kernel modes, including the sharded and pod serve
+paths. The oracle here is the honest one: a host-side mirror of the raw
+corpus (gid -> sparse vector) evolves alongside the handle, and the rebuild
+quantizes the mirror from scratch on the handle's pinned grid.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import daat, saat
+from repro.core.impact_index import build_impact_index
+from repro.core.index_handle import IndexHandle
+from repro.metrics.latency import SimulatedClock
+from repro.serving import (
+    AnytimeServer,
+    CompactionPolicy,
+    Compactor,
+    MutationEvent,
+    ServingConfig,
+    replay_with_churn,
+    shard_live_stack,
+)
+from repro.serving.pod import PodServer
+from repro.serving.queue import AdmissionQueue, SurvivorPredictor
+from repro.serving.scheduler import index_static_signature
+from repro.serving.sharded import (
+    make_sharded_serve_step,
+    shard_corpus,
+    stack_indexes,
+)
+
+pytestmark = pytest.mark.mutation
+
+
+# ---------------------------------------------------------------------------
+# mirror + oracle: the from-scratch rebuild the handle must reproduce
+# ---------------------------------------------------------------------------
+
+
+def _coo(seed=0, n_docs=80, n_terms=24, nnz=420):
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, n_docs, nnz).astype(np.int64)
+    t = rng.integers(0, n_terms, nnz).astype(np.int64)
+    w = rng.uniform(0.1, 5.0, nnz)
+    _, ix = np.unique(d * n_terms + t, return_index=True)
+    return d[ix], t[ix], w[ix]
+
+
+class _Mirror:
+    """Raw host-side corpus the handle's logical state must always equal."""
+
+    def __init__(self, d, t, w, n_docs):
+        self.docs: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        for gid in range(n_docs):
+            sel = d == gid
+            self.docs[gid] = (t[sel].copy(), w[sel].copy())
+        self.next_gid = n_docs
+        self.dead: set[int] = set()
+
+    def add(self, terms, weights) -> int:
+        gid = self.next_gid
+        self.next_gid += 1
+        self.docs[gid] = (np.asarray(terms), np.asarray(weights))
+        return gid
+
+    def update(self, gid, terms, weights):
+        self.docs[gid] = (np.asarray(terms), np.asarray(weights))
+
+    def delete(self, gid):
+        self.dead.add(gid)
+
+    def rebuild(self, handle: IndexHandle):
+        """Build the post-mutation corpus from scratch on the pinned grid."""
+        d, t, w = [], [], []
+        for gid, (terms, weights) in self.docs.items():
+            if gid in self.dead:
+                continue
+            d.append(np.full(terms.size, gid, np.int64))
+            t.append(terms.astype(np.int64))
+            w.append(np.asarray(weights, np.float64))
+        index = build_impact_index(
+            np.concatenate(d) if d else np.zeros(0, np.int64),
+            np.concatenate(t) if t else np.zeros(0, np.int64),
+            np.concatenate(w) if w else np.zeros(0, np.float64),
+            self.next_gid,
+            handle.n_terms,
+            quant_max_weight=handle.quant_max_weight,
+            block_size=handle.main.block_size,
+        )
+        live = handle.live_mask_full(int(index.doc_n_terms.shape[0]))
+        return index, jnp.asarray(live)
+
+
+def _mk(seed=0, n_docs=80, n_terms=24, block_size=16):
+    d, t, w = _coo(seed, n_docs, n_terms)
+    handle = IndexHandle.from_corpus(d, t, w, n_docs, n_terms, block_size=block_size)
+    return handle, _Mirror(d, t, w, n_docs)
+
+
+def _churn(handle, mirror, rng, n_ops=12, n_terms=24):
+    """A deterministic add/update/delete sequence applied to both sides."""
+    for _ in range(n_ops):
+        op = rng.choice(["add", "update", "delete"], p=[0.4, 0.3, 0.3])
+        alive = [g for g in mirror.docs if g not in mirror.dead]
+        if not alive and op != "add":
+            op = "add"
+        if op == "add":
+            n = int(rng.integers(2, 6))
+            terms = rng.choice(n_terms, n, replace=False).astype(np.int64)
+            weights = rng.uniform(0.2, 4.0, n)
+            assert handle.add(terms, weights) == mirror.add(terms, weights)
+        elif op == "update":
+            gid = int(alive[int(rng.integers(len(alive)))])
+            n = int(rng.integers(2, 6))
+            terms = rng.choice(n_terms, n, replace=False).astype(np.int64)
+            weights = rng.uniform(0.2, 4.0, n)
+            handle.update(gid, terms, weights)
+            mirror.update(gid, terms, weights)
+        else:
+            gid = int(alive[int(rng.integers(len(alive)))])
+            handle.delete(gid)
+            mirror.delete(gid)
+
+
+def _queries(rng, n_terms, B=4, lq=5):
+    qt = rng.integers(0, n_terms, (B, lq)).astype(np.int32)
+    qw = rng.uniform(0.1, 2.0, (B, lq)).astype(np.float32)
+    return jnp.asarray(qt), jnp.asarray(qw)
+
+
+def _assert_parity(res, oracle_scores, oracle_ids, dead):
+    s, i = np.asarray(res.scores), np.asarray(res.doc_ids)
+    os_, oi = np.asarray(oracle_scores), np.asarray(oracle_ids)
+    fin, fino = np.isfinite(s), np.isfinite(os_)
+    np.testing.assert_array_equal(fin.sum(1), fino.sum(1))
+    for b in range(s.shape[0]):
+        m = fino[b]
+        np.testing.assert_array_equal(i[b][m], oi[b][m])
+        np.testing.assert_allclose(s[b][m], os_[b][m], rtol=1e-6, atol=1e-6)
+        assert not np.isin(i[b][m], sorted(dead)).any()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: handle search == from-scratch rebuild, every engine mode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "scatter_impl,fused_topk",
+    [("jnp", False), ("sort", False), ("sort", True), ("jnp", True)],
+)
+def test_saat_parity_after_churn(scatter_impl, fused_topk):
+    handle, mirror = _mk(seed=1)
+    rng = np.random.default_rng(11)
+    _churn(handle, mirror, rng)
+    oracle, live = mirror.rebuild(handle)
+    qt, qw = _queries(rng, handle.n_terms)
+    k = 8
+    res = handle.saat_search(
+        qt, qw, k=k, scatter_impl=scatter_impl, fused_topk=fused_topk
+    )
+    ex = saat.saat_search(
+        oracle, qt, qw, k=k, rho=saat.exact_rho(oracle),
+        max_segs_per_term=saat.max_segments_per_term(oracle),
+        scatter_impl=scatter_impl, fused_topk=fused_topk, live_mask=live,
+    )
+    _assert_parity(res, ex.scores, ex.doc_ids, mirror.dead)
+
+
+@pytest.mark.parametrize(
+    "use_kernels,fused_chunk,trips",
+    [(False, False, 1), (True, False, 1), (True, True, 1), (True, True, 2)],
+)
+def test_daat_parity_after_churn(use_kernels, fused_chunk, trips):
+    handle, mirror = _mk(seed=2)
+    rng = np.random.default_rng(22)
+    _churn(handle, mirror, rng)
+    oracle, live = mirror.rebuild(handle)
+    qt, qw = _queries(rng, handle.n_terms)
+    k = 8
+    res = handle.daat_search(
+        qt, qw, k=k, est_blocks=4, block_budget=4, exact=True,
+        use_kernels=use_kernels, fused_chunk=fused_chunk,
+        trips_per_launch=trips,
+    )
+    ex = daat.daat_search_batched(
+        oracle, qt, qw, k=k, est_blocks=4, block_budget=4,
+        max_bm_per_term=daat.max_blocks_per_term(oracle), exact=True,
+        use_kernels=use_kernels, fused_chunk=fused_chunk,
+        trips_per_launch=trips, live_mask=live,
+    )
+    _assert_parity(res, ex.scores, ex.doc_ids, mirror.dead)
+
+
+def test_parity_survives_compaction():
+    """Compaction changes NO answer: same ids before and after the fold."""
+    handle, mirror = _mk(seed=3)
+    rng = np.random.default_rng(33)
+    _churn(handle, mirror, rng)
+    qt, qw = _queries(rng, handle.n_terms)
+    before = handle.saat_search(qt, qw, k=8)
+    gen = handle.generation
+    handle.compact()
+    assert handle.generation == gen + 1
+    assert handle.delta_docs == 0 and handle.delta is None
+    after = handle.saat_search(qt, qw, k=8)
+    bs, bi = np.asarray(before.scores), np.asarray(before.doc_ids)
+    as_, ai = np.asarray(after.scores), np.asarray(after.doc_ids)
+    fin = np.isfinite(bs)
+    np.testing.assert_array_equal(fin, np.isfinite(as_))
+    np.testing.assert_array_equal(bi[fin], ai[fin])
+    np.testing.assert_allclose(bs[fin], as_[fin], rtol=1e-6, atol=1e-6)
+    # and the compacted corpus still equals the from-scratch rebuild
+    oracle, live = mirror.rebuild(handle)
+    ex = saat.saat_search(
+        oracle, qt, qw, k=8, rho=saat.exact_rho(oracle),
+        max_segs_per_term=saat.max_segments_per_term(oracle),
+        live_mask=live,
+    )
+    _assert_parity(after, ex.scores, ex.doc_ids, mirror.dead)
+
+
+# ---------------------------------------------------------------------------
+# degenerate mutation states
+# ---------------------------------------------------------------------------
+
+
+def test_delete_all_then_compact_equals_empty_index():
+    handle, mirror = _mk(seed=4, n_docs=10, n_terms=12)
+    for gid in range(10):
+        handle.delete(gid)
+        mirror.delete(gid)
+    handle.compact()
+    assert handle.tombstone_count == 10 and handle.delta_docs == 0
+    assert not np.asarray(handle.main.doc_n_terms).any()  # every row folded out
+    rng = np.random.default_rng(44)
+    qt, qw = _queries(rng, 12)
+    res = handle.saat_search(qt, qw, k=4)
+    assert not np.isfinite(np.asarray(res.scores)).any()
+    # the compacted main IS the builder's empty-corpus branch: building the
+    # same (empty) corpus from scratch yields a static-identical segment
+    empty = build_impact_index(
+        np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, np.float64),
+        10, 12, quant_max_weight=handle.quant_max_weight,
+        block_size=handle.main.block_size,
+    )
+    assert index_static_signature(handle.main) == index_static_signature(empty)
+
+
+def test_delta_only_corpus_empty_main():
+    """A handle born over an empty corpus serves entirely from the delta."""
+    handle = IndexHandle.from_corpus(
+        np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, np.float64),
+        0, 12, block_size=16, quant_max_weight=5.0,
+    )
+    mirror = _Mirror(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                     np.zeros(0, np.float64), 0)
+    rng = np.random.default_rng(55)
+    for _ in range(5):
+        n = int(rng.integers(2, 5))
+        terms = rng.choice(12, n, replace=False).astype(np.int64)
+        weights = rng.uniform(0.2, 4.0, n)
+        assert handle.add(terms, weights) == mirror.add(terms, weights)
+    oracle, live = mirror.rebuild(handle)
+    qt, qw = _queries(rng, 12)
+    res = handle.saat_search(qt, qw, k=4)
+    ex = saat.saat_search(
+        oracle, qt, qw, k=4, rho=saat.exact_rho(oracle),
+        max_segs_per_term=saat.max_segments_per_term(oracle), live_mask=live,
+    )
+    _assert_parity(res, ex.scores, ex.doc_ids, mirror.dead)
+
+
+def test_update_of_doc_already_in_delta():
+    handle, mirror = _mk(seed=5, n_docs=20, n_terms=12)
+    rng = np.random.default_rng(66)
+    gid = handle.add(np.array([1, 3, 5]), np.array([1.0, 2.0, 3.0]))
+    mirror.add(np.array([1, 3, 5]), np.array([1.0, 2.0, 3.0]))
+    assert handle.delta_docs == 1
+    up_w = np.array([5.0, 5.0])  # near the pinned grid max: lands in top-k
+    handle.update(gid, np.array([2, 4]), up_w)
+    mirror.update(gid, np.array([2, 4]), up_w)
+    assert handle.delta_docs == 1  # replaced in place, not duplicated
+    oracle, live = mirror.rebuild(handle)
+    qt = jnp.asarray(np.array([[2, 4, 1]], np.int32))
+    qw = jnp.asarray(np.array([[1.0, 1.0, 1.0]], np.float32))
+    res = handle.saat_search(qt, qw, k=5)
+    ex = saat.saat_search(
+        oracle, qt, qw, k=5, rho=saat.exact_rho(oracle),
+        max_segs_per_term=saat.max_segments_per_term(oracle), live_mask=live,
+    )
+    _assert_parity(res, ex.scores, ex.doc_ids, mirror.dead)
+    assert int(gid) in np.asarray(res.doc_ids)
+
+
+def test_tombstone_of_doc_only_in_delta():
+    handle, mirror = _mk(seed=6, n_docs=20, n_terms=12)
+    gid = handle.add(np.array([1, 2]), np.array([5.0, 5.0]))
+    mirror.add(np.array([1, 2]), np.array([5.0, 5.0]))
+    handle.delete(gid)
+    mirror.delete(gid)
+    assert handle.delta_docs == 0  # removed from the pending set entirely
+    qt = jnp.asarray(np.array([[1, 2]], np.int32))
+    qw = jnp.asarray(np.array([[1.0, 1.0]], np.float32))
+    res = handle.saat_search(qt, qw, k=5)
+    assert int(gid) not in np.asarray(res.doc_ids)
+    oracle, live = mirror.rebuild(handle)
+    ex = saat.saat_search(
+        oracle, qt, qw, k=5, rho=saat.exact_rho(oracle),
+        max_segs_per_term=saat.max_segments_per_term(oracle), live_mask=live,
+    )
+    _assert_parity(res, ex.scores, ex.doc_ids, mirror.dead)
+
+
+# ---------------------------------------------------------------------------
+# satellite: calibration decays — never resets — across a hot swap
+# ---------------------------------------------------------------------------
+
+
+def test_service_ema_decays_not_resets_on_swap():
+    handle, _ = _mk(seed=7, n_docs=40, n_terms=12)
+    cfg = ServingConfig(k=4, rho_ladder=(10**9,), lq_buckets=(4,), ema_alpha=0.3)
+    srv = AnytimeServer(handle, cfg)
+    srv._observe_bucket_ms(4, 2, 10.0)
+    srv._observe_bucket_ms(4, 2, 20.0)
+    key = next(iter(srv._bucket_ms))
+    # steady state == the classic EMA, exactly (immutable-path regression)
+    assert srv._bucket_ms[key] == pytest.approx(0.7 * 10.0 + 0.3 * 20.0)
+    assert srv._bucket_conf[key] == pytest.approx(1.0)
+    before = srv._bucket_ms[key]
+    srv.swap_index(decay=0.5)
+    # the VALUE survives the swap; only its trust is halved
+    assert srv._bucket_ms[key] == before
+    assert srv._bucket_conf[key] == pytest.approx(0.5)
+    srv._observe_bucket_ms(4, 2, 30.0)
+    a_eff = 0.3 + 0.7 * 0.5  # decayed confidence raises the effective alpha
+    assert srv._bucket_ms[key] == pytest.approx((1 - a_eff) * before + a_eff * 30.0)
+    # trust recovers toward 1 with every new observation
+    assert srv._bucket_conf[key] == pytest.approx(1 - 0.5 * 0.7)
+    # the rho cost model decayed alongside
+    assert all(c == pytest.approx(1.0) or c == pytest.approx(0.5)
+               for c in srv._cost.confidence.values())
+
+
+def test_survivor_predictor_decays_not_resets():
+    p = SurvivorPredictor(alpha=0.2)
+    p.observe(4, 10.0)
+    p.observe(4, 20.0)
+    classic = 0.8 * 10.0 + 0.2 * 20.0
+    assert p.predict(4) == pytest.approx(classic)
+    p.decay(0.5)
+    assert p.predict(4) == pytest.approx(classic)  # value kept
+    p.observe(4, 40.0)
+    a_eff = 0.2 + 0.8 * (1 - 0.5)  # decayed trust raises the effective alpha
+    assert p.predict(4) == pytest.approx((1 - a_eff) * classic + a_eff * 40.0)
+
+
+# ---------------------------------------------------------------------------
+# hot swap under a running admission queue: zero lost / dup / reordered
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_replay_loses_nothing():
+    handle, mirror = _mk(seed=8, n_docs=60, n_terms=16)
+    rng = np.random.default_rng(88)
+    clock = SimulatedClock()
+    cfg = ServingConfig(
+        k=5, rho_ladder=(10**9,), lq_buckets=(5,), batch_size=4,
+    )
+    srv = AnytimeServer(handle, cfg, clock=clock)
+    queue = AdmissionQueue(srv, batch_shapes=(2, 4), clock=clock, max_wait_s=0.02)
+    compactor = Compactor(
+        queue, handle, CompactionPolicy(max_delta_docs=3, min_tombstones=2,
+                                        max_tombstone_frac=0.05),
+    )
+    n = 17  # deliberately not a multiple of any batch shape
+    arrivals = np.cumsum(rng.uniform(0.004, 0.012, n))
+    qts = [rng.integers(0, 16, 5).astype(np.int32) for _ in range(n)]
+    qws = [rng.uniform(0.1, 2.0, 5).astype(np.float32) for _ in range(n)]
+    muts = []
+    mrng = np.random.default_rng(99)
+    for i in range(8):
+        t_s = float(arrivals[0] + (arrivals[-1] - arrivals[0]) * (i + 0.5) / 8)
+        nterm = int(mrng.integers(2, 5))
+        terms = mrng.choice(16, nterm, replace=False).astype(np.int64)
+        weights = mrng.uniform(0.2, 4.0, nterm)
+        muts.append(MutationEvent(t_s=t_s, op="add", terms=terms, weights=weights))
+        mirror.add(terms, weights)
+    completions, mlog = replay_with_churn(
+        queue, handle, arrivals.tolist(), qts, qws, [50.0] * n, muts,
+        compactor=compactor,
+    )
+    # zero lost, zero duplicated, zero reordered
+    assert sorted(c.rid for c in completions) == list(range(n))
+    assert len(completions) == n
+    assert len(mlog) == len(muts)
+    assert compactor.n_compactions >= 1
+    assert handle.generation == compactor.n_compactions
+    # generation is monotone non-decreasing across the flush log: swaps only
+    # ever land BETWEEN flushes
+    gens = [f.generation for f in queue.flush_log]
+    assert gens == sorted(gens)
+    assert gens[-1] == handle.generation
+    # post-replay: the served corpus equals the from-scratch rebuild
+    oracle, live = mirror.rebuild(handle)
+    qt, qw = _queries(rng, 16)
+    res = srv.search_batch(qt, qw)
+    ex = saat.saat_search(
+        oracle, qt, qw, k=5, rho=saat.exact_rho(oracle),
+        max_segs_per_term=saat.max_segments_per_term(oracle), live_mask=live,
+    )
+    _assert_parity(res, ex.scores, ex.doc_ids, mirror.dead)
+
+
+def test_executable_key_tracks_lifecycle_not_generation():
+    handle, mirror = _mk(seed=9, n_docs=40, n_terms=12)
+    cfg = ServingConfig(k=4, rho_ladder=(10**9,), lq_buckets=(4,))
+    srv = AnytimeServer(handle, cfg)
+    k0 = srv.executable_key(4, 2, srv.rho_ladder[-1])
+    handle.add(np.array([1, 2]), np.array([1.0, 2.0]))
+    k_delta = srv.executable_key(4, 2, srv.rho_ladder[-1])
+    assert k_delta != k0  # delta present = genuinely different program
+    handle.compact()
+    srv.swap_index()
+    k1 = srv.executable_key(4, 2, srv.rho_ladder[-1])
+    assert srv.generation == 1
+    assert k1 != k_delta  # delta folded away again
+    # counters carry the lifecycle gauges
+    reg = srv.export_counters()
+    text = reg.render()
+    for fam in ("repro_index_generation", "repro_index_tombstones",
+                "repro_index_delta_docs"):
+        assert fam in text
+
+
+# ---------------------------------------------------------------------------
+# sharded + pod serve paths
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_live_masked_parity():
+    """Tombstone-masked sharded serve == masked unsharded oracle (1-dev mesh)."""
+    from jax.sharding import Mesh
+
+    rng = np.random.default_rng(10)
+    n_docs, n_terms = 80, 24
+    d, t, w = _coo(seed=10, n_docs=n_docs, n_terms=n_terms)
+    dead = sorted(rng.choice(n_docs, 17, replace=False).tolist())
+    live_full = np.ones(n_docs, np.int32)
+    live_full[dead] = 0
+    shards, dps = shard_corpus(d, t, w, n_docs, n_terms, 2)
+    stack = stack_indexes(shards)
+    ls = shard_live_stack(
+        live_full, n_shards=2, docs_per_shard=dps,
+        n_docs_pad=int(stack.doc_n_terms.shape[1]),
+    )
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    serve, _, _ = make_sharded_serve_step(
+        mesh, k=8, rho_per_shard=max(s.n_postings for s in shards),
+        max_segs_per_term=max(saat.max_segments_per_term(s) for s in shards),
+        docs_per_shard=dps, n_docs_total=n_docs, live_masked=True,
+    )
+    qt, qw = _queries(rng, n_terms)
+    with mesh:
+        ss, si = serve(stack, qt, qw, live_stack=ls)
+    oracle = build_impact_index(d, t, w, n_docs, n_terms)
+    lm = np.zeros(int(oracle.doc_n_terms.shape[0]), np.int32)
+    lm[:n_docs] = live_full
+    ex = saat.saat_search(
+        oracle, qt, qw, k=8, rho=saat.exact_rho(oracle),
+        max_segs_per_term=saat.max_segments_per_term(oracle),
+        live_mask=jnp.asarray(lm),
+    )
+    s1, i1 = np.asarray(ss), np.asarray(si)
+    os_, oi = np.asarray(ex.scores), np.asarray(ex.doc_ids)
+    fin, fino = np.isfinite(s1), np.isfinite(os_)
+    np.testing.assert_array_equal(fin.sum(1), fino.sum(1))
+    for b in range(s1.shape[0]):
+        m = fino[b]
+        np.testing.assert_array_equal(i1[b][m], oi[b][m])
+        np.testing.assert_allclose(s1[b][m], os_[b][m], rtol=1e-6, atol=1e-6)
+        assert not np.isin(i1[b][m], dead).any()
+
+
+def test_pod_server_lifecycle_parity():
+    """A 1x1 pod host with live mask + delta merge equals the handle."""
+    from jax.sharding import Mesh
+
+    handle, mirror = _mk(seed=12, n_docs=40, n_terms=16)
+    rng = np.random.default_rng(12)
+    d, t, w = _coo(seed=12, n_docs=40, n_terms=16)
+    for gid in (2, 9):
+        handle.delete(gid)
+        mirror.delete(gid)
+    for _ in range(2):
+        n = int(rng.integers(2, 5))
+        terms = rng.choice(16, n, replace=False).astype(np.int64)
+        weights = rng.uniform(0.2, 4.0, n)
+        assert handle.add(terms, weights) == mirror.add(terms, weights)
+    qt, qw = _queries(rng, 16)
+    k = 6
+    oracle_res = handle.saat_search(qt, qw, k=k)
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("pod", "model"))
+    shards, dps = shard_corpus(d, t, w, 40, 16, 1)
+    stack = stack_indexes(shards)
+    cfg = ServingConfig(k=k, rho_ladder=(10**9,), lq_buckets=(5,), batch_size=4)
+    srv = PodServer(mesh, stack, cfg, docs_per_shard=dps, n_docs_total=40)
+    ls = shard_live_stack(
+        np.asarray(handle.live_mask)[:40], n_shards=1, docs_per_shard=dps,
+        n_docs_pad=int(stack.doc_n_terms.shape[1]),
+    )
+    srv.set_lifecycle(
+        live_stack=ls, delta=handle.delta, delta_gids=handle.delta_gids,
+        generation=handle.generation,
+    )
+    res = srv.search_batch(qt, qw)
+    _assert_parity(res, oracle_res.scores, oracle_res.doc_ids, mirror.dead)
+
+    # compact + swap_stack: the pod host adopts the folded generation.
+    # export_coo + the pinned grid keep the re-sharded impacts bit-identical
+    # to the handle's main segment
+    handle.compact()
+    d2, t2, w2 = handle.export_coo()
+    shards2, dps2 = shard_corpus(
+        d2, t2, w2, handle.n_docs, 16, 1,
+        quant_max_weight=handle.quant_max_weight,
+    )
+    stack2 = stack_indexes(shards2)
+    ls2 = shard_live_stack(
+        np.asarray(handle.live_mask)[: handle.n_docs], n_shards=1,
+        docs_per_shard=dps2, n_docs_pad=int(stack2.doc_n_terms.shape[1]),
+    )
+    srv.swap_stack(
+        stack2, live_stack=ls2, generation=handle.generation,
+        docs_per_shard=dps2, n_docs_total=handle.n_docs,
+    )
+    assert srv.generation == handle.generation
+    res2 = srv.search_batch(qt, qw)
+    oracle2 = handle.saat_search(qt, qw, k=k)
+    _assert_parity(res2, oracle2.scores, oracle2.doc_ids, mirror.dead)

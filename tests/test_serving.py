@@ -271,6 +271,7 @@ def test_observe_bucket_ms_ema_is_per_shape_and_per_rho():
             self.cfg = ServingConfig()
             self.rho_ladder = (100, 1000)
             self._bucket_ms = {}
+            self._bucket_conf = {}
 
     srv = _Srv()
     srv._observe_bucket_ms(4, 8, 10.0, rho=1000)
